@@ -1,0 +1,61 @@
+"""Paper §4.2.2: resource reallocation within 30 s of detecting significant
+workload changes; recovery from a 2× step change.
+
+Two measurements on a 10 s-tick fleet:
+  * decision latency — ticks from the workload step to the first scale-up
+    decision (the paper's "reallocation within 30 s" claim is about the
+    control loop, not hardware provisioning);
+  * recovery time — ticks until p95 is back under the SLO (includes the
+    provisioning delay the cloud charges regardless of controller).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import default_workload, make_profile, run_fleet
+
+TICK_S = 10.0
+STEP_AT = 120                 # tick index of the 2× load step
+
+
+def run():
+    profile = make_profile()
+    w = default_workload()
+    cap1 = profile.requests_per_s(w)
+    n_ticks = 400
+    base = cap1 * 10 * 0.6
+    trace = np.full(n_ticks, base)
+    trace[STEP_AT:] = base * 2.0
+
+    t0 = time.perf_counter()
+    rec = []
+    res = run_fleet(controller="dnn", trace=trace, n_ticks=n_ticks,
+                    tick_s=TICK_S, seed=0, record_streams=rec)
+    wall = time.perf_counter() - t0
+
+    replicas = res.replicas
+    pre = replicas[STEP_AT - 1]
+    scale_tick = next((t for t in range(STEP_AT, n_ticks)
+                       if replicas[t] > pre), None)
+    decision_s = (scale_tick - STEP_AT + 1) * TICK_S if scale_tick else None
+
+    slo = 200.0
+    over = [t for t in range(STEP_AT, n_ticks) if res.lats[t] > slo]
+    recovery_s = ((max(over) - STEP_AT + 1) * TICK_S) if over else 0.0
+
+    ok = decision_s is not None and decision_s <= 30.0
+    return {
+        "name": "adaptation",
+        "us_per_call": wall * 1e6 / n_ticks,
+        "derived": (f"scale-up decision {decision_s:.0f}s after 2x step "
+                    f"({'<=' if ok else '>'}30s, paper <30s); "
+                    f"p95 recovery {recovery_s:.0f}s (incl provisioning)"),
+        "detail": {"decision_s": decision_s, "recovery_s": recovery_s,
+                   "replicas_before": int(pre),
+                   "replicas_after": int(replicas[-1]),
+                   "within_30s": bool(ok)},
+    }
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -1,0 +1,54 @@
+"""Ablation of the predictive allocator's decision modes (paper §3.3.1):
+
+  planner — forecaster + constrained optimizer only (no learning)
+  rl      — the double-DQN acts, shielded by the constraint envelope
+  hybrid  — DQN chooses among planner-feasible actions (the paper's
+            "learning component refining the model-based planner")
+
+Same traces/seeds for all three; the paper's claim is that the learned
+component is at least competitive inside the safety envelope while
+optimizing the util/cost trade-off online.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import N_TICKS, run_fleet
+
+
+def run():
+    t0 = time.perf_counter()
+    out = {}
+    # learned modes get half a simulated day of burn-in — the paper's §5.3
+    # "initial training period" — and are scored on the following day
+    for mode in ("planner", "hybrid", "rl"):
+        burn = 0 if mode == "planner" else N_TICKS // 4
+        rs = [run_fleet(controller="dnn", mode=mode,
+                        n_ticks=N_TICKS // 2 + burn, burnin=burn,
+                        seed=s) for s in (0,)]
+        out[mode] = {
+            "util": float(np.mean([r.utilization for r in rs])),
+            "cost_per_1k": float(np.mean([r.cost_per_1k for r in rs])),
+            "error_rate": float(np.mean([r.error_rate for r in rs])),
+            "p95_ms": float(np.mean([r.latency_p95_ms for r in rs])),
+        }
+    wall = time.perf_counter() - t0
+    d = " ".join(f"{m}:util={v['util']:.2f}/$​{v['cost_per_1k']:.3f}"
+                 f"/err={v['error_rate']:.3f}" for m, v in out.items())
+    # the shielded learned modes must stay within guardrails of the planner
+    ok = all(v["error_rate"] <= out["planner"]["error_rate"] + 0.03
+             for v in out.values())
+    return {
+        "name": "allocator_ablation",
+        "us_per_call": wall * 1e6 / (3 * 2 * (N_TICKS // 2)),
+        "derived": d + (" (envelope held)" if ok else " (ENVELOPE BROKEN)"),
+        "detail": {"modes": out, "envelope_held": bool(ok)},
+    }
+
+
+if __name__ == "__main__":
+    r = run()
+    print(r["derived"])
+    for m, v in r["detail"]["modes"].items():
+        print(f"  {m:8s} util {v['util']:.3f}  $per1k {v['cost_per_1k']:.4f}  "
+              f"err {v['error_rate']:.4f}  p95 {v['p95_ms']:.0f}ms")

@@ -1,0 +1,272 @@
+"""Shared fleet-simulation harness for the paper-table benchmarks.
+
+One tick loop wires together the full system: workload trace → roofline-
+grounded queueing model (per-replica numbers from the compiled dry-run) →
+metrics collector → controller (traditional reactive baseline, or the
+DNN-powered predictive allocator) → multi-cloud cluster (cost + provisioning
+delays).  Every §4.1 headline number falls out of this loop under a different
+controller/provider configuration.
+
+Calibration notes (recorded in EXPERIMENTS.md §Benchmarks):
+  * arch defaults to h2o-danube-1.8b — the paper evaluates "1 billion
+    parameter models";
+  * WorkloadSpec(prompt 256, gen 16) puts the per-request service time at
+    ~150-200 ms, the paper's latency regime;
+  * the traditional baseline runs on the paper's implied defaults: premium
+    provider (aws), reactive threshold autoscaling; the DNN path additionally
+    applies the framework's cost-aware provider selection (gcp) — the paper's
+    multi-cloud optimization (§5.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
+from repro.core.dnn.features import deploy_vector
+from repro.core.monitoring.adapt import AdaptiveOptimizer
+from repro.core.monitoring.anomaly import AnomalyDetector
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.scaling.scaler import ScalingConstraints
+from repro.sim import (
+    Cluster, RooflineDB, ServiceProfile, ServingModel, ThresholdAutoscaler,
+    TraceConfig, WorkloadSpec, generate_trace,
+)
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+ARCH_1B = "h2o-danube-1.8b"          # the paper's "1B parameter" class
+SLO_MS = 200.0                        # paper §4.2.1: "under 200ms"
+SEEDS = (0, 1, 2)
+N_TICKS = 576                         # 2 days of 5-min ticks
+
+_HEADLINE_CACHE: dict = {}
+
+
+def headline_comparison(controller: str, seed: int) -> "FleetResult":
+    """Memoized §4.1.1 run — utilization / cost / latency benchmarks all read
+    the same three-seed traditional-vs-DNN comparison."""
+    key = (controller, seed)
+    if key not in _HEADLINE_CACHE:
+        _HEADLINE_CACHE[key] = run_fleet(controller=controller,
+                                         n_ticks=N_TICKS, seed=seed)
+    return _HEADLINE_CACHE[key]
+
+
+def traffic_weighted_p95(r: "FleetResult") -> float:
+    """p95 weighted by per-tick load — how users experience the fleet."""
+    return float(np.average(r.lats, weights=np.maximum(r.utils, 1e-9)))
+
+
+@dataclasses.dataclass
+class FleetResult:
+    utilization: float
+    latency_p95_ms: float
+    latency_p50_ms: float
+    cost_per_1k: float                # USD per 1000 inferences
+    error_rate: float
+    spend_usd: float
+    served: int
+    replica_ticks: int
+    utils: np.ndarray
+    lats: np.ndarray
+    replicas: np.ndarray
+    decisions_per_s: float = 0.0
+
+
+def make_profile(arch: str = ARCH_1B) -> ServiceProfile:
+    return ServiceProfile.from_db(RooflineDB(DRYRUN_DIR), arch)
+
+
+def default_workload() -> WorkloadSpec:
+    # prompt 256 + 12 generated tokens ⇒ ~127 ms service time on the 1B-class
+    # profile — a 200 ms SLO is then *feasible but tight* (p95 floor ≈ 171 ms
+    # after queueing dispersion), which is the paper's operating regime.
+    return WorkloadSpec(prompt_len=256, gen_len=12)
+
+
+def make_controller(kind: str, profile, workload, *, slo_ms=SLO_MS,
+                    max_replicas=64, mode="planner", seed=0,
+                    static_sized_for=None, max_step=8, cooldown_ticks=3):
+    """kind: 'traditional' (static sizing — the paper's comparison point) |
+    'threshold' (reactive autoscaler — the stronger ablation baseline) |
+    'dnn' (the predictive control plane)."""
+    if kind == "traditional":
+        # sized once for (observed mean load × margin), then frozen — the
+        # paper's "static rules … manual intervention" traditional practice
+        state = {"replicas": None}
+
+        def decide(metrics, current, perf_model):
+            if state["replicas"] is None:
+                lam = static_sized_for or metrics.get("rps", 1.0)
+                r = 1
+                while r < max_replicas:
+                    lat, util = perf_model(r, lam)
+                    if lat <= slo_ms and util <= 0.80:
+                        break
+                    r += 1
+                state["replicas"] = r
+            return state["replicas"]
+
+        return decide
+
+    if kind == "threshold":
+        thr = ThresholdAutoscaler(hi=0.75, lo=0.25, patience=3, max_step=2,
+                                  max_replicas=max_replicas)
+
+        def decide(metrics, current, perf_model):
+            return thr.decide(metrics, current)
+
+        return decide
+
+    holder = {}
+
+    def perf_model(replicas, rps):
+        return holder["m"](replicas, rps)
+
+    base_constraints = ScalingConstraints(max_replicas=max_replicas,
+                                          slo_ms=slo_ms, max_step=max_step,
+                                          cooldown_ticks=cooldown_ticks)
+    alloc = PredictiveAllocator(
+        perf_model, base_constraints,
+        deploy_vector(model_params_b=1.8, family="dense", mesh_model=16,
+                      mesh_data=16, region_idx=0, slo_ms=slo_ms,
+                      cost_weight=0.5),
+        cfg=AllocatorConfig(mode=mode), seed=seed)
+    # monitoring → adaptation feedback loop (paper §3.5.2): anomalies narrow
+    # the target-utilization band (spike headroom); chronic SLO violations
+    # lengthen the forecast horizon; flapping lengthens the cooldown.
+    adapt = AdaptiveOptimizer(eval_window=32)
+    adapt.state.cooldown = cooldown_ticks
+    anom = AnomalyDetector(z_threshold=4.0, min_history=16)
+    state = {"last_target": None, "anoms": 0}
+
+    def decide(metrics, current, pm):
+        holder["m"] = pm
+        alloc.replicas = current
+        alloc.observe(metrics)
+        anomalies = anom.update(int(metrics.get("tick", 0)),
+                                {"rps": metrics.get("rps", 0.0)})
+        state["anoms"] += len(anomalies)
+        d = alloc.decide(metrics)
+        alloc.apply(d)
+        if mode != "planner":
+            alloc.learn(metrics, metrics.get("cost_per_tick", 0.0))
+        flapped = (state["last_target"] is not None
+                   and (d.delta > 0) and state["last_target"] < current)
+        # cost normalized to the max-fleet cost so the adaptation objective
+        # weighs utilization and cost on comparable scales
+        max_cost = max_replicas * alloc.constraints.cost_per_replica
+        adapt.push(metrics,
+                   flapped=flapped,
+                   violations=int(metrics.get("latency_p95", 0.0) > slo_ms),
+                   cost=metrics.get("cost_per_tick", 0.0) / max_cost)
+        st = adapt.maybe_adapt()
+        if st is not None:
+            # a burst of anomalies ⇒ keep extra headroom below the tuned band
+            if state["anoms"] > 3:
+                st.util_hi = max(0.65, st.util_hi - 0.05)
+            state["anoms"] = 0
+            alloc.constraints = adapt.constraints(base_constraints)
+            alloc.scaler.horizon = st.horizon
+        state["last_target"] = d.target_replicas
+        return d.target_replicas
+
+    decide.allocator = alloc
+    decide.adapt = adapt
+    return decide
+
+
+def run_fleet(*, controller="traditional", arch=ARCH_1B, n_ticks=576,
+              tick_s=300.0, seed=0, region="na", provider=None,
+              base_rps_per_replica=0.8, n_replicas0=10, max_replicas=64,
+              mode="planner", slo_ms=SLO_MS, trace=None,
+              workload=None, fail_prob=0.0, collector=None,
+              record_streams=None, max_step=8, burnin: int = 0) -> FleetResult:
+    """Simulate `n_ticks` of fleet operation under one controller.
+
+    base_rps_per_replica: mean trace load expressed as a fraction of one
+    replica's request rate, scaled by n_replicas0 (so 0.8 ⇒ the initial fleet
+    would run at 80% utilization at mean load — the regime where reactive
+    scaling starts missing peaks, per the paper's motivation).
+    """
+    profile = make_profile(arch)
+    w = workload or default_workload()
+    cap1 = profile.requests_per_s(w)            # one replica's service rate
+    if provider is None:
+        provider = "aws" if controller == "traditional" else "gcp"
+    if trace is None:
+        trace = generate_trace(
+            TraceConfig(base_rps=cap1 * n_replicas0 * base_rps_per_replica,
+                        region=region, seed=seed), n_ticks)
+    model = ServingModel(profile, w, slo_ms=slo_ms, tick_s=tick_s, seed=seed)
+    cluster = Cluster(provider=provider, region=region,
+                      chips_per_replica=profile.chips_per_replica,
+                      tick_s=tick_s, seed=seed)
+    cluster.scale_to(n_replicas0)
+    cluster.tick = 10 ** 9                      # initial fleet starts warm
+    # scale-down cooldown must exceed the provisioning delay, or the fleet
+    # flaps: a down-then-up cycle swaps a warm replica for a cold one
+    cooldown = max(3, int(np.ceil(240.0 / tick_s)))
+    decide = make_controller(controller, profile, w, slo_ms=slo_ms,
+                             max_replicas=max_replicas, mode=mode, seed=seed,
+                             static_sized_for=float(np.mean(trace)) * 1.25,
+                             max_step=max_step, cooldown_ticks=cooldown)
+    coll = collector or MetricsCollector()
+
+    utils, p95s, p50s, reps = [], [], [], []
+    served = errs = replica_ticks = 0
+    spend0 = served0 = 0.0           # snapshot at burn-in end
+    import time as _time
+    t_decide = 0.0
+    for t in range(n_ticks):
+        if t == burnin:
+            utils, p95s, p50s, reps = [], [], [], []
+            spend0, served0 = cluster.spend_usd, float(served)
+            served = errs = replica_ticks = 0
+        ready = max(cluster.ready_replicas(), 1)
+        r = model.tick(ready, trace[t])
+        coll.submit(ReplicaReport(
+            replica_id=0, tick=t, latency_ms_samples=list(r.latency_ms_samples),
+            n_requests=r.served, n_errors=r.errors, flop_util=r.utilization,
+            hbm_util=r.utilization * 0.9, ici_util=r.utilization * 0.5,
+            mem_frac=0.5, queue_depth=int(r.queue_depth)))
+        rec = coll.aggregate(t, n_replicas=cluster.total_replicas(),
+                             max_replicas=max_replicas)
+        metrics = {
+            **rec,
+            "rps": float(trace[t]),
+            "rps_window": list(trace[max(0, t - 8):t + 1]),
+            "cost_per_tick": cluster.cost_per_tick(),
+        }
+        t0 = _time.perf_counter()
+        target = decide(metrics, cluster.total_replicas(),
+                        lambda rr, rps: model.latency_util(rr, rps))
+        t_decide += _time.perf_counter() - t0
+        cluster.scale_to(target)
+        cluster.advance(fail_prob=fail_prob)
+        utils.append(r.utilization)
+        p95s.append(float(np.percentile(r.latency_ms_samples, 95)))
+        p50s.append(float(np.percentile(r.latency_ms_samples, 50)))
+        reps.append(cluster.total_replicas())
+        served += r.served
+        errs += r.errors
+        replica_ticks += cluster.total_replicas()
+        if record_streams is not None:
+            record_streams.append((metrics, target))
+    return FleetResult(
+        utilization=float(np.mean(utils)),
+        latency_p95_ms=float(np.mean(p95s)),
+        latency_p50_ms=float(np.mean(p50s)),
+        cost_per_1k=1000.0 * (cluster.spend_usd - spend0) / max(served, 1),
+        error_rate=errs / max(served + errs, 1),
+        spend_usd=cluster.spend_usd,
+        served=served,
+        replica_ticks=replica_ticks,
+        utils=np.asarray(utils),
+        lats=np.asarray(p95s),
+        replicas=np.asarray(reps),
+        decisions_per_s=n_ticks / max(t_decide, 1e-9),
+    )

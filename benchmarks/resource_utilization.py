@@ -1,0 +1,38 @@
+"""Paper §4.1.1: resource utilization 58% → 82% (+41.4%).
+
+Traditional = static sizing at mean-load × 1.25 margin (the paper's "static
+rules"); DNN = the predictive control plane (forecaster + constrained
+optimizer + monitoring-driven adaptation).  Three seeds, two simulated days,
+1B-class profile grounded in the compiled dry-run.  Also reports the
+reactive-threshold ablation (a stronger baseline than the paper's).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import N_TICKS, SEEDS, headline_comparison, run_fleet
+
+PAPER = {"traditional": 0.58, "dnn": 0.82}
+
+
+def run():
+    t0 = time.perf_counter()
+    trad = [headline_comparison("traditional", s).utilization for s in SEEDS]
+    dnn = [headline_comparison("dnn", s).utilization for s in SEEDS]
+    thr = [run_fleet(controller="threshold", n_ticks=N_TICKS, seed=s
+                     ).utilization for s in SEEDS[:1]]
+    wall = time.perf_counter() - t0
+    u_t, u_d = float(np.mean(trad)), float(np.mean(dnn))
+    return {
+        "name": "resource_utilization",
+        "us_per_call": wall * 1e6 / (len(SEEDS) * 2 * N_TICKS),  # per sim tick
+        "derived": (f"util {u_t:.3f}->{u_d:.3f} (+{(u_d/u_t-1)*100:.1f}%) "
+                    f"paper 0.58->0.82; threshold-ablation {thr[0]:.3f}"),
+        "detail": {"traditional": u_t, "dnn": u_d, "threshold": thr[0],
+                   "improvement_rel": u_d / u_t - 1,
+                   "paper": PAPER, "seeds": list(SEEDS)},
+    }
+
+
+if __name__ == "__main__":
+    print(run()["derived"])

@@ -1,0 +1,99 @@
+"""Roofline report (deliverable g): the full 33-cell baseline table.
+
+Reads results/dryrun/<arch>__<shape>__single.json (written by
+repro.launch.dryrun --probe) through the RooflineDB and derives, per cell:
+
+  t_compute    = FLOPs_dev / 197e12        (TPU v5e bf16 peak)
+  t_memory     = bytes_dev / 819e9         (HBM bandwidth)
+  t_collective = coll_bytes_dev / 50e9     (ICI link bandwidth)
+
+dominant term = bottleneck; roofline fraction = t_dominant-at-ideal /
+step_time where "ideal" is the compute term (how close the cell is to being
+compute-bound, the MFU-style score); MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (serve) compares useful model math against compiled HLO FLOPs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import SHAPES, applicable_shapes
+from repro.sim.roofline_db import RooflineDB, PEAK_FLOPS
+
+
+def model_flops_per_device(cfg, shape, chips: int) -> float:
+    """Useful model math per device for one step (6·N·D train, 2·N·D serve)."""
+    n = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / chips
+    tokens = (shape.global_batch * shape.seq_len if shape.kind == "prefill"
+              else shape.global_batch)
+    return 2.0 * n * tokens / chips
+
+
+def cell_report(db: RooflineDB, arch: str, shape_name: str, mesh="single"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t = db.terms(arch, shape_name, mesh)
+    mf = model_flops_per_device(cfg, shape, t.chips)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "t_compute": t.t_compute,
+        "t_memory": t.t_memory,
+        "t_collective": t.t_collective,
+        "step_time": t.step_time,
+        "bottleneck": t.bottleneck,
+        "model_flops": mf,
+        "hlo_flops": t.flops,
+        "useful_frac": mf / t.flops if t.flops else 0.0,
+        # MFU-style roofline fraction: useful model FLOPs over what the chips
+        # could do in the actual (bottlenecked) step time.
+        "roofline_frac": mf / (t.step_time * PEAK_FLOPS) if t.step_time else 0.0,
+        "measured": t.measured,
+        "mem_gb": t.mem_per_dev / 2**30,
+    }
+
+
+def full_table(db: RooflineDB | None = None, mesh: str = "single"):
+    db = db or RooflineDB()
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            rows.append(cell_report(db, arch, shape_name, mesh))
+    return rows
+
+
+def fmt_row(r) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:9.3f} | "
+            f"{r['t_memory']*1e3:9.3f} | {r['t_collective']*1e3:9.3f} | "
+            f"{r['bottleneck']:10s} | {r['useful_frac']*100:5.1f}% | "
+            f"{r['roofline_frac']*100:5.1f}% |")
+
+
+HEADER = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+          "bottleneck | useful | roofline |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--sort", default="roofline_frac")
+    args = ap.parse_args()
+    db = RooflineDB(args.dir)
+    rows = full_table(db, args.mesh)
+    print(HEADER)
+    for r in sorted(rows, key=lambda r: r[args.sort]):
+        print(fmt_row(r))
+    n_meas = sum(r["measured"] for r in rows)
+    print(f"\n{len(rows)} cells, {n_meas} measured from compiled dry-run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""End-to-end serving driver: a REAL model served with batched requests,
+monitored and scaled by the paper's control plane.
+
+The data plane is the actual ServingEngine (reduced qwen2.5-3b, continuous
+slot batching, prefill + decode over a shared KV cache).  Every second of
+wall time is one control tick: the engine's measured latencies/throughput
+feed the MetricsCollector; the AnomalyDetector watches for load spikes; the
+PredictiveAllocator decides how many replicas the fleet *would* run (the
+single local engine stands in for one replica of the fleet — spare capacity
+is simulated, since this container has one CPU).
+
+Run:  PYTHONPATH=src python examples/serve_autoscale.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
+from repro.core.dnn.features import deploy_vector
+from repro.core.monitoring.anomaly import AnomalyDetector
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.scaling.scaler import ScalingConstraints
+from repro.launch.serve import ServingEngine
+
+SLOTS = 4
+GEN_LEN = 8
+PROMPT_LEN = 16
+N_TICKS = 12
+
+cfg = get_smoke_config("qwen2.5-3b")
+engine = ServingEngine(cfg, slots=SLOTS, max_seq=48, seed=0)
+rng = np.random.default_rng(0)
+
+collector = MetricsCollector()
+anomaly = AnomalyDetector(z_threshold=3.0, min_history=4)
+
+
+def engine_capacity_model(replicas: int, rps: float):
+    """Perf model grounded in the engine's own measured step time."""
+    step_s = max(measured["step_s"], 1e-3)
+    service = GEN_LEN * step_s
+    cap = replicas * SLOTS / service
+    util = min(rps / max(cap, 1e-9), 1.0)
+    lat = service * (1.0 + 3.0 * max(util - 0.8, 0.0) / 0.2)
+    return lat * 1e3, util
+
+
+measured = {"step_s": 0.05}
+alloc = PredictiveAllocator(
+    engine_capacity_model, ScalingConstraints(slo_ms=2000.0, max_replicas=16),
+    deploy_vector(model_params_b=0.003, family="dense", mesh_model=1,
+                  mesh_data=1, region_idx=0, slo_ms=2000, cost_weight=0.5),
+    cfg=AllocatorConfig(mode="planner"))
+
+print(f"engine: {cfg.name} {cfg.n_params()/1e6:.1f}M params, {SLOTS} slots")
+owners = {}
+next_rid = 0
+lat_done: dict[int, float] = {}
+t_admit: dict[int, float] = {}
+replicas = 1
+
+for tick in range(N_TICKS):
+    # load profile: calm → spike → calm
+    rps_target = 3.0 if tick < 4 else (12.0 if tick < 8 else 3.0)
+    n_arrivals = rng.poisson(rps_target)
+    t0 = time.time()
+    lats, served = [], 0
+    # admit as many arrivals as there are free slots (rest queue → dropped)
+    for _ in range(n_arrivals):
+        free = [s for s in range(SLOTS) if not engine.active[s]]
+        if not free:
+            break
+        slot = free[0]
+        prompt = rng.integers(3, cfg.vocab, size=PROMPT_LEN).astype(np.int32)
+        engine.admit(slot, prompt, GEN_LEN)
+        owners[slot] = next_rid
+        t_admit[next_rid] = time.time()
+        next_rid += 1
+    # decode for ~1 simulated tick
+    steps = 0
+    while engine.active.any() and steps < GEN_LEN:
+        done = engine.tick()
+        steps += 1
+        for slot in done:
+            rid = owners[slot]
+            lats.append((time.time() - t_admit[rid]) * 1e3)
+            served += 1
+    wall = time.time() - t0
+    if steps:
+        measured["step_s"] = wall / steps
+    collector.submit(ReplicaReport(
+        replica_id=0, tick=tick, latency_ms_samples=lats, n_requests=served,
+        n_errors=max(n_arrivals - served - int(np.sum(engine.active)), 0),
+        flop_util=float(np.mean(engine.active)), hbm_util=0.5, ici_util=0.2,
+        mem_frac=0.4, queue_depth=0))
+    rec = collector.aggregate(tick, n_replicas=replicas, max_replicas=16)
+    rec["rps"] = float(n_arrivals)
+    rec["rps_window"] = [rec["rps"]]
+    anomalies = anomaly.update(tick, {"rps": rec["rps"]})
+    alloc.observe(rec)
+    alloc.replicas = replicas
+    decision = alloc.decide(rec)
+    alloc.apply(decision)
+    replicas = decision.target_replicas
+    flag = " [ANOMALY]" if anomalies else ""
+    print(f"tick {tick:2d}: rps={rps_target:4.0f} served={served} "
+          f"p50={rec['latency_p50']:.0f}ms slots_busy="
+          f"{int(np.sum(engine.active))} -> fleet target {replicas} "
+          f"replicas ({decision.reason}){flag}")
+
+print("\nserve_autoscale complete: the engine served real batched requests "
+      "while the control plane tracked load and scaled the (simulated) fleet.")

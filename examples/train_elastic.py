@@ -1,0 +1,69 @@
+"""Fault-tolerant training with elastic re-mesh: the control plane's scaling
+action applied to a *training* job.
+
+  1. train a reduced model with periodic async checkpoints;
+  2. simulate a preemption (the job dies mid-run);
+  3. the allocator's ReMesh action restores the checkpoint onto a different
+     mesh topology (here 1×1 — on a pod this is e.g. (16,16) → (12,16) after
+     losing 4 hosts) and training continues, with the counted data pipeline
+     replaying byte-identical batches.
+
+Run:  PYTHONPATH=src python examples/train_elastic.py
+"""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.elastic import ReMesh, elastic_restore
+from repro.models.steps import init_train_state, make_train_step
+
+cfg = get_smoke_config("olmoe-1b-7b")       # a MoE — the richest state
+root = Path(tempfile.mkdtemp()) / "ckpt"
+data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4,
+                                seed=7))
+
+print(f"[phase 1] training {cfg.name} ({cfg.n_params()/1e6:.1f}M params)")
+train_step, (opt_init, _) = make_train_step(cfg, lr=1e-3)
+state = init_train_state(jax.random.PRNGKey(0), cfg, opt_init)
+step_fn = jax.jit(train_step)
+mgr = CheckpointManager(root)
+PREEMPT_AT = 8
+for step in range(PREEMPT_AT):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+    state, metrics = step_fn(state, batch)
+    if (step + 1) % 4 == 0:
+        mgr.save(step + 1, state)           # async — training continues
+        print(f"  step {step+1}: loss={float(metrics['loss']):.4f} "
+              f"[checkpoint queued]")
+    else:
+        print(f"  step {step+1}: loss={float(metrics['loss']):.4f}")
+mgr.wait()
+print(f"[phase 2] PREEMPTION at step {PREEMPT_AT} — process gone; latest "
+      f"checkpoint: step {mgr.latest_step()}")
+
+print("[phase 3] allocator emits ReMesh(data=1, model=1) — elastic restore")
+state2, jitted, mesh = elastic_restore(root, cfg,
+                                       ReMesh(data_axis=1, model_axis=1),
+                                       lr=1e-3)
+resume_step = int(jax.device_get(state2.step))
+print(f"  restored onto mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+      f"at step {resume_step}")
+
+for step in range(resume_step, resume_step + 4):
+    batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+    state2, metrics = jitted(state2, batch)
+    print(f"  step {step+1}: loss={float(metrics['loss']):.4f} (resumed)")
+
+# determinism proof: the resumed batch at step k equals the original stream
+b_orig = data.batch(resume_step)["tokens"]
+b_new = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4,
+                                 seed=7)).batch(resume_step)["tokens"]
+assert np.array_equal(b_orig, b_new)
+print("\ntrain_elastic complete: checkpoint → preemption → re-mesh → "
+      "deterministic resume all verified.")

@@ -1,0 +1,7 @@
+from repro.checkpoint.manager import (
+    CheckpointManager,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,154 @@
+"""Sharded, async, preemption-safe checkpointing with elastic restore.
+
+Layout (one directory per step):
+  <root>/step_<N>.tmp/        — written first
+    manifest.json             — tree structure, shapes, dtypes, mesh topology
+    <leaf-key>.npy            — one file per pytree leaf (host-gathered)
+  <root>/step_<N>/            — atomic rename commit (crash ⇒ no partial ckpt)
+
+Design notes for 1000+-node deployment (DESIGN.md §8):
+  * per-leaf files mirror a per-host-group shard layout — on a real pod each
+    host writes only its addressable shards; here (single process) the leaf
+    is the degenerate single shard.  The manifest is the coordination point.
+  * save() is ASYNC: the device→host transfer happens on the caller thread
+    (cheap), serialization happens on a worker thread, so the train loop
+    returns to the next step immediately; wait() joins before exit.
+  * restore(..., shardings=...) re-shards on load: reading a checkpoint onto
+    a *different* mesh (elastic restart after node loss) is the same code
+    path as same-mesh restore — jax.device_put with the target sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, root: str | os.PathLike, *, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: list[BaseException] = []
+
+    # ----------------------------------------------------------- save
+
+    def save(self, step: int, state, *, meta: dict | None = None,
+             blocking: bool = False):
+        """Host-gather + async write.  Returns immediately unless blocking."""
+        self.wait()
+        flat, treedef = _flatten(state)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        manifest = {
+            "step": int(step),
+            "treedef": jax.tree_util.tree_structure(state).__repr__(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "meta": meta or {},
+        }
+
+        def _write():
+            try:
+                tmp = self.root / f"step_{step}.tmp"
+                final = self.root / f"step_{step}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                for k, v in host.items():
+                    fn = tmp / (k.replace("/", "__") + ".npy")
+                    np.save(fn, v)
+                (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)          # atomic commit
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error.append(e)
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error:
+            raise self._error.pop()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.root / f"step_{s}", ignore_errors=True)
+
+    # ----------------------------------------------------------- restore
+
+    def steps(self):
+        out = []
+        for p in self.root.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, *, step: int | None = None, shardings=None):
+        """``like``: pytree matching the saved structure (arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings — the elastic-reshard path."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        d = self.root / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat_like, _ = _flatten(like)
+        flat_sh = None
+        if shardings is not None:
+            flat_sh, _ = _flatten(shardings)
+        vals = {}
+        for k in flat_like:
+            arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            want = manifest["leaves"].get(k)
+            if want is not None and list(arr.shape) != want["shape"]:
+                raise ValueError(f"shape mismatch for {k}")
+            if flat_sh is not None and k in flat_sh:
+                vals[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                vals[k] = jax.numpy.asarray(arr)
+        # rebuild in the structure of `like`
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                         for p in path) for path, _ in leaves]
+        return jax.tree_util.tree_unflatten(treedef, [vals[k] for k in keys]), \
+            manifest
+
+
+def save_checkpoint(root, step, state, **kw):
+    CheckpointManager(root).save(step, state, blocking=True, **kw)
+
+
+def restore_checkpoint(root, like, **kw):
+    return CheckpointManager(root).restore(like, **kw)

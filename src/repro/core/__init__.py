@@ -1,0 +1,7 @@
+"""THE PAPER: the DNN-powered MLOps control plane.
+
+Subpackages mirror the paper's §3: dnn (multi-stream optimization engine),
+allocation (RL predictive allocator + workload forecaster), scaling
+(DynamicScaler), orchestration (strategy catalog / selection / rollout with
+canary analysis), monitoring (collection, anomaly detection, adaptation).
+"""

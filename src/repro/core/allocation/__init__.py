@@ -1,0 +1,5 @@
+from repro.core.allocation.forecaster import WorkloadForecaster
+from repro.core.allocation.rl import (
+    ACTIONS, DQNAgent, DQNConfig, ReplayBuffer, reward_fn,
+)
+from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator

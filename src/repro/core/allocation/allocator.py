@@ -1,0 +1,127 @@
+"""Predictive resource allocation (paper §3.3.1).
+
+The PredictiveAllocator fuses three signals into one scaling action per tick:
+
+  1. the workload forecaster's peak prediction (proactive component),
+  2. the DynamicScaler's constrained optimum (model-based planner),
+  3. the DQN's learned Q-values over the same state (learning component,
+     trained online from realized reward — "continuously improve allocation
+     decisions based on deployment outcomes").
+
+Mode "planner" uses (2) alone — this is the ablation baseline; mode "rl"
+acts with the DQN but is *shielded* by the constraints (never violates
+min/max/step); mode "hybrid" (default) lets the DQN choose among actions
+whose planner-predicted latency meets the SLO — learned cost/utilization
+trade-off inside a safety envelope.  The DQN is additionally pretrained by
+imitating planner decisions (supervised Q-margin), which is what lets it act
+sensibly before enough operational data accumulates (paper §5.3 notes the
+cold-start limitation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.allocation.forecaster import WorkloadForecaster
+from repro.core.allocation.rl import ACTIONS, DQNAgent, DQNConfig, reward_fn
+from repro.core.dnn.features import StreamBuilder, deploy_vector
+from repro.core.dnn.model import DNNConfig
+from repro.core.scaling.scaler import (
+    DynamicScaler, ScalingConstraints, ScalingDecision,
+)
+
+
+@dataclasses.dataclass
+class AllocatorConfig:
+    mode: str = "hybrid"            # planner | rl | hybrid
+    horizon_ticks: int = 3
+    w_util: float = 1.0
+    w_lat: float = 1.0
+    w_cost: float = 1.0
+
+
+class PredictiveAllocator:
+    def __init__(self, perf_model, constraints: ScalingConstraints,
+                 deploy_vec: np.ndarray, *, cfg: AllocatorConfig = None,
+                 dnn_cfg: DNNConfig = None, seed: int = 0):
+        self.cfg = cfg or AllocatorConfig()
+        self.constraints = constraints
+        self.perf_model = perf_model
+        self.deploy_vec = deploy_vec
+        self.forecaster = WorkloadForecaster()
+        self.scaler = DynamicScaler(self.forecaster, perf_model,
+                                    horizon_ticks=self.cfg.horizon_ticks)
+        self.dnn_cfg = dnn_cfg or DNNConfig()
+        self.agent = DQNAgent(self.dnn_cfg, DQNConfig(), seed=seed)
+        self.streams = StreamBuilder(window=self.dnn_cfg.window)
+        self._prev = None               # (state, action_idx)
+        self.replicas = constraints.min_replicas
+
+    # ------------------------------------------------------------- tick
+
+    def observe(self, metrics: dict):
+        """Feed one monitoring tick (before deciding)."""
+        self.forecaster.update(metrics.get("rps", 0.0))
+        self.streams.push(metrics)
+
+    def decide(self, metrics: dict) -> ScalingDecision:
+        planner = self.scaler.compute_scaling_decision(
+            metrics, self.constraints, current_replicas=self.replicas)
+        if self.cfg.mode == "planner":
+            decision = planner
+        else:
+            state = self.streams.streams(self.deploy_vec)
+            q = self.agent.q_values(state)
+            explore = (self.cfg.mode == "rl"
+                       and self.agent.rng.random() < self.agent.epsilon())
+            order = (self.agent.rng.permutation(len(ACTIONS)) if explore
+                     else np.argsort(-q))
+            chosen = None
+            c = self.constraints
+            for ai in order:
+                r = self.replicas + ACTIONS[ai]
+                if not (c.min_replicas <= r <= c.max_replicas):
+                    continue
+                lat, util = self.perf_model(r, planner.predicted_load)
+                if lat <= c.slo_ms or ACTIONS[ai] > 0:
+                    chosen = (int(ai), r, lat, util)
+                    break
+            if chosen is None:
+                decision = planner
+            else:
+                ai, r, lat, util = chosen
+                decision = ScalingDecision(
+                    target_replicas=r, delta=r - self.replicas,
+                    reason=f"dqn:{ACTIONS[ai]}",
+                    predicted_load=planner.predicted_load,
+                    predicted_latency_ms=lat, efficiency=planner.efficiency)
+                self._pending_action = ai
+        self._pending_state = self.streams.streams(self.deploy_vec)
+        if self.cfg.mode == "planner":
+            self._pending_action = int(np.argmin(
+                [abs(a - decision.delta) for a in ACTIONS]))
+        return decision
+
+    def apply(self, decision: ScalingDecision):
+        self.replicas = decision.target_replicas
+
+    def learn(self, metrics: dict, cost_per_tick: float):
+        """Reward from the realized outcome of the last action."""
+        if self._prev is None:
+            self._prev = (self._pending_state, self._pending_action)
+            return None
+        r = reward_fn(
+            utilization=metrics.get("flop_util", 0.0),
+            latency_ms=metrics.get("latency_p95", 0.0),
+            slo_ms=self.constraints.slo_ms,
+            cost_per_tick=cost_per_tick,
+            cost_scale=(self.constraints.max_replicas
+                        * self.constraints.cost_per_replica),
+            w_util=self.cfg.w_util, w_lat=self.cfg.w_lat,
+            w_cost=self.cfg.w_cost)
+        s, a = self._prev
+        s2 = self.streams.streams(self.deploy_vec)
+        loss = self.agent.observe(s, a, r, s2)
+        self._prev = (self._pending_state, self._pending_action)
+        return loss

@@ -1,0 +1,180 @@
+"""Reinforcement-learning allocator core (paper §3.3.1): double DQN.
+
+The paper specifies "reinforcement learning techniques" over a state of
+(utilization, workload, environment) with a reward balancing utilization /
+latency / cost [Wang et al. 10].  We implement a compact double-DQN:
+
+  * Q-network = the multi-stream DNN's Q head (shared trunk with the other
+    heads — the paper's single optimization engine);
+  * replay buffer (uniform), target network with soft updates;
+  * double-DQN target: argmax from the online net, value from the target net
+    — removes maximization bias, which matters here because the reward is
+    noisy (workload stochasticity).
+
+Actions are discrete replica deltas; the allocator maps them onto concrete
+ReMesh/scale events (core/allocation/allocator.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dnn.model import DNNConfig, MultiStreamDNN
+from repro.optim import adamw, apply_updates
+
+ACTIONS = (-4, -2, -1, 0, 1, 2, 4)      # replica deltas
+
+
+@dataclasses.dataclass
+class DQNConfig:
+    gamma: float = 0.95
+    lr: float = 5e-4
+    buffer_size: int = 20_000
+    batch_size: int = 64
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 3_000
+    target_tau: float = 0.01
+    train_every: int = 4
+    warmup: int = 200
+
+
+class ReplayBuffer:
+    def __init__(self, size: int, stream_shapes):
+        self.size = size
+        self.n = 0
+        self.i = 0
+        self.data = {
+            k: np.zeros((size,) + tuple(s), np.float32)
+            for k, s in stream_shapes.items()}
+        self.data2 = {
+            k: np.zeros((size,) + tuple(s), np.float32)
+            for k, s in stream_shapes.items()}
+        self.action = np.zeros(size, np.int32)
+        self.reward = np.zeros(size, np.float32)
+        self.done = np.zeros(size, np.float32)
+
+    def push(self, s, a, r, s2, done):
+        j = self.i
+        for k in self.data:
+            self.data[k][j] = s[k][0]
+            self.data2[k][j] = s2[k][0]
+        self.action[j] = a
+        self.reward[j] = r
+        self.done[j] = float(done)
+        self.i = (self.i + 1) % self.size
+        self.n = min(self.n + 1, self.size)
+
+    def sample(self, rng: np.random.Generator, batch: int):
+        idx = rng.integers(0, self.n, size=batch)
+        s = {k: jnp.asarray(v[idx]) for k, v in self.data.items()}
+        s2 = {k: jnp.asarray(v[idx]) for k, v in self.data2.items()}
+        return (s, jnp.asarray(self.action[idx]), jnp.asarray(self.reward[idx]),
+                s2, jnp.asarray(self.done[idx]))
+
+
+def reward_fn(*, utilization: float, latency_ms: float, slo_ms: float,
+              cost_per_tick: float, cost_scale: float,
+              w_util: float = 1.0, w_lat: float = 1.0,
+              w_cost: float = 1.0) -> float:
+    """The paper's three-term reward: utilization up, SLO violations down,
+    cost down.  Latency enters as a hinge on the SLO (violations dominate)."""
+    r_util = utilization                       # ∈ [0, 1]
+    r_lat = -max(latency_ms / slo_ms - 1.0, 0.0) * 4.0
+    r_cost = -cost_per_tick / max(cost_scale, 1e-9)
+    return w_util * r_util + w_lat * r_lat + w_cost * r_cost
+
+
+class DQNAgent:
+    def __init__(self, dnn_cfg: DNNConfig, cfg: DQNConfig = DQNConfig(), *,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.dnn_cfg = dnn_cfg
+        self.rng = np.random.default_rng(seed)
+        self.params, self.bn_state = MultiStreamDNN.init(
+            jax.random.PRNGKey(seed), dnn_cfg)
+        self.target_params = jax.tree.map(lambda x: x, self.params)
+        self.opt_init, self.opt_update = adamw(cfg.lr)
+        self.opt_state = self.opt_init(self.params)
+        shapes = {
+            "resource": (dnn_cfg.window, dnn_cfg.n_resource_features),
+            "perf": (dnn_cfg.window, dnn_cfg.n_perf_features),
+            "deploy": (dnn_cfg.n_deploy_features,),
+        }
+        self.buffer = ReplayBuffer(cfg.buffer_size, shapes)
+        self.step_count = 0
+        self._train_step = self._make_train_step()
+
+    # ------------------------------------------------------------- acting
+
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(self.step_count / max(c.eps_decay_steps, 1), 1.0)
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    _q_jit = None
+
+    def q_values(self, streams) -> np.ndarray:
+        if DQNAgent._q_jit is None:
+            DQNAgent._q_jit = jax.jit(
+                lambda p, st, s: MultiStreamDNN.apply(p, st, s,
+                                                      training=False)[0]["q"])
+        q = DQNAgent._q_jit(self.params, self.bn_state,
+                            {k: jnp.asarray(v) for k, v in streams.items()})
+        return np.asarray(q[0])
+
+    def act(self, streams, *, greedy: bool = False) -> int:
+        """→ action index into ACTIONS."""
+        if not greedy and self.rng.random() < self.epsilon():
+            return int(self.rng.integers(len(ACTIONS)))
+        return int(np.argmax(self.q_values(streams)))
+
+    # ------------------------------------------------------------- learning
+
+    def _make_train_step(self):
+        gamma = self.cfg.gamma
+        tau = self.cfg.target_tau
+
+        def loss_fn(params, bn_state, target_params, s, a, r, s2, done):
+            q, _ = MultiStreamDNN.apply(params, bn_state, s, training=False)
+            q_sa = jnp.take_along_axis(q["q"], a[:, None], axis=1)[:, 0]
+            q2_online, _ = MultiStreamDNN.apply(params, bn_state, s2,
+                                                training=False)
+            a2 = jnp.argmax(q2_online["q"], axis=1)            # double-DQN
+            q2_target, _ = MultiStreamDNN.apply(target_params, bn_state, s2,
+                                                training=False)
+            q2 = jnp.take_along_axis(q2_target["q"], a2[:, None], axis=1)[:, 0]
+            target = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q2)
+            err = q_sa - target
+            return jnp.mean(jnp.where(jnp.abs(err) < 1.0, 0.5 * err ** 2,
+                                      jnp.abs(err) - 0.5))
+
+        @jax.jit
+        def train_step(params, bn_state, target_params, opt_state, batch):
+            s, a, r, s2, done = batch
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, bn_state, target_params, s, a, r, s2, done)
+            updates, opt_state = self.opt_update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            target_params = jax.tree.map(
+                lambda t, p: (1 - tau) * t + tau * p, target_params, params)
+            return params, target_params, opt_state, loss
+
+        return train_step
+
+    def observe(self, s, a, r, s2, done=False):
+        self.buffer.push(s, a, r, s2, done)
+        self.step_count += 1
+        loss = None
+        if (self.buffer.n >= self.cfg.warmup
+                and self.step_count % self.cfg.train_every == 0):
+            batch = self.buffer.sample(self.rng, self.cfg.batch_size)
+            (self.params, self.target_params, self.opt_state,
+             loss) = self._train_step(self.params, self.bn_state,
+                                      self.target_params, self.opt_state,
+                                      batch)
+            loss = float(loss)
+        return loss

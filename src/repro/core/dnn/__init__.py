@@ -1,0 +1,8 @@
+from repro.core.dnn.model import DNNConfig, MultiStreamDNN
+from repro.core.dnn.features import (
+    PERF_KEYS, RESOURCE_KEYS, RunningNorm, StreamBuilder, deploy_vector,
+)
+from repro.core.dnn.train import (
+    FEATURE_GROUPS, fit, make_sgd_step, permutation_importance,
+    supervised_loss,
+)

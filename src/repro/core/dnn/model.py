@@ -1,0 +1,116 @@
+"""The paper's multi-stream DNN optimizer (§3.2.1), in pure JAX.
+
+Three dedicated pathways process heterogeneous operational data before
+fusion (paper Fig. 5):
+
+  resource-metrics stream   (B, T, F_r) — chip FLOP-util, HBM-BW util, ICI
+      util, memory, queue depth …      → temporal Conv1D ×2 (+ max/avg pool)
+  performance stream        (B, T, F_p) — latency p50/p95, throughput, error
+      rate …                           → GRU, final hidden state
+  deployment-params stream  (B, F_d)   — model size, arch family one-hot,
+      mesh shape, region, SLO …        → Dense ×2 + BatchNorm
+
+Fusion trunk: concat → MLP(128) → shared features.  Decision heads:
+  alloc    — regression: forecast per-resource utilization + required replicas
+  strategy — classification over the deployment-strategy catalog (§3.4.1)
+  q        — Q-values over discrete scaling actions (the RL allocator §3.3.1)
+
+The paper gives the structure but not layer sizes; sizes here are fixed small
+(CPU-trainable) — recorded in DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import MLP, BatchNorm, Conv1D, GRU, Linear
+
+
+@dataclasses.dataclass(frozen=True)
+class DNNConfig:
+    n_resource_features: int = 6
+    n_perf_features: int = 5
+    n_deploy_features: int = 12
+    window: int = 32              # T: sliding-window length fed to the nets
+    conv_channels: int = 32
+    gru_hidden: int = 32
+    deploy_hidden: int = 32
+    trunk_hidden: int = 128
+    feature_dim: int = 64
+    n_resources: int = 4          # alloc head: cpu/hbm/ici/replicas
+    n_strategies: int = 6         # strategy head: catalog size
+    n_actions: int = 7            # q head: replica deltas {-4,-2,-1,0,1,2,4}
+
+
+class MultiStreamDNN:
+    @staticmethod
+    def init(key, cfg: DNNConfig):
+        ks = jax.random.split(key, 10)
+        params = {
+            # resource stream: two temporal convs
+            "conv1": Conv1D.init(ks[0], cfg.n_resource_features,
+                                 cfg.conv_channels, 5),
+            "conv2": Conv1D.init(ks[1], cfg.conv_channels, cfg.conv_channels, 3),
+            # performance stream: GRU
+            "gru": GRU.init(ks[2], cfg.n_perf_features, cfg.gru_hidden),
+            # deployment stream: dense + BN ×2
+            "dep1": Linear.init(ks[3], cfg.n_deploy_features, cfg.deploy_hidden),
+            "bn1": BatchNorm.init(ks[4], cfg.deploy_hidden),
+            "dep2": Linear.init(ks[5], cfg.deploy_hidden, cfg.deploy_hidden),
+            "bn2": BatchNorm.init(ks[6], cfg.deploy_hidden),
+            # fusion trunk
+            "trunk": MLP.init(ks[7], (2 * cfg.conv_channels + cfg.gru_hidden
+                                      + cfg.deploy_hidden,
+                                      cfg.trunk_hidden, cfg.feature_dim)),
+            # heads
+            "alloc": Linear.init(ks[8], cfg.feature_dim, cfg.n_resources),
+            "strategy": Linear.init(ks[9], cfg.feature_dim, cfg.n_strategies),
+            "q": Linear.init(jax.random.fold_in(key, 99), cfg.feature_dim,
+                             cfg.n_actions),
+        }
+        state = {"bn1": BatchNorm.init_state(cfg.deploy_hidden),
+                 "bn2": BatchNorm.init_state(cfg.deploy_hidden)}
+        return params, state
+
+    @staticmethod
+    def features(params, state, streams, *, training: bool = False):
+        """streams = {"resource": (B,T,F_r), "perf": (B,T,F_p),
+        "deploy": (B,F_d)} → ((B, feature_dim), new_state)."""
+        res, perf, dep = (streams["resource"], streams["perf"],
+                          streams["deploy"])
+        # resource: conv → relu → conv → relu → global max+avg pool over T
+        h = jax.nn.relu(Conv1D.apply(params["conv1"], res, causal=True))
+        h = jax.nn.relu(Conv1D.apply(params["conv2"], h, causal=True))
+        r_feat = jnp.concatenate([jnp.max(h, axis=1), jnp.mean(h, axis=1)],
+                                 axis=-1)
+        # performance: GRU final hidden
+        p_final, _ = GRU.apply(params["gru"], perf)
+        # deployment: dense + BN ×2
+        d, st1 = BatchNorm.apply(params["bn1"],
+                                 state["bn1"],
+                                 Linear.apply(params["dep1"], dep),
+                                 training=training)
+        d = jax.nn.relu(d)
+        d, st2 = BatchNorm.apply(params["bn2"], state["bn2"],
+                                 Linear.apply(params["dep2"], d),
+                                 training=training)
+        d = jax.nn.relu(d)
+        fused = jnp.concatenate([r_feat, p_final, d], axis=-1)
+        feat = MLP.apply(params["trunk"], fused, act=jax.nn.relu,
+                         final_act=jax.nn.relu)
+        return feat, {"bn1": st1, "bn2": st2}
+
+    @staticmethod
+    def apply(params, state, streams, *, training: bool = False):
+        """→ (outputs dict, new_state)."""
+        feat, new_state = MultiStreamDNN.features(params, state, streams,
+                                                  training=training)
+        out = {
+            "alloc": Linear.apply(params["alloc"], feat),
+            "strategy_logits": Linear.apply(params["strategy"], feat),
+            "q": Linear.apply(params["q"], feat),
+            "features": feat,
+        }
+        return out, new_state

@@ -1,0 +1,117 @@
+"""Training loop + feature-importance analysis for the multi-stream DNN.
+
+Supervised path (paper §3.2): regress the alloc head onto realized next-window
+resource utilization / required replicas and classify the retrospectively-best
+deployment strategy; the Q head is trained by the DQN (core/allocation/rl.py)
+sharing the same trunk.
+
+Feature importance (paper §4.4): permutation importance over the four metric
+groups (resource-utilization / performance / workload / network), evaluated
+as the increase in validation loss when a group's channels are shuffled.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dnn.model import DNNConfig, MultiStreamDNN
+from repro.optim import adamw, apply_updates
+
+
+def supervised_loss(params, state, batch, *, training=True):
+    out, new_state = MultiStreamDNN.apply(params, state, batch["streams"],
+                                          training=training)
+    # Huber on allocation regression
+    err = out["alloc"] - batch["alloc_target"]
+    huber = jnp.where(jnp.abs(err) < 1.0, 0.5 * err ** 2, jnp.abs(err) - 0.5)
+    alloc_loss = jnp.mean(huber)
+    # CE on strategy classification
+    logp = jax.nn.log_softmax(out["strategy_logits"])
+    strat_loss = -jnp.mean(
+        jnp.take_along_axis(logp, batch["strategy_target"][:, None], axis=1))
+    loss = alloc_loss + strat_loss
+    return loss, (new_state, {"alloc_loss": alloc_loss,
+                              "strategy_loss": strat_loss})
+
+
+def make_sgd_step(lr: float = 1e-3):
+    opt_init, opt_update = adamw(lr, weight_decay=1e-4)
+
+    @jax.jit
+    def step(params, state, opt_state, batch):
+        (loss, (new_state, metrics)), grads = jax.value_and_grad(
+            supervised_loss, has_aux=True)(params, state, batch)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, new_state, opt_state, loss, metrics
+
+    return opt_init, step
+
+
+def fit(params, state, dataset, *, epochs: int = 5, lr: float = 1e-3,
+        batch_size: int = 64, seed: int = 0, log_every: int = 0):
+    """dataset: dict of stacked numpy arrays (streams + targets)."""
+    opt_init, step = make_sgd_step(lr)
+    opt_state = opt_init(params)
+    n = len(dataset["alloc_target"])
+    rng = np.random.default_rng(seed)
+    losses = []
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = order[i:i + batch_size]
+            batch = {
+                "streams": {k: jnp.asarray(v[idx])
+                            for k, v in dataset["streams"].items()},
+                "alloc_target": jnp.asarray(dataset["alloc_target"][idx]),
+                "strategy_target": jnp.asarray(dataset["strategy_target"][idx]),
+            }
+            params, state, opt_state, loss, _ = step(params, state, opt_state,
+                                                     batch)
+            losses.append(float(loss))
+        if log_every and (ep % log_every == 0):
+            print(f"epoch {ep}: loss={np.mean(losses[-8:]):.4f}")
+    return params, state, losses
+
+
+# ---------------------------------------------------------------------------
+# permutation feature importance (paper §4.4.1)
+# ---------------------------------------------------------------------------
+
+# channel indices within the streams, by paper metric group
+FEATURE_GROUPS = {
+    "resource_utilization": ("resource", (0, 1, 2, 3)),   # flop/hbm/ici/mem
+    "performance": ("perf", (0, 1, 2, 3)),                # latencies/tp/err
+    "workload_patterns": ("perf", (4,)),                  # rps channel
+    "network": ("resource", (4, 5)),                      # queue/replica frac
+}
+
+
+def _eval_loss(params, state, dataset):
+    batch = {
+        "streams": {k: jnp.asarray(v) for k, v in dataset["streams"].items()},
+        "alloc_target": jnp.asarray(dataset["alloc_target"]),
+        "strategy_target": jnp.asarray(dataset["strategy_target"]),
+    }
+    loss, _ = supervised_loss(params, state, batch, training=False)
+    return float(loss)
+
+
+def permutation_importance(params, state, dataset, *, seed: int = 0):
+    """→ {group: normalized importance} (sums to 1)."""
+    rng = np.random.default_rng(seed)
+    base = _eval_loss(params, state, dataset)
+    raw = {}
+    for group, (stream, chans) in FEATURE_GROUPS.items():
+        ds = {k: (v.copy() if k != "streams" else None)
+              for k, v in dataset.items()}
+        streams = {k: v.copy() for k, v in dataset["streams"].items()}
+        perm = rng.permutation(len(streams[stream]))
+        arr = streams[stream].copy()
+        arr[..., list(chans)] = arr[perm][..., list(chans)]
+        streams[stream] = arr
+        ds["streams"] = streams
+        raw[group] = max(_eval_loss(params, state, ds) - base, 0.0)
+    total = sum(raw.values()) or 1.0
+    return {k: v / total for k, v in raw.items()}

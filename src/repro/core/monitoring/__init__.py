@@ -1,0 +1,3 @@
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.monitoring.anomaly import Anomaly, AnomalyDetector, trend
+from repro.core.monitoring.adapt import AdaptiveOptimizer, AdaptState

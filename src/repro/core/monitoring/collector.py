@@ -1,0 +1,95 @@
+"""Distributed metric collection (paper §3.5.1).
+
+MetricsCollector aggregates per-replica reports into temporally-aligned
+fleet-level records: ring buffers per (replica, metric), tick-aligned
+aggregation (mean / p50 / p95 / max), and staleness handling (a replica that
+missed a tick contributes its last value, decayed — the paper's "data
+consistency and temporal alignment").  Straggler detection lives here too:
+per-replica latency EWMAs flagged against the fleet median (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReplicaReport:
+    replica_id: int
+    tick: int
+    latency_ms_samples: list
+    n_requests: int
+    n_errors: int
+    flop_util: float
+    hbm_util: float
+    ici_util: float
+    mem_frac: float
+    queue_depth: int
+
+
+class MetricsCollector:
+    def __init__(self, *, window: int = 512, straggler_factor: float = 1.8):
+        self.window = window
+        self.straggler_factor = straggler_factor
+        self.reports: dict[int, list[ReplicaReport]] = defaultdict(list)
+        self.fleet_records: list[dict] = []
+        self._lat_ewma: dict[int, float] = {}
+
+    def submit(self, report: ReplicaReport):
+        buf = self.reports[report.replica_id]
+        buf.append(report)
+        if len(buf) > self.window:
+            del buf[:-self.window]
+        if report.latency_ms_samples:
+            m = float(np.mean(report.latency_ms_samples))
+            prev = self._lat_ewma.get(report.replica_id, m)
+            self._lat_ewma[report.replica_id] = 0.8 * prev + 0.2 * m
+
+    def aggregate(self, tick: int, *, n_replicas: int,
+                  max_replicas: int) -> dict:
+        """Fleet-level record for this tick (the DNN's input record)."""
+        lat, reqs, errs = [], 0, 0
+        util = {"flop_util": [], "hbm_util": [], "ici_util": [], "mem_frac": []}
+        qd = []
+        for rid, buf in self.reports.items():
+            if not buf:
+                continue
+            r = buf[-1]
+            stale = tick - r.tick
+            w = 0.5 ** stale          # decay stale replicas
+            lat.extend(r.latency_ms_samples)
+            reqs += r.n_requests
+            errs += r.n_errors
+            for k in util:
+                util[k].append(getattr(r, k) * w)
+            qd.append(r.queue_depth)
+        lat_arr = np.asarray(lat) if lat else np.zeros(1)
+        rec = {
+            "tick": tick,
+            "latency_p50": float(np.percentile(lat_arr, 50)),
+            "latency_p95": float(np.percentile(lat_arr, 95)),
+            "latency_mean": float(np.mean(lat_arr)),
+            "throughput": float(reqs),
+            "error_rate": errs / max(reqs, 1),
+            "rps": float(reqs),
+            "queue_depth": float(np.mean(qd)) if qd else 0.0,
+            "replicas_frac": n_replicas / max(max_replicas, 1),
+            **{k: float(np.mean(v)) if v else 0.0 for k, v in util.items()},
+        }
+        self.fleet_records.append(rec)
+        if len(self.fleet_records) > 4 * self.window:
+            del self.fleet_records[:-2 * self.window]
+        return rec
+
+    def stragglers(self) -> list[int]:
+        """Replicas whose latency EWMA exceeds straggler_factor × median."""
+        if len(self._lat_ewma) < 3:
+            return []
+        med = float(np.median(list(self._lat_ewma.values())))
+        return [rid for rid, v in self._lat_ewma.items()
+                if v > self.straggler_factor * med]
+
+    def window_values(self, key: str, n: int = 32) -> np.ndarray:
+        return np.asarray([r.get(key, 0.0) for r in self.fleet_records[-n:]])

@@ -1,0 +1,11 @@
+from repro.core.orchestration.strategies import (
+    CATALOG, STRATEGY_NAMES, DeployEnv, Strategy, stage_deploy_seconds,
+    total_deploy_seconds,
+)
+from repro.core.orchestration.selector import (
+    DecisionTreeSelector, DeploymentContext, DNNSelector, OutcomeStats,
+)
+from repro.core.orchestration.rollout import (
+    CanaryAnalyzer, CanarySample, HealthPolicy, Phase, RolloutManager,
+    binomial_z_pvalue, welch_t_pvalue_one_sided,
+)

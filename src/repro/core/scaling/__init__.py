@@ -1,0 +1,4 @@
+from repro.core.scaling.scaler import (
+    DynamicScaler, PerfModel, ScalingConstraints, ScalingDecision,
+    ScalingOptimizer,
+)

@@ -1,0 +1,157 @@
+"""Dynamic scaling (paper §3.3.2) — the DynamicScaler, faithfully.
+
+The paper's pseudocode:
+
+    scaling_decision = self.optimizer.optimize(
+        current_load=current_load, predicted_load=predicted_load,
+        efficiency=resource_efficiency, constraints=constraints)
+
+analyze_current_load → windowed load statistics; predict_future_load → the
+workload forecaster (§3.3.2 time-series component); calculate_efficiency →
+multi-resource utilization score; optimize → constrained cost minimization:
+the smallest replica count whose *predicted* latency meets the SLO at the
+*forecast peak* load, within min/max/step/cooldown constraints.
+
+The performance model is injected (PerfModel protocol): the simulator wires
+in the roofline-grounded queueing model (sim/serving.py), so the control
+plane optimizes against the very models this repo defines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol
+
+import numpy as np
+
+
+class PerfModel(Protocol):
+    def __call__(self, replicas: int, load_rps: float) -> tuple[float, float]:
+        """→ (latency_ms, utilization ∈ [0,1]) at this operating point."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingConstraints:
+    min_replicas: int = 1
+    max_replicas: int = 64
+    max_step: int = 8               # largest replica delta per decision
+    slo_ms: float = 200.0
+    target_util: tuple[float, float] = (0.55, 0.85)
+    cooldown_ticks: int = 3         # min ticks between scale-downs
+    cost_per_replica: float = 1.0
+
+
+@dataclasses.dataclass
+class ScalingDecision:
+    target_replicas: int
+    delta: int
+    reason: str
+    predicted_load: float
+    predicted_latency_ms: float
+    efficiency: float
+
+
+class ScalingOptimizer:
+    """Constrained optimizer: min cost s.t. predicted latency ≤ SLO."""
+
+    def __init__(self, perf_model: PerfModel):
+        self.perf_model = perf_model
+
+    def optimize(self, *, current_load: dict, predicted_load: float,
+                 efficiency: float, constraints: ScalingConstraints,
+                 current_replicas: int) -> ScalingDecision:
+        c = constraints
+        lo = max(c.min_replicas, current_replicas - c.max_step)
+        hi = min(c.max_replicas, current_replicas + c.max_step)
+        best = None
+        for r in range(lo, hi + 1):
+            lat, util = self.perf_model(r, predicted_load)
+            feasible = lat <= c.slo_ms and util <= c.target_util[1]
+            cost = r * c.cost_per_replica
+            key = (not feasible, cost, lat)
+            if best is None or key < best[0]:
+                best = (key, r, lat, util, feasible)
+        _, r, lat, util, feasible = best
+        reason = "optimal" if feasible else "infeasible:max_headroom"
+        if not feasible:
+            # no point meets SLO within step bounds → go as big as allowed
+            r = hi
+            lat, util = self.perf_model(r, predicted_load)
+        return ScalingDecision(target_replicas=r, delta=r - current_replicas,
+                               reason=reason, predicted_load=predicted_load,
+                               predicted_latency_ms=lat, efficiency=efficiency)
+
+
+class DynamicScaler:
+    def __init__(self, forecaster, perf_model: PerfModel, *,
+                 horizon_ticks: int = 3, down_sustain: int = 3):
+        self.forecaster = forecaster
+        self.optimizer = ScalingOptimizer(perf_model)
+        self.horizon = horizon_ticks
+        self.down_sustain = down_sustain
+        self._last_downscale = -10**9
+        self._below_count = 0
+        self._tick = 0
+
+    # --- the paper's three analysis phases -------------------------------
+
+    def analyze_current_load(self, metrics: dict) -> dict:
+        rps = metrics.get("rps_window", [metrics.get("rps", 0.0)])
+        return {
+            "mean": float(np.mean(rps)),
+            "peak": float(np.max(rps)),
+            "std": float(np.std(rps)),
+            "current": float(rps[-1]),
+        }
+
+    def predict_future_load(self, metrics: dict) -> float:
+        del metrics  # forecaster already observed the window via update()
+        return self.forecaster.predict_peak(self.horizon)
+
+    def calculate_efficiency(self, current_load: dict,
+                             metrics: dict | None = None) -> float:
+        """Multi-resource efficiency: mean of the utilization channels."""
+        if not metrics:
+            return 0.0
+        chans = [metrics.get(k, 0.0)
+                 for k in ("flop_util", "hbm_util", "ici_util", "mem_frac")]
+        return float(np.mean([c for c in chans if c is not None]))
+
+    # --- the decision step (paper pseudocode shape) ----------------------
+
+    def compute_scaling_decision(self, metrics: dict,
+                                 constraints: ScalingConstraints,
+                                 *, current_replicas: int) -> ScalingDecision:
+        current_load = self.analyze_current_load(metrics)
+        predicted_load = self.predict_future_load(metrics)
+        resource_efficiency = self.calculate_efficiency(current_load, metrics)
+
+        decision = self.optimizer.optimize(
+            current_load=current_load,
+            predicted_load=predicted_load,
+            efficiency=resource_efficiency,
+            constraints=constraints,
+            current_replicas=current_replicas,
+        )
+        # scale-down damping: up fast, down slow.  A down decision must be
+        # (a) SUSTAINED — the optimizer proposed a lower target for
+        # `down_sustain` consecutive ticks (one-tick dips from forecast noise
+        # or adaptation knob moves must not drain warm replicas), and
+        # (b) rate-limited by the cooldown (never faster than provisioning).
+        self._tick += 1
+        if decision.delta < 0:
+            self._below_count += 1
+            sustained = self._below_count >= self.down_sustain
+            cooled = (self._tick - self._last_downscale
+                      >= constraints.cooldown_ticks)
+            if not (sustained and cooled):
+                return ScalingDecision(
+                    target_replicas=current_replicas, delta=0,
+                    reason="cooldown" if sustained else "down_hysteresis",
+                    predicted_load=predicted_load,
+                    predicted_latency_ms=decision.predicted_latency_ms,
+                    efficiency=resource_efficiency)
+            self._last_downscale = self._tick
+            self._below_count = 0
+        else:
+            self._below_count = 0
+        return decision

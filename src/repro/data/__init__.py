@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, extra_inputs
+
+__all__ = ["DataConfig", "TokenPipeline", "extra_inputs"]

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the data plane's compute hot spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ops.py as the jit'd public wrapper and ref.py as the pure-jnp
+oracle used by the allclose test sweeps.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

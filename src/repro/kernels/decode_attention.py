@@ -1,0 +1,102 @@
+"""Decode attention for TPU (Pallas): split-K accumulation over the KV cache.
+
+Flash-decoding adapted to the TPU execution model (DESIGN.md §6): on GPU,
+split-K shards the KV range across SMs and combines partials with a second
+kernel; a TPU core executes grid steps sequentially, so split-K becomes
+K-block accumulation in VMEM scratch — the (m, l, acc) running statistics
+carry across the innermost (k-block) grid dimension and the output is
+normalized on the last block.  Decode is memory-bound KV streaming: each
+(bk × hd) cache tile is read exactly once from HBM.
+
+The GQA q-head group (G = H/KV heads sharing one KV head) forms the q tile —
+(G, hd) — so the score matmul is (G, hd) × (hd, bk): MXU-shaped when G ≥ 8,
+and still a single VREG broadcast otherwise.
+
+Layouts: q (B, KV, G, hd); caches (B, KV, Smax, hd); `index` arrives as a
+(1, 1) int32 array read from VMEM (slots > index are masked — ring-buffer
+validity, see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale: float, bk: int, nk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    index = idx_ref[0, 0]
+    G = q_ref.shape[2]
+    slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+    ok = slot <= index
+
+    # skip blocks entirely past the valid region
+    @pl.when(ki * bk <= index)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(ok, s, NEG)                              # (G, bk)
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_bkgd(q, k_cache, v_cache, index, *, block_k: int = 512,
+                          interpret: bool = False):
+    """q: (B, KV, G, hd); caches: (B, KV, Smax, hd); index: scalar int32."""
+    B, KV, G, hd = q.shape
+    Smax = k_cache.shape[2]
+    bk = min(block_k, Smax)
+    assert Smax % bk == 0, (Smax, bk)
+    nk = Smax // bk
+    grid = (B, KV, nk)
+    idx = jnp.asarray(index, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_decode_kernel, scale=hd ** -0.5, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (0, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, q, k_cache, v_cache)

@@ -1,0 +1,70 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Model code calls these with model-native layouts; the wrappers transpose to
+kernel layouts, pick interpret mode automatically (Pallas TPU kernels execute
+their body in Python on CPU when interpret=True — that is how this
+container validates them), and fall back to the jnp reference for shapes the
+kernels don't tile (ragged block sizes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.decode_attention import decode_attention_bkgd
+from repro.kernels.ssm_scan import ssm_scan_ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128, interpret=None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) → (B, Sq, H, hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    qt = jnp.swapaxes(q, 1, 2)          # (B, H, Sq, hd)
+    kt = jnp.swapaxes(k, 1, 2)          # (B, KV, Sk, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def decode_attention(q, k_cache, v_cache, index, *, block_k: int = 512,
+                     interpret=None):
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd) → (B, 1, H, hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    bk = min(block_k, Smax)
+    if Smax % bk:
+        return ref.decode_attention_ref(q, k_cache, v_cache, index)
+    G = H // KV
+    qt = q[:, 0].reshape(B, KV, G, hd)  # head h = kv·G + g, as in sdpa_ref
+    kt = jnp.swapaxes(k_cache, 1, 2)    # (B, KV, Smax, hd)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = decode_attention_bkgd(qt, kt, vt, index, block_k=bk,
+                                interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
+def ssm_scan(x, dt, A, B, C, *, chunk: int = 128, interpret=None):
+    """SSD scan — x: (Bsz, L, H, hd); dt: (Bsz, L, H); A: (H,);
+    B/C: (Bsz, L, H, N) → y (Bsz, L, H, hd) fp32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    L = x.shape[1]
+    T = min(chunk, L)
+    if L % T:
+        return ref.ssm_scan_ref(x, dt, A, B, C)
+    y = ssm_scan_ssd(x.astype(jnp.float32), dt.astype(jnp.float32), A,
+                     B.astype(jnp.float32), C.astype(jnp.float32),
+                     chunk=T, interpret=interpret)
+    return y

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are deliberately naive: full-materialization attention and a
+step-by-step SSD recurrence.  Tests sweep shapes/dtypes and assert the
+kernels (interpret mode on CPU) match these within dtype tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) — GQA, fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, index):
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); slots > index masked."""
+    B, _, H, hd = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    ok = jnp.arange(Smax)[None, :] <= jnp.asarray(index, jnp.int32)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, A, B, C):
+    """SSD (Mamba2) recurrence, step by step.
+
+    x: (Bsz, L, H, hd) fp32; dt: (Bsz, L, H); A: (H,) (negative);
+    B/C: (Bsz, L, H, N).  Returns y: (Bsz, L, H, hd)
+    with h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t and y_t = h_t · C_t."""
+    Bsz, L, H, hd = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t * A[None])                       # (Bsz, H)
+        h = a[..., None, None] * h + \
+            (dt_t[..., None] * x_t)[..., None] * B_t[:, :, None, :]
+        y_t = jnp.einsum("bhdn,bhn->bhd", h, C_t)
+        return h, y_t
+
+    h0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,92 @@
+"""Chunked SSD (Mamba2) scan for TPU (Pallas).
+
+TPU adaptation of the Mamba2 "state-space duality" algorithm (DESIGN.md §6):
+the recurrence h_t = a_t·h + dt_t·x_t⊗B_t, y_t = C_t·h_t is evaluated in
+chunks of T tokens.  Within a chunk the contribution is the *quadratic* form
+  Y_intra = (L ∘ (C Bᵀ)) · (dt ⊙ X),   L[i,j] = exp(P_i − P_j)·1[i≥j],
+two (T×N)(N×T) / (T×T)(T×hd) matmuls that map straight onto the MXU —
+instead of the sequential elementwise recurrence a GPU scan would use.  The
+inter-chunk state (N × hd) is carried in VMEM scratch across the sequential
+innermost grid dimension (chunks), exactly like the flash-attention (m, l,
+acc) carry.  All decay exponents are differences of the cumulative log-decay
+P (non-positive), so nothing overflows.
+
+Layouts: x (B, L, H, hd); dt (B, L, H); A (H, 1); B/C (B, L, H, N);
+out (B, L, H, hd).  Grid (B, H, n_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                T: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (T, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (T,)
+    A = a_ref[0, 0]                                  # scalar (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (T, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (T, N)
+
+    lA = dt * A                                      # (T,) log-decay ≤ 0
+    P = jnp.cumsum(lA)                               # inclusive prefix
+
+    # intra-chunk quadratic form
+    S = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (T, T)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    Lmat = jnp.where(ii >= jj, jnp.exp(P[:, None] - P[None, :]), 0.0)
+    M = S * Lmat * dt[None, :]
+    y = jax.lax.dot(M, x, preferred_element_type=jnp.float32)     # (T, hd)
+
+    # inter-chunk contribution from the carried state (N, hd)
+    state = state_ref[...]
+    y += jax.lax.dot(Cm * jnp.exp(P)[:, None], state,
+                     preferred_element_type=jnp.float32)
+
+    # state update: decay full chunk + accumulate inputs
+    w = (dt * jnp.exp(P[T - 1] - P))[:, None] * x                 # (T, hd)
+    state_ref[...] = jnp.exp(P[T - 1]) * state + jax.lax.dot_general(
+        Bm, w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # (N, hd)
+
+    o_ref[...] = y.astype(o_ref.dtype)[None, :, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool = False):
+    """x: (Bsz, L, H, hd); dt: (Bsz, L, H); A: (H,); B/C: (Bsz, L, H, N)."""
+    Bsz, L, H, hd = x.shape
+    N = B.shape[-1]
+    T = min(chunk, L)
+    assert L % T == 0, (L, T)
+    nc = L // T
+    grid = (Bsz, H, nc)
+
+    kernel = functools.partial(_ssd_kernel, T=T)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, T, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, T, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, T, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, hd), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, L, H, hd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, hd), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.reshape(H, 1).astype(jnp.float32), B, C)

@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           (os.environ.get("DRYRUN_DEVICES") or "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the framework proves its distribution config is coherent without
+real hardware: for each assigned architecture and each of its input shapes,
+the step function (train_step / prefill_step / decode_step) is jitted with
+explicit NamedShardings on the production mesh — 16×16 ("data","model")
+single-pod and 2×16×16 ("pod","data","model") multi-pod — lowered from
+ShapeDtypeStruct stand-ins (no allocation), and compiled.  Failures here
+(sharding mismatch, unsupported collective) are bugs in the system.
+
+Outputs per cell (JSON, resumable): memory_analysis, cost_analysis
+(FLOPs/bytes), and the per-device collective wire-bytes parsed from the
+post-SPMD HLO — the inputs to EXPERIMENTS.md §Roofline.
+
+Because jax.lax.scan bodies are counted ONCE by cost_analysis, --probe
+additionally compiles python-unrolled 2- and 4-layer variants (full width,
+full batch, single-pod) and linear-fits  total = base + L · per_layer  for
+FLOPs / bytes / collective bytes — the numbers the roofline table uses.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both --probe
+  DRYRUN_DEVICES=8 python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k --mesh single --mesh-shape 2,4 --probe
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_cost import collective_bytes, cost_summary, memory_summary
+from repro.launch.mesh import make_mesh, make_production_mesh, mesh_chips
+from repro.models import SHAPES, applicable_shapes
+from repro.models.steps import (
+    TrainState,
+    cache_axes,
+    cache_structs,
+    input_sharding_axes,
+    input_structs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    params_axes_and_structs,
+    train_state_axes,
+)
+from repro.optim.adamw import AdamWState
+from repro.sharding import (
+    SERVE_RULES, TRAIN_RULES, serve_rules, shard_ctx, spec_for,
+    tree_shardings,
+)
+
+
+def _shardings(axes_tree, rules, mesh, structs):
+    return tree_shardings(axes_tree, rules, mesh, shapes_tree=structs)
+
+
+def lower_cell(cfg, shape_name: str, mesh, *, donate: bool = True):
+    """Build + jit + lower one cell; returns (lowered, structs kwargs)."""
+    shape = SHAPES[shape_name]
+    rules = (TRAIN_RULES if shape.kind == "train"
+             else serve_rules(shape.global_batch))
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        step, (opt_init, _) = make_train_step(cfg)
+
+        def train_step(state, batch):
+            with shard_ctx(rules, mesh):
+                return step(state, batch)
+
+        params_axes, params_structs = params_axes_and_structs(cfg)
+        state_structs = TrainState(
+            params=params_structs,
+            opt_state=AdamWState(
+                step=jax.ShapeDtypeStruct((), jnp.int32),
+                mu=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    params_structs),
+                nu=jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                    params_structs)),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        state_sh = _shardings(train_state_axes(cfg), rules, mesh, state_structs)
+        batch_structs = input_structs(cfg, shape)
+        batch_sh = _shardings(
+            {k: v for k, v in input_sharding_axes(cfg, with_labels=True).items()
+             if k in batch_structs},
+            rules, mesh, batch_structs)
+        fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, repl),
+                     donate_argnums=(0,) if donate else ())
+        return fn.lower(state_structs, batch_structs)
+
+    params_axes, params_structs = params_axes_and_structs(cfg)
+    # serving deployments stream bf16 weights (fp32 masters live with the
+    # trainer) — halves both HBM footprint and any weight movement
+    params_structs = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, cfg.cdtype), params_structs)
+    params_sh = _shardings(params_axes, rules, mesh, params_structs)
+
+    if shape.kind == "prefill":
+        pstep = make_prefill_step(cfg, max_seq=shape.seq_len)
+
+        def prefill_step(params, batch):
+            with shard_ctx(rules, mesh):
+                return pstep(params, batch)
+
+        batch_structs = input_structs(cfg, shape)
+        batch_sh = _shardings(
+            {k: v for k, v in input_sharding_axes(cfg, with_labels=False).items()
+             if k in batch_structs},
+            rules, mesh, batch_structs)
+        c_structs = cache_structs(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = _shardings(cache_axes(cfg, shape.global_batch, shape.seq_len),
+                              rules, mesh, c_structs)
+        fn = jax.jit(prefill_step, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(repl, cache_sh))
+        return fn.lower(params_structs, batch_structs)
+
+    # decode
+    dstep = make_decode_step(cfg)
+
+    def decode_step(params, tokens, cache):
+        with shard_ctx(rules, mesh):
+            return dstep(params, tokens, cache)
+
+    structs = input_structs(cfg, shape)
+    c_structs = structs["cache"]
+    cache_sh = _shardings(cache_axes(cfg, shape.global_batch, shape.seq_len),
+                          rules, mesh, c_structs)
+    tok_sh = NamedSharding(
+        mesh, spec_for(("batch", "seq"), rules, mesh, (shape.global_batch, 1)))
+    fn = jax.jit(decode_step, in_shardings=(params_sh, tok_sh, cache_sh),
+                 out_shardings=(repl, cache_sh),
+                 donate_argnums=(2,) if donate else ())
+    return fn.lower(params_structs, structs["tokens"], c_structs)
+
+
+def analyze_cell(cfg, shape_name: str, mesh) -> dict:
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape_name, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    hlo = compiled.as_text()
+    coll, coll_detail = collective_bytes(hlo)
+    out = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": list(mesh.devices.shape),
+        "chips": mesh_chips(mesh),
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "cost": cost_summary(compiled),
+        "memory": memory_summary(compiled),
+        "collective_bytes": coll,
+        "collective_detail": coll_detail,
+        "hlo_bytes": len(hlo),
+    }
+    return out
+
+
+def probe_cfgs(cfg):
+    """(L_small, L_big, cfg_small, cfg_big, unit_count_full): unrolled no-remat
+    variants for the linear FLOP fit.  Unit = layer (dense/moe/ssm), group
+    (hybrid), or enc+dec layer pair (enc-dec)."""
+    if cfg.hybrid is not None:
+        a = cfg.hybrid.attn_every
+        mk = lambda g: dataclasses.replace(cfg, n_layers=g * a, use_scan=False,
+                                           remat="none")
+        return 1, 2, mk(1), mk(2), cfg.n_layers // a
+    if cfg.enc_dec:
+        mk = lambda L: dataclasses.replace(cfg, n_layers=L, n_enc_layers=L,
+                                           use_scan=False, remat="none")
+        return 1, 2, mk(1), mk(2), cfg.n_layers
+    mk = lambda L: dataclasses.replace(cfg, n_layers=L, use_scan=False,
+                                       remat="none")
+    return 2, 4, mk(2), mk(4), cfg.n_layers
+
+
+def probe_cell(cfg, shape_name: str, mesh) -> dict:
+    """Linear-fit per-unit flops/bytes/collectives from unrolled compiles."""
+    n_small, n_big, cfg_small, cfg_big, units = probe_cfgs(cfg)
+    res = {}
+    for tag, c, n in (("small", cfg_small, n_small), ("big", cfg_big, n_big)):
+        lowered = lower_cell(c, shape_name, mesh, donate=False)
+        compiled = lowered.compile()
+        coll, _ = collective_bytes(compiled.as_text())
+        cost = cost_summary(compiled)
+        res[tag] = {"n": n, "flops": cost["flops"], "bytes": cost["bytes"],
+                    "coll": coll}
+    fit = {}
+    for key in ("flops", "bytes", "coll"):
+        per = (res["big"][key] - res["small"][key]) / (n_big - n_small)
+        base = res["small"][key] - n_small * per
+        fit[key] = {"per_unit": per, "base": base,
+                    "total": base + units * per}
+    fit["units"] = units
+    fit["raw"] = res
+    return fit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 2,4 (single) or 2,2,2 (multi)")
+    ap.add_argument("--probe", action="store_true",
+                    help="also compile unrolled L-probes (single-pod only)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = {}
+    if args.mesh in ("single", "both"):
+        if args.mesh_shape and args.mesh != "multi":
+            shp = tuple(int(x) for x in args.mesh_shape.split(","))
+            meshes["single"] = make_mesh(shp, ("data", "model")[:len(shp)])
+        else:
+            meshes["single"] = make_production_mesh(multi_pod=False)
+    if args.mesh in ("multi", "both"):
+        if args.mesh_shape and args.mesh == "multi":
+            shp = tuple(int(x) for x in args.mesh_shape.split(","))
+            meshes["multi"] = make_mesh(shp, ("pod", "data", "model"))
+        else:
+            meshes["multi"] = make_production_mesh(multi_pod=True)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        if args.shape != "all":
+            shapes = [s for s in args.shape.split(",") if s in shapes]
+        for shape_name in shapes:
+            for mesh_tag, mesh in meshes.items():
+                cell_id = f"{arch}__{shape_name}__{mesh_tag}"
+                path = outdir / f"{cell_id}.json"
+                if path.exists() and not args.force:
+                    n_skip += 1
+                    continue
+                print(f"=== {cell_id} ===", flush=True)
+                try:
+                    rec = analyze_cell(cfg, shape_name, mesh)
+                    if args.probe and mesh_tag == "single":
+                        rec["probe"] = probe_cell(cfg, shape_name, mesh)
+                    path.write_text(json.dumps(rec, indent=1))
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"flops={rec['cost']['flops']:.3e} "
+                          f"coll={rec['collective_bytes']:.3e}B", flush=True)
+                    n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    err = traceback.format_exc()
+                    (outdir / f"{cell_id}.FAILED").write_text(err)
+                    print(f"  FAILED:\n{err}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,77 @@
+"""Elastic re-mesh: restore a checkpoint onto a different mesh topology.
+
+When the control plane's allocator grows/shrinks a training job (or a node
+fails and the slice is rebuilt smaller), the data axis extent changes:
+(data=16, model=16) → (data=12, model=16).  Because every parameter's
+placement is derived from *logical* axis rules (repro/sharding), re-meshing
+is: build the new mesh → recompute NamedShardings from the same rules →
+CheckpointManager.restore(..., shardings=new) → rebuild the jitted step.
+Nothing about the model or step code changes.
+
+This module is also the programmatic surface the MLOps control plane calls:
+its scaling actions (core/scaling) emit ReMesh(data_axis=N) events which map
+1:1 onto `elastic_restore`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh
+from repro.models.steps import (
+    TrainState, make_train_step, params_axes_and_structs, train_state_axes,
+)
+from repro.optim.adamw import AdamWState
+from repro.sharding import TRAIN_RULES, shard_ctx, tree_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class ReMesh:
+    """A control-plane scaling action on a training job."""
+    data_axis: int
+    model_axis: int
+    pods: int = 1
+
+    def mesh(self):
+        if self.pods > 1:
+            return make_mesh((self.pods, self.data_axis, self.model_axis),
+                             ("pod", "data", "model"))
+        return make_mesh((self.data_axis, self.model_axis), ("data", "model"))
+
+
+def state_shardings(cfg, mesh, rules=TRAIN_RULES):
+    """NamedShardings for the full TrainState on ``mesh``."""
+    import jax.numpy as jnp
+    _, params_structs = params_axes_and_structs(cfg)
+    state_structs = TrainState(
+        params=params_structs,
+        opt_state=AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                            params_structs),
+            nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                            params_structs)),
+        step=jax.ShapeDtypeStruct((), jnp.int32))
+    return tree_shardings(train_state_axes(cfg), rules, mesh,
+                          shapes_tree=state_structs), state_structs
+
+
+def elastic_restore(ckpt_root: str, cfg, action: ReMesh, *, lr=3e-4,
+                    rules=TRAIN_RULES, step: int | None = None):
+    """→ (state on the new mesh, jitted train_step, mesh)."""
+    mesh = action.mesh()
+    shardings, structs = state_shardings(cfg, mesh, rules)
+    mgr = CheckpointManager(ckpt_root)
+    state, manifest = mgr.restore(structs, step=step, shardings=shardings)
+
+    step_fn, _ = make_train_step(cfg, lr=lr)
+
+    def sharded_step(st, batch):
+        with shard_ctx(rules, mesh):
+            return step_fn(st, batch)
+
+    jitted = jax.jit(sharded_step, in_shardings=(shardings, None),
+                     out_shardings=(shardings, None), donate_argnums=(0,))
+    return state, jitted, mesh

@@ -1,0 +1,137 @@
+"""Post-SPMD HLO analysis: collective wire-bytes and cost_analysis helpers.
+
+collective_bytes() parses ``compiled.as_text()`` (per-device, post-partition
+HLO) and estimates bytes moved over the interconnect per device for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+using ring-algorithm wire costs:
+
+  all-gather        (n-1)   × operand      (= (n-1)/n × result)
+  reduce-scatter    (n-1)/n × operand
+  all-reduce        2(n-1)/n × operand     (ring RS + AG)
+  all-to-all        (n-1)/n × operand
+  collective-permute  1      × operand
+
+Async pairs (…-start/…-done) are counted once, on the -start op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+\d*)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,n]<=[...] iota form: G groups of n
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        if first:
+            return max(len(first.split(",")), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str):
+    """→ (total wire bytes per device, per-op-kind breakdown dict).
+
+    Post-SPMD HLO prints operands as bare %names, so wire bytes are derived
+    from the RESULT shape and the group size n:
+      all-gather      operand = result/n  → wire = (n-1)/n · result
+      reduce-scatter  operand = n·result  → wire = (n-1) · result
+      all-reduce      operand = result    → wire = 2(n-1)/n · result
+      all-to-all      operand = result    → wire = (n-1)/n · result
+      collective-permute                  → wire = result
+    """
+    per_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    promoted_excess = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        result = _shape_bytes(m.group("result"))
+        if op == "collective-permute":
+            per_kind[op] += result
+            counts[op] += 1
+            continue
+        n = _group_size(line)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            wire = (n - 1) / n * result
+        elif op == "reduce-scatter":
+            wire = (n - 1) * result
+        elif op == "all-reduce":
+            wire = 2 * (n - 1) / n * result
+        else:  # all-to-all
+            wire = (n - 1) / n * result
+        # XLA:CPU promotes bf16 reductions to f32 on the wire
+        # (to_apply=…_promoted); TPU reduces native bf16.  Raw totals keep
+        # the promoted width (comparable across runs on this backend); the
+        # detail reports how much a TPU would shave off.
+        if "_promoted" in line and "f32[" in m.group("result"):
+            promoted_excess += wire / 2
+        per_kind[op] += wire
+        counts[op] += 1
+    total = float(sum(per_kind.values()))
+    return total, {"bytes": dict(per_kind), "counts": dict(counts),
+                   "tpu_corrected_total": total - promoted_excess}
+
+
+def cost_summary(compiled) -> dict:
+    """Extract flops / bytes from compiled.cost_analysis(), tolerating
+    backend differences in key naming."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"flops": 0.0, "bytes": 0.0, "error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return {"flops": flops, "bytes": byts}
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

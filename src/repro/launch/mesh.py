@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (smoke tests see 1 device; only dryrun.py forces
+512 host devices).
+
+Axes:
+  pod   — data parallelism across pods; gradient all-reduce crosses DCI,
+          which is why it is the *last* axis collectives are scheduled on
+          (launch/train.py hierarchical all-reduce).
+  data  — within-pod data parallelism / FSDP.
+  model — tensor / expert parallelism (highest-bandwidth ICI dimension).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: any (shape, axes) pair — used by launch/elastic.py to
+    re-mesh after node loss/gain and by tests for small device counts."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)

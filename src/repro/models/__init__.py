@@ -1,0 +1,21 @@
+from repro.models.config import (
+    HybridCfg,
+    ModelConfig,
+    MoECfg,
+    SHAPES,
+    ShapeCfg,
+    SSMCfg,
+    applicable_shapes,
+)
+from repro.models.transformer import LM
+
+__all__ = [
+    "ModelConfig",
+    "MoECfg",
+    "SSMCfg",
+    "HybridCfg",
+    "ShapeCfg",
+    "SHAPES",
+    "applicable_shapes",
+    "LM",
+]

@@ -1,0 +1,423 @@
+"""GQA attention with RoPE/M-RoPE, causal/sliding-window/bidirectional masks,
+cross-attention, and a decode path over a preallocated KV cache.
+
+The jnp reference path is what the CPU dry-run lowers; when
+``cfg.use_pallas`` the prefill/train path dispatches to the Pallas flash
+kernel and decode to the split-K decode kernel (kernels/ops.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import Linear
+from repro.sharding import constrain, current_ctx, no_shard_ctx
+from repro.models.rotary import apply_rope
+
+NEG_INF = -1e9
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window=None, valid_upto=None):
+    """Additive (…, S_q, S_k) bias from position comparisons.
+
+    q_pos: (B, S_q) int32; k_pos: (S_k,) int32 broadcast over batch.
+    valid_upto: (B,) or scalar — keys at positions > valid_upto are masked
+    (decode over a partially-filled cache)."""
+    q = q_pos[:, :, None].astype(jnp.int32)
+    k = k_pos[None, None, :].astype(jnp.int32)
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    if valid_upto is not None:
+        v = jnp.asarray(valid_upto, jnp.int32)
+        v = v.reshape(-1, 1, 1) if v.ndim else v[None, None, None]
+        ok &= k <= v
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa_ref(q, k, v, bias=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) — grouped-query attention, fp32
+    softmax.  bias: (B, Sq, Sk) additive or None."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+class Attention:
+    """Projection weights + the attention math.  ``d_in``/``d_out`` let the
+    Zamba2 shared block attend over concat(hidden, embed) (2·d_model)."""
+
+    @staticmethod
+    def init(key, cfg, *, d_in=None, d_out=None):
+        d_in = d_in or cfg.d_model
+        d_out = d_out or cfg.d_model
+        hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+        kq, kk, kv, ko = jax.random.split(key, 4)
+        pd = cfg.pdtype
+        params = {
+            "wq": Linear.init(kq, d_in, H * hd, use_bias=cfg.qkv_bias, param_dtype=pd),
+            "wk": Linear.init(kk, d_in, KV * hd, use_bias=cfg.qkv_bias, param_dtype=pd),
+            "wv": Linear.init(kv, d_in, KV * hd, use_bias=cfg.qkv_bias, param_dtype=pd),
+            "wo": Linear.init(ko, H * hd, d_out, use_bias=False, param_dtype=pd),
+        }
+        axes = {
+            "wq": {"w": ("embed", "heads")},
+            "wk": {"w": ("embed", "kv_heads")},
+            "wv": {"w": ("embed", "kv_heads")},
+            "wo": {"w": ("heads", "embed")},
+        }
+        if cfg.qkv_bias:
+            axes["wq"]["b"] = ("heads",)
+            axes["wk"]["b"] = ("kv_heads",)
+            axes["wv"]["b"] = ("kv_heads",)
+        return params, axes
+
+    @staticmethod
+    def qkv(params, x, x_kv, cfg, *, pad_hp=None):
+        """pad_hp: project q through per-group zero-padded wq columns so q
+        leaves the matmul with Hp heads ALREADY aligned to the mesh — padding
+        the activation after a misaligned projection re-gathers ~GiB of q
+        (and its gradients) per layer (EXPERIMENTS.md §Perf C5)."""
+        B, S = x.shape[:2]
+        hd = cfg.hd
+        dt = cfg.cdtype
+        if pad_hp is not None:
+            KV = cfg.n_kv_heads
+            G, Gp = cfg.n_heads // KV, pad_hp // KV
+            wq = params["wq"]["w"]
+            wq = wq.reshape(-1, KV, G, hd)
+            wq = jnp.pad(wq, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+            q = x.astype(dt) @ wq.reshape(-1, KV * Gp * hd).astype(dt)
+            if "b" in params["wq"]:
+                b = params["wq"]["b"].reshape(KV, G, hd)
+                b = jnp.pad(b, ((0, 0), (0, Gp - G), (0, 0))).reshape(-1)
+                q = q + b.astype(q.dtype)
+            q = q.reshape(B, S, pad_hp, hd)
+        else:
+            q = Linear.apply(params["wq"], x, dtype=dt).reshape(
+                B, S, cfg.n_heads, hd)
+        Skv = x_kv.shape[1]
+        k = Linear.apply(params["wk"], x_kv, dtype=dt).reshape(B, Skv, cfg.n_kv_heads, hd)
+        v = Linear.apply(params["wv"], x_kv, dtype=dt).reshape(B, Skv, cfg.n_kv_heads, hd)
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "kv_heads", None))
+        v = constrain(v, ("batch", None, "kv_heads", None))
+        return q, k, v
+
+    # ---------------- full-sequence (train / prefill / encoder) ----------------
+
+    @staticmethod
+    def apply(params, x, cfg, *, angles=None, causal=True, window=None,
+              cross_kv=None, return_kv=False):
+        """x: (B, S, d_in).  cross_kv: (k, v) precomputed for cross-attention
+        (angles are not applied to cross K)."""
+        B, S = x.shape[:2]
+        if cross_kv is not None:
+            q = Linear.apply(params["wq"], x, dtype=cfg.cdtype)
+            q = q.reshape(B, S, cfg.n_heads, cfg.hd)
+            if angles is not None:
+                q = apply_rope(q, angles)
+            k, v = cross_kv
+            out = Attention._sdpa_masked(q, k, v, causal=False, window=None)
+            kv = None
+        else:
+            pad_hp = None
+            if not cfg.use_pallas:
+                info = Attention._padded_heads(
+                    (0, 0, cfg.n_heads, cfg.hd), cfg.n_kv_heads)
+                if info is not None:
+                    pad_hp = info[0]
+            q, k, v = Attention.qkv(params, x, x, cfg, pad_hp=pad_hp)
+            if angles is not None:
+                q = apply_rope(q, angles)
+                k = apply_rope(k, angles)
+            if cfg.use_pallas and causal and cross_kv is None:
+                from repro.kernels import ops as kops
+                out = kops.flash_attention(q, k, v, causal=True, window=window)
+            else:
+                out = Attention._sdpa_masked(q, k, v, causal=causal,
+                                             window=window)
+            kv = (k, v)
+            if pad_hp is not None:
+                KV = cfg.n_kv_heads
+                G, Gp = cfg.n_heads // KV, pad_hp // KV
+                w_eff = Attention._wo_padded(params, KV, G, Gp, cfg.hd)
+                out = constrain(out, ("batch", None, "heads", None))
+                y = out.reshape(B, S, -1) @ w_eff.astype(cfg.cdtype)
+                y = constrain(y, ("batch", None, "embed_act"))
+                return (y, kv) if return_kv else y
+        out = constrain(out, ("batch", None, "heads", None))
+        y = Linear.apply(params["wo"], out.reshape(B, S, -1), dtype=cfg.cdtype)
+        y = constrain(y, ("batch", None, "embed_act"))
+        return (y, kv) if return_kv else y
+
+    # ---------------- chunked (flash-style) masked attention --------------
+    #
+    # The naive jnp path materializes the (B, H, S, S) score tensor — at 32k
+    # prefill that is the whole memory term of every train/prefill cell.
+    # Chunking the q dim with lax.map keeps only a (B, H, chunk, S_k) working
+    # set live, which is exactly the HBM-traffic shape of the Pallas flash
+    # kernel on TPU (scores never round-trip HBM).  Numerics are identical to
+    # the full path (per-chunk full softmax, not an online approximation).
+
+    CHUNK_Q = 1024
+
+    @staticmethod
+    def _sdpa_masked(q, k, v, *, causal, window):
+        B, S, H, hd = q.shape
+        chunk = Attention.CHUNK_Q
+        if S > chunk and S % chunk == 0:
+            return Attention._sdpa_chunked(q, k, v, causal=causal,
+                                           window=window, chunk=chunk)
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        bias = (_mask_bias(q_pos, k_pos, causal=causal, window=window)
+                if (causal or window is not None) else None)
+        return sdpa_ref(q, k, v, bias)
+
+    @staticmethod
+    def _sdpa_chunked(q, k, v, *, causal, window, chunk):
+        B, S, H, hd = q.shape
+        Sk = k.shape[1]
+        n = S // chunk
+        qc = jnp.moveaxis(q.reshape(B, n, chunk, H, hd), 1, 0)
+        k_pos = jnp.arange(Sk, dtype=jnp.int32)
+
+        def one(args):
+            i, qi = args
+            if causal or window is not None:
+                q_pos = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+                bias = _mask_bias(jnp.broadcast_to(q_pos[None], (B, chunk)),
+                                  k_pos, causal=causal, window=window)
+            else:
+                bias = None
+            return sdpa_ref(qi, k, v, bias)
+
+        outs = jax.lax.map(one, (jnp.arange(n, dtype=jnp.int32), qc))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+    # ---------------- padded-head sharding ------------------------------
+    #
+    # When n_heads does not divide the "model" axis (qwen2.5-14b: 40 heads on
+    # a 16-wide axis), the rule table falls back to replication and every
+    # model rank computes the FULL attention — measured 3.3× total-FLOP
+    # inflation on train_4k (EXPERIMENTS.md §Perf).  Fix: pad the q heads
+    # *per kv-group* up to the next count divisible by both the mesh axis
+    # and n_kv_heads, shard the padded heads, and slice the pad away before
+    # the output projection.  Pad waste (48/40 = 20% of attention FLOPs)
+    # replaces 16× replication.
+
+    @staticmethod
+    def _padded_heads(q_shape, kv_heads):
+        """→ (Hp, G, Gp) when padding applies under the current ctx, else
+        None.  Hp is the smallest head count ≥ H divisible by both the
+        "model" axis and n_kv_heads."""
+        ctx = current_ctx()
+        if ctx is None:
+            return None
+        _, mesh = ctx
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = sizes.get("model", 1)
+        H = q_shape[2]
+        if m <= 1 or H % m == 0 or kv_heads <= 0 or H % kv_heads != 0:
+            return None
+        Hp = H
+        while Hp % m or Hp % kv_heads:
+            Hp += kv_heads
+        return Hp, H // kv_heads, Hp // kv_heads
+
+    @staticmethod
+    def _wo_padded(params, kv_heads, G, Gp, hd):
+        """wo rows re-laid to match Hp padded heads: (KV·Gp·hd, d) with zero
+        rows in the pad positions — padded-head outputs contribute exactly 0."""
+        w = params["wo"]["w"]                   # (H·hd, d)
+        d_out = w.shape[-1]
+        w4 = w.reshape(kv_heads, G, hd, d_out)
+        w4 = jnp.pad(w4, ((0, 0), (0, Gp - G), (0, 0), (0, 0)))
+        return w4.reshape(kv_heads * Gp * hd, d_out)
+
+    # ---------------- single-token decode over a KV cache ----------------
+    #
+    # The cache is a RING BUFFER of Smax slots.  For full-attention archs
+    # Smax = seq_len and slot == absolute position; for sliding-window archs
+    # Smax = window, so the cache (and therefore long_500k decode memory) is
+    # bounded by the window — keys carry RoPE applied at their absolute
+    # position before caching, so slot order is irrelevant (attention is
+    # permutation-invariant over keys) and the only mask is slot validity.
+
+    @staticmethod
+    def decode(params, x, cfg, cache, index, *, angles=None, cross_kv=None):
+        """x: (B, 1, d_in); cache: {"k","v"}: (B, Smax, KV, hd); index: scalar
+        int32 — absolute position being written.  Returns (y, new_cache)."""
+        B = x.shape[0]
+        if cross_kv is not None:
+            q = Linear.apply(params["wq"], x, dtype=cfg.cdtype)
+            q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
+            if angles is not None:
+                q = apply_rope(q, angles)
+            out = sdpa_ref(q, cross_kv[0], cross_kv[1], None)
+            y = Linear.apply(params["wo"], out.reshape(B, 1, -1), dtype=cfg.cdtype)
+            return y, cache
+        q, k, v = Attention.qkv(params, x, x, cfg)
+        if angles is not None:
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+        Smax = cache["k"].shape[1]
+        sk = Attention._splitk_ctx(Smax)
+        if sk is not None:
+            out, new_cache = Attention._decode_splitk(q, k, v, cache, index,
+                                                      *sk)
+        else:
+            slot = jax.lax.rem(index, Smax)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+            k_cache = constrain(k_cache,
+                                ("batch", "cache_seq", "kv_heads", None))
+            v_cache = constrain(v_cache,
+                                ("batch", "cache_seq", "kv_heads", None))
+            if cfg.use_pallas:
+                from repro.kernels import ops as kops
+                out = kops.decode_attention(q, k_cache, v_cache, index)
+            else:
+                # valid slots: all <= index (ring: once wrapped, all valid)
+                slots = jnp.arange(Smax, dtype=jnp.int32)
+                bias = jnp.where(slots[None, None, :] <= index, 0.0, NEG_INF
+                                 ).astype(jnp.float32)
+                bias = jnp.broadcast_to(bias, (B, 1, Smax))
+                out = sdpa_ref(q, k_cache, v_cache, bias)
+            new_cache = {"k": k_cache, "v": v_cache}
+        y = Linear.apply(params["wo"], out.reshape(B, 1, -1), dtype=cfg.cdtype)
+        y = constrain(y, ("batch", None, "embed_act"))
+        return y, new_cache
+
+    # ---------------- split-K decode (flash-decoding over the model axis) --
+    #
+    # With the KV cache sequence-sharded over "model" (SERVE_RULES — required
+    # for the big decode cells to fit HBM), letting the SPMD partitioner
+    # handle the ring-buffer update + attention forces replicate-then-
+    # repartition of the whole cache every layer (~3 cache-sized transfers,
+    # measured on qwen2-72b decode_32k — EXPERIMENTS.md §Perf).  Instead:
+    # each model rank updates ITS slot locally and computes a partial
+    # attention over its sequence block; partials combine with the
+    # log-sum-exp trick — pmax(m) + psum(l·scale) + psum(o·scale), a few
+    # hundred KB per layer instead of hundreds of MB.
+
+    @staticmethod
+    def _splitk_ctx(Smax: int):
+        """→ (mesh, batch_axes, m) when the split-K path applies, else None."""
+        ctx = current_ctx()
+        if ctx is None:
+            return None
+        rules, mesh = ctx
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = sizes.get("model", 1)
+        if m <= 1 or "model" not in rules.get("cache_seq"):
+            return None
+        if Smax % m != 0:
+            return None
+        batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+        return mesh, batch_axes, m
+
+    @staticmethod
+    def _decode_splitk(q, k_new, v_new, cache, index, mesh, batch_axes, m):
+        B, _, H, hd = q.shape
+        Smax, KV = cache["k"].shape[1], cache["k"].shape[2]
+        bsh = 1
+        for a in batch_axes:
+            bsh *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        if B % max(bsh, 1) != 0:
+            bsh = 1
+            batch_axes = ()
+        S_loc = Smax // m
+        bspec = (batch_axes if len(batch_axes) != 1 else batch_axes[0]) \
+            if batch_axes else None
+
+        def body(qb, kb, vb, k_blk, v_blk, idx):
+            with no_shard_ctx():
+                rank = jax.lax.axis_index("model")
+                slot = jax.lax.rem(idx, Smax)
+                ls = slot - rank * S_loc
+                in_rng = (ls >= 0) & (ls < S_loc)
+                lsc = jnp.clip(ls, 0, S_loc - 1)
+                # in-place slot write: non-owner ranks rewrite the existing
+                # row (a (B,1,KV,hd) temp) instead of select-copying the
+                # whole cache block — keeps the update donation-friendly
+                old_k = jax.lax.dynamic_slice_in_dim(k_blk, lsc, 1, axis=1)
+                old_v = jax.lax.dynamic_slice_in_dim(v_blk, lsc, 1, axis=1)
+                new_k = jnp.where(in_rng, kb[:, None].astype(k_blk.dtype),
+                                  old_k)
+                new_v = jnp.where(in_rng, vb[:, None].astype(v_blk.dtype),
+                                  old_v)
+                k_blk = jax.lax.dynamic_update_slice_in_dim(k_blk, new_k,
+                                                            lsc, axis=1)
+                v_blk = jax.lax.dynamic_update_slice_in_dim(v_blk, new_v,
+                                                            lsc, axis=1)
+                # partial attention over my block, fp32 accumulation
+                Bl = qb.shape[0]
+                G = H // KV
+                qg = qb.reshape(Bl, KV, G, hd)
+                s = jnp.einsum("bkgh,btkh->bkgt", qg,
+                               k_blk.astype(qb.dtype),
+                               preferred_element_type=jnp.float32
+                               ) * (hd ** -0.5)
+                pos = rank * S_loc + jnp.arange(S_loc, dtype=jnp.int32)
+                s = s + jnp.where(pos <= idx, 0.0, NEG_INF
+                                  )[None, None, None, :]
+                m_loc = jnp.max(s, axis=-1)                     # (B, KV, G)
+                m_glob = jax.lax.pmax(m_loc, "model")
+                p = jnp.exp(s - m_glob[..., None])
+                l_loc = jnp.sum(p, axis=-1)
+                o_loc = jnp.einsum("bkgt,btkh->bkgh",
+                                   p.astype(v_blk.dtype), v_blk,
+                                   preferred_element_type=jnp.float32)
+                l_glob = jax.lax.psum(l_loc, "model")
+                o_glob = jax.lax.psum(o_loc, "model")
+                out = (o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+                       ).reshape(Bl, 1, H, hd).astype(qb.dtype)
+                return out, k_blk, v_blk
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(bspec, None, None),            # q (B,H,hd)
+                      P(bspec, None, None),            # k_new (B,KV,hd)
+                      P(bspec, None, None),            # v_new (B,KV,hd)
+                      P(bspec, "model", None, None),   # k cache block
+                      P(bspec, "model", None, None),   # v cache block
+                      P()),                            # index
+            out_specs=(P(bspec, None, None, None),
+                       P(bspec, "model", None, None),
+                       P(bspec, "model", None, None)),
+            check_vma=False)
+        out, k_cache, v_cache = fn(q[:, 0], k_new[:, 0, :, :],
+                                   v_new[:, 0, :, :],
+                                   cache["k"], cache["v"],
+                                   jnp.asarray(index, jnp.int32))
+        return out, {"k": k_cache, "v": v_cache}
+
+    @staticmethod
+    def cache_len(cfg, max_seq: int) -> int:
+        if cfg.sliding_window is not None:
+            return min(max_seq, cfg.sliding_window)
+        return max_seq
+
+    @staticmethod
+    def cache_shape(cfg, batch: int, max_seq: int):
+        Smax = Attention.cache_len(cfg, max_seq)
+        kv_shape = (batch, Smax, cfg.n_kv_heads, cfg.hd)
+        axes = ("batch", "cache_seq", "kv_heads", None)
+        return {"k": (kv_shape, axes), "v": (kv_shape, axes)}

@@ -1,0 +1,258 @@
+"""Layer blocks per architecture family.
+
+Every block exposes:
+  init(key, cfg) -> (params, axes)            # axes mirrors params
+  apply(params, x, cfg, **kw) -> y [, aux]    # full-sequence
+  decode(params, x, cfg, state, index, **kw)  # single-token, threaded state
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Linear, RMSNorm, LayerNorm
+from repro.sharding import constrain
+from repro.models.attention import Attention
+from repro.models.mlp import SwiGLU
+from repro.models.moe import MoE
+from repro.models.mamba import Mamba1, Mamba2
+
+
+def _norm_cls(cfg):
+    return LayerNorm if cfg.family == "audio" else RMSNorm
+
+
+class DecoderBlock:
+    """Pre-norm attention + (SwiGLU | MoE) — dense, moe, and vlm families."""
+
+    @staticmethod
+    def init(key, cfg):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        norm = _norm_cls(cfg)
+        attn_p, attn_ax = Attention.init(k1, cfg)
+        params = {
+            "ln1": norm.init(k2, cfg.d_model, param_dtype=cfg.pdtype),
+            "attn": attn_p,
+            "ln2": norm.init(k3, cfg.d_model, param_dtype=cfg.pdtype),
+        }
+        axes = {
+            "ln1": jax.tree.map(lambda _: ("embed_act",), params["ln1"]),
+            "attn": attn_ax,
+            "ln2": jax.tree.map(lambda _: ("embed_act",), params["ln2"]),
+        }
+        if cfg.moe is not None:
+            params["moe"], axes["moe"] = MoE.init(k4, cfg.d_model, cfg.moe,
+                                                  param_dtype=cfg.pdtype)
+        else:
+            params["mlp"], axes["mlp"] = SwiGLU.init(k4, cfg.d_model, cfg.d_ff,
+                                                     param_dtype=cfg.pdtype)
+        return params, axes
+
+    @staticmethod
+    def _ffn(params, x, cfg):
+        if cfg.moe is not None:
+            return MoE.apply(params["moe"], x, cfg.moe, dtype=cfg.cdtype)
+        return SwiGLU.apply(params["mlp"], x, dtype=cfg.cdtype), None
+
+    @staticmethod
+    def apply(params, x, cfg, *, angles=None, causal=True):
+        norm = _norm_cls(cfg)
+        h = norm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        h = Attention.apply(params["attn"], h, cfg, angles=angles, causal=causal,
+                            window=cfg.sliding_window)
+        x = x + h
+        h = norm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        h, aux = DecoderBlock._ffn(params, h, cfg)
+        return x + h, aux
+
+    @staticmethod
+    def decode(params, x, cfg, cache, index, *, angles=None):
+        norm = _norm_cls(cfg)
+        h = norm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        h, cache = Attention.decode(params["attn"], h, cfg, cache, index,
+                                    angles=angles)
+        x = x + h
+        h = norm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        h, _ = DecoderBlock._ffn(params, h, cfg)
+        return x + h, cache
+
+
+class SSMBlock:
+    """Pre-norm Mamba block — ssm family and the zamba2 backbone."""
+
+    @staticmethod
+    def _impl(cfg):
+        return Mamba1 if cfg.ssm.version == 1 else Mamba2
+
+    @staticmethod
+    def init(key, cfg):
+        k1, k2 = jax.random.split(key)
+        m_p, m_ax = SSMBlock._impl(cfg).init(k1, cfg)
+        params = {"ln": RMSNorm.init(k2, cfg.d_model, param_dtype=cfg.pdtype),
+                  "mamba": m_p}
+        axes = {"ln": {"scale": ("embed_act",)}, "mamba": m_ax}
+        return params, axes
+
+    @staticmethod
+    def apply(params, x, cfg):
+        h = RMSNorm.apply(params["ln"], x, eps=cfg.norm_eps)
+        return x + SSMBlock._impl(cfg).apply(params["mamba"], h, cfg), None
+
+    @staticmethod
+    def decode(params, x, cfg, state, index):
+        del index  # SSM state is position-free
+        h = RMSNorm.apply(params["ln"], x, eps=cfg.norm_eps)
+        y, state = SSMBlock._impl(cfg).decode(params["mamba"], h, cfg, state)
+        return x + y, state
+
+    @staticmethod
+    def state_shape(cfg, batch):
+        return SSMBlock._impl(cfg).state_shape(cfg, batch)
+
+
+class SharedAttnBlock:
+    """Zamba2 shared transformer block: attends over concat(hidden, embed₀)
+    (2·d_model); attn + SwiGLU at 2d; a per-application down-projection
+    (2d → d) is added to the residual stream (down projections are distinct
+    per application, the attn/MLP weights are shared round-robin)."""
+
+    @staticmethod
+    def init(key, cfg):
+        d2 = 2 * cfg.d_model
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        attn_p, attn_ax = Attention.init(k1, cfg, d_in=d2, d_out=d2)
+        mlp_p, mlp_ax = SwiGLU.init(k2, d2, cfg.d_ff, param_dtype=cfg.pdtype,
+                                    d_out=d2)
+        params = {
+            "ln1": RMSNorm.init(k3, d2, param_dtype=cfg.pdtype),
+            "attn": attn_p,
+            "ln2": RMSNorm.init(k4, d2, param_dtype=cfg.pdtype),
+            "mlp": mlp_p,
+        }
+        axes = {
+            "ln1": {"scale": ("embed_act",)},
+            "attn": attn_ax,
+            "ln2": {"scale": ("embed_act",)},
+            "mlp": mlp_ax,
+        }
+        return params, axes
+
+    @staticmethod
+    def apply(params, x2, cfg, *, angles=None):
+        """x2: (B, S, 2d) → (B, S, 2d)."""
+        h = RMSNorm.apply(params["ln1"], x2, eps=cfg.norm_eps)
+        h = Attention.apply(params["attn"], h, cfg, angles=angles, causal=True)
+        x2 = x2 + h
+        h = RMSNorm.apply(params["ln2"], x2, eps=cfg.norm_eps)
+        h = SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
+        return x2 + h
+
+    @staticmethod
+    def decode(params, x2, cfg, cache, index, *, angles=None):
+        h = RMSNorm.apply(params["ln1"], x2, eps=cfg.norm_eps)
+        h, cache = Attention.decode(params["attn"], h, cfg, cache, index,
+                                    angles=angles)
+        x2 = x2 + h
+        h = RMSNorm.apply(params["ln2"], x2, eps=cfg.norm_eps)
+        h = SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
+        return x2 + h, cache
+
+
+class EncoderBlock:
+    """Bidirectional attention + SwiGLU (seamless encoder; LayerNorm)."""
+
+    @staticmethod
+    def init(key, cfg):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        attn_p, attn_ax = Attention.init(k1, cfg)
+        mlp_p, mlp_ax = SwiGLU.init(k2, cfg.d_model, cfg.d_ff,
+                                    param_dtype=cfg.pdtype)
+        params = {
+            "ln1": LayerNorm.init(k3, cfg.d_model, param_dtype=cfg.pdtype),
+            "attn": attn_p,
+            "ln2": LayerNorm.init(k4, cfg.d_model, param_dtype=cfg.pdtype),
+            "mlp": mlp_p,
+        }
+        axes = {
+            "ln1": jax.tree.map(lambda _: ("embed_act",), params["ln1"]),
+            "attn": attn_ax,
+            "ln2": jax.tree.map(lambda _: ("embed_act",), params["ln2"]),
+            "mlp": mlp_ax,
+        }
+        return params, axes
+
+    @staticmethod
+    def apply(params, x, cfg, *, angles=None):
+        h = LayerNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        h = Attention.apply(params["attn"], h, cfg, angles=angles, causal=False)
+        x = x + h
+        h = LayerNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        return x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
+
+
+class CrossDecoderBlock:
+    """Causal self-attn + cross-attn + SwiGLU (seamless decoder)."""
+
+    @staticmethod
+    def init(key, cfg):
+        ks = jax.random.split(key, 6)
+        self_p, self_ax = Attention.init(ks[0], cfg)
+        cross_p, cross_ax = Attention.init(ks[1], cfg)
+        mlp_p, mlp_ax = SwiGLU.init(ks[2], cfg.d_model, cfg.d_ff,
+                                    param_dtype=cfg.pdtype)
+        params = {
+            "ln1": LayerNorm.init(ks[3], cfg.d_model, param_dtype=cfg.pdtype),
+            "self_attn": self_p,
+            "ln2": LayerNorm.init(ks[4], cfg.d_model, param_dtype=cfg.pdtype),
+            "cross_attn": cross_p,
+            "ln3": LayerNorm.init(ks[5], cfg.d_model, param_dtype=cfg.pdtype),
+            "mlp": mlp_p,
+        }
+        ln_ax = lambda p: jax.tree.map(lambda _: ("embed_act",), p)
+        axes = {
+            "ln1": ln_ax(params["ln1"]), "self_attn": self_ax,
+            "ln2": ln_ax(params["ln2"]), "cross_attn": cross_ax,
+            "ln3": ln_ax(params["ln3"]), "mlp": mlp_ax,
+        }
+        return params, axes
+
+    @staticmethod
+    def cross_kv(params, enc_out, cfg):
+        """Precompute cross K/V from encoder output: (B, S_enc, KV, hd)."""
+        B, Se = enc_out.shape[:2]
+        k = Linear.apply(params["cross_attn"]["wk"], enc_out, dtype=cfg.cdtype)
+        v = Linear.apply(params["cross_attn"]["wv"], enc_out, dtype=cfg.cdtype)
+        k = k.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+        k = constrain(k, ("batch", "enc_seq", "kv_heads", None))
+        v = constrain(v, ("batch", "enc_seq", "kv_heads", None))
+        return k, v
+
+    @staticmethod
+    def apply(params, x, cfg, *, enc_out, angles=None):
+        h = LayerNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        h = Attention.apply(params["self_attn"], h, cfg, angles=angles,
+                            causal=True)
+        x = x + h
+        h = LayerNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        kv = CrossDecoderBlock.cross_kv(params, enc_out, cfg)
+        h = Attention.apply(params["cross_attn"], h, cfg, cross_kv=kv,
+                            causal=False)
+        x = x + h
+        h = LayerNorm.apply(params["ln3"], x, eps=cfg.norm_eps)
+        return x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
+
+    @staticmethod
+    def decode(params, x, cfg, state, index, *, angles=None):
+        """state = {"self": kv-cache, "cross": precomputed (k, v)}."""
+        h = LayerNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
+        h, self_cache = Attention.decode(params["self_attn"], h, cfg,
+                                         state["self"], index, angles=angles)
+        x = x + h
+        h = LayerNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
+        h, _ = Attention.decode(params["cross_attn"], h, cfg, None, index,
+                                cross_kv=(state["cross"]["k"], state["cross"]["v"]))
+        x = x + h
+        h = LayerNorm.apply(params["ln3"], x, eps=cfg.norm_eps)
+        x = x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
+        return x, {"self": self_cache, "cross": state["cross"]}

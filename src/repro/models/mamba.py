@@ -1,0 +1,271 @@
+"""Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2) state-space blocks.
+
+Full-sequence paths run a jax.lax.scan over time with a small carried state —
+this is the memory-sane lowering used by the CPU dry-run (HLO stays compact;
+the scan body is counted once by cost_analysis, an ≤5% FLOP undercount vs the
+projection matmuls that is corrected analytically in the roofline harness —
+see EXPERIMENTS.md §Roofline).  The TPU performance path is the chunked SSD
+Pallas kernel (kernels/ssm_scan.py), selected with cfg.use_pallas.
+
+Decode paths are single-step recurrences over (ssm_state, conv_state) — O(1)
+in sequence length, which is what makes long_500k runnable for the SSM and
+hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Linear, RMSNorm, Conv1D
+from repro.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective scan; per-(channel, state) decay)
+# ---------------------------------------------------------------------------
+
+class Mamba1:
+    @staticmethod
+    def init(key, cfg: ModelConfig):
+        di, N, R = cfg.d_inner, cfg.ssm.d_state, cfg.dt_rank
+        k = cfg.ssm.d_conv
+        pd = cfg.pdtype
+        keys = jax.random.split(key, 6)
+        params = {
+            "in_proj": Linear.init(keys[0], cfg.d_model, 2 * di, use_bias=False,
+                                   param_dtype=pd),
+            "conv": Conv1D.init(keys[1], di, di, k, param_dtype=pd, groups=di),
+            "x_proj": Linear.init(keys[2], di, R + 2 * N, use_bias=False,
+                                  param_dtype=pd),
+            "dt_proj": Linear.init(keys[3], R, di, use_bias=True, param_dtype=pd),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(pd),
+            "D": jnp.ones((di,), pd),
+            "out_proj": Linear.init(keys[4], di, cfg.d_model, use_bias=False,
+                                    param_dtype=pd),
+        }
+        axes = {
+            "in_proj": {"w": ("embed", "d_inner")},
+            "conv": {"w": (None, None, "d_inner"), "b": ("d_inner",)},
+            "x_proj": {"w": ("d_inner", None)},
+            "dt_proj": {"w": (None, "d_inner"), "b": ("d_inner",)},
+            "A_log": ("d_inner", "d_state"),
+            "D": ("d_inner",),
+            "out_proj": {"w": ("d_inner", "embed")},
+        }
+        return params, axes
+
+    @staticmethod
+    def _dbc(params, x_conv, cfg):
+        """x_conv: (..., di) → dt (..., di) fp32, B/C (..., N) fp32."""
+        N, R = cfg.ssm.d_state, cfg.dt_rank
+        dbc = Linear.apply(params["x_proj"], x_conv, dtype=cfg.cdtype)
+        dt_r, Bc, Cc = jnp.split(dbc.astype(jnp.float32), [R, R + N], axis=-1)
+        dt = _softplus(Linear.apply(params["dt_proj"], dt_r))
+        return dt.astype(jnp.float32), Bc, Cc
+
+    @staticmethod
+    def apply(params, x, cfg: ModelConfig):
+        """x: (B, L, d) → y: (B, L, d)."""
+        Bsz, L, _ = x.shape
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        xz = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        x_in, z = jnp.split(xz, 2, axis=-1)
+        x_in = constrain(x_in, ("batch", None, "d_inner"))
+        x_conv = jax.nn.silu(Conv1D.apply(params["conv"], x_in, causal=True,
+                                          groups=di, dtype=cfg.cdtype))
+        dt, Bc, Cc = Mamba1._dbc(params, x_conv, cfg)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (di, N)
+        xf = x_conv.astype(jnp.float32)
+
+        def step(h, inp):
+            dt_t, x_t, B_t, C_t = inp                                # (B,di),(B,di),(B,N),(B,N)
+            decay = jnp.exp(dt_t[..., None] * A[None])               # (B, di, N)
+            h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+        xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(xf, 1, 0),
+              jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+        _, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1) + xf * params["D"].astype(jnp.float32)[None, None]
+        y = (y.astype(cfg.cdtype)) * jax.nn.silu(z)
+        y = constrain(y, ("batch", None, "d_inner"))
+        out = Linear.apply(params["out_proj"], y, dtype=cfg.cdtype)
+        return constrain(out, ("batch", None, "embed_act"))
+
+    @staticmethod
+    def decode(params, x, cfg: ModelConfig, state):
+        """x: (B, 1, d); state = {"h": (B, di, N) fp32,
+        "conv": (B, d_conv-1, di)} → (y, new_state)."""
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        xz = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        x_in, z = jnp.split(xz, 2, axis=-1)                          # (B,1,di)
+        window = jnp.concatenate([state["conv"], x_in], axis=1)      # (B,k,di)
+        w = params["conv"]["w"].astype(x_in.dtype)                   # (k,1,di)
+        xc = jnp.sum(window * jnp.moveaxis(w, 1, 0), axis=1, keepdims=True)
+        if "b" in params["conv"]:
+            xc = xc + params["conv"]["b"].astype(xc.dtype)
+        x_conv = jax.nn.silu(xc)                                     # (B,1,di)
+        dt, Bc, Cc = Mamba1._dbc(params, x_conv, cfg)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        dt_t, x_t = dt[:, 0], x_conv[:, 0].astype(jnp.float32)
+        decay = jnp.exp(dt_t[..., None] * A[None])
+        h = decay * state["h"] + (dt_t * x_t)[..., None] * Bc[:, 0][:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])
+        y = y + x_t * params["D"].astype(jnp.float32)[None]
+        y = (y[:, None].astype(cfg.cdtype)) * jax.nn.silu(z)
+        out = Linear.apply(params["out_proj"], y, dtype=cfg.cdtype)
+        new_state = {"h": h, "conv": window[:, 1:]}
+        return out, new_state
+
+    @staticmethod
+    def state_shape(cfg: ModelConfig, batch: int):
+        di, N, k = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+        return {
+            "h": ((batch, di, N), jnp.float32, ("batch", "d_inner", None)),
+            "conv": ((batch, k - 1, di), cfg.cdtype, ("batch", None, "d_inner")),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (scalar per-head decay; MXU-friendly chunked form in the kernel)
+# ---------------------------------------------------------------------------
+
+class Mamba2:
+    @staticmethod
+    def init(key, cfg: ModelConfig):
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        H, G = cfg.ssm_heads, cfg.ssm.n_groups
+        k = cfg.ssm.d_conv
+        conv_ch = di + 2 * G * N
+        pd = cfg.pdtype
+        keys = jax.random.split(key, 4)
+        d_in_proj = 2 * di + 2 * G * N + H
+        params = {
+            "in_proj": Linear.init(keys[0], cfg.d_model, d_in_proj,
+                                   use_bias=False, param_dtype=pd),
+            "conv": Conv1D.init(keys[1], conv_ch, conv_ch, k, param_dtype=pd,
+                                groups=conv_ch),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pd),
+            "dt_bias": jnp.zeros((H,), pd),
+            "D": jnp.ones((H,), pd),
+            "norm": RMSNorm.init(keys[2], di, param_dtype=pd),
+            "out_proj": Linear.init(keys[3], di, cfg.d_model, use_bias=False,
+                                    param_dtype=pd),
+        }
+        axes = {
+            "in_proj": {"w": ("embed", "d_inner")},
+            "conv": {"w": (None, None, "d_inner"), "b": ("d_inner",)},
+            "A_log": (None,),
+            "dt_bias": (None,),
+            "D": (None,),
+            "norm": {"scale": ("d_inner",)},
+            "out_proj": {"w": ("d_inner", "embed")},
+        }
+        return params, axes
+
+    @staticmethod
+    def _split(cfg, zxbcdt):
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        G, H = cfg.ssm.n_groups, cfg.ssm_heads
+        z, x, Bc, Cc, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+        return z, x, Bc, Cc, dt
+
+    @staticmethod
+    def apply(params, x, cfg: ModelConfig):
+        """x: (B, L, d) → (B, L, d) (includes out_proj — full block inner)."""
+        Bsz, L, _ = x.shape
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        G, H, hd = cfg.ssm.n_groups, cfg.ssm_heads, cfg.ssm.headdim
+        zxbcdt = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        z, xs_, Bc, Cc, dt = Mamba2._split(cfg, zxbcdt)
+        conv_in = jnp.concatenate([xs_, Bc, Cc], axis=-1)
+        conv_in = constrain(conv_in, ("batch", None, "d_inner"))
+        conv_out = jax.nn.silu(Conv1D.apply(params["conv"], conv_in, causal=True,
+                                            groups=conv_in.shape[-1],
+                                            dtype=cfg.cdtype))
+        xs_, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        dt = _softplus(dt.astype(jnp.float32) +
+                       params["dt_bias"].astype(jnp.float32))        # (B,L,H)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (H,)
+        xh = xs_.reshape(Bsz, L, H, hd).astype(jnp.float32)
+        Bg = Bc.reshape(Bsz, L, G, N).astype(jnp.float32)
+        Cg = Cc.reshape(Bsz, L, G, N).astype(jnp.float32)
+        rep = H // G
+        Bh = jnp.repeat(Bg, rep, axis=2)                             # (B,L,H,N)
+        Ch = jnp.repeat(Cg, rep, axis=2)
+
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            y = kops.ssm_scan(xh, dt, A, Bh, Ch, chunk=cfg.ssm.chunk)
+        else:
+            def step(h, inp):
+                x_t, dt_t, B_t, C_t = inp                            # (B,H,hd),(B,H),(B,H,N),(B,H,N)
+                a = jnp.exp(dt_t * A[None])                          # (B,H)
+                h = a[..., None, None] * h + \
+                    (dt_t[..., None] * x_t)[..., None] * B_t[:, :, None, :]
+                y_t = jnp.einsum("bhdn,bhn->bhd", h, C_t)
+                return h, y_t
+
+            h0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+            xs_t = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+                    jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+            _, ys = jax.lax.scan(step, h0, xs_t)
+            y = jnp.moveaxis(ys, 0, 1)                               # (B,L,H,hd)
+
+        y = y + xh * params["D"].astype(jnp.float32)[None, None, :, None]
+        y = y.reshape(Bsz, L, di).astype(cfg.cdtype)
+        y = RMSNorm.apply(params["norm"], y * jax.nn.silu(z))
+        y = constrain(y, ("batch", None, "d_inner"))
+        out = Linear.apply(params["out_proj"], y, dtype=cfg.cdtype)
+        return constrain(out, ("batch", None, "embed_act"))
+
+    @staticmethod
+    def decode(params, x, cfg: ModelConfig, state):
+        """x: (B, 1, d); state = {"h": (B,H,hd,N) fp32, "conv": (B,k-1,conv_ch)}."""
+        Bsz = x.shape[0]
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        G, H, hd = cfg.ssm.n_groups, cfg.ssm_heads, cfg.ssm.headdim
+        zxbcdt = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        z, xs_, Bc, Cc, dt = Mamba2._split(cfg, zxbcdt)
+        conv_in = jnp.concatenate([xs_, Bc, Cc], axis=-1)            # (B,1,ch)
+        window = jnp.concatenate([state["conv"], conv_in], axis=1)   # (B,k,ch)
+        w = params["conv"]["w"].astype(conv_in.dtype)                # (k,1,ch)
+        co = jnp.sum(window * jnp.moveaxis(w, 1, 0), axis=1, keepdims=True)
+        if "b" in params["conv"]:
+            co = co + params["conv"]["b"].astype(co.dtype)
+        conv_out = jax.nn.silu(co)
+        xs_, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        dt = _softplus(dt.astype(jnp.float32) +
+                       params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        x_t = xs_[:, 0].reshape(Bsz, H, hd).astype(jnp.float32)
+        B_t = jnp.repeat(Bc[:, 0].reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+        C_t = jnp.repeat(Cc[:, 0].reshape(Bsz, G, N), H // G, axis=1).astype(jnp.float32)
+        a = jnp.exp(dt * A[None])
+        h = a[..., None, None] * state["h"] + \
+            (dt[..., None] * x_t)[..., None] * B_t[:, :, None, :]
+        y = jnp.einsum("bhdn,bhn->bhd", h, C_t)
+        y = y + x_t * params["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(Bsz, 1, di).astype(cfg.cdtype)
+        y = RMSNorm.apply(params["norm"], y * jax.nn.silu(z))
+        out = Linear.apply(params["out_proj"], y, dtype=cfg.cdtype)
+        return out, {"h": h, "conv": window[:, 1:]}
+
+    @staticmethod
+    def state_shape(cfg: ModelConfig, batch: int):
+        di, N, k = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+        H, hd, G = cfg.ssm_heads, cfg.ssm.headdim, cfg.ssm.n_groups
+        conv_ch = di + 2 * G * N
+        return {
+            "h": ((batch, H, hd, N), jnp.float32, ("batch", None, None, None)),
+            "conv": ((batch, k - 1, conv_ch), cfg.cdtype, ("batch", None, "d_inner")),
+        }

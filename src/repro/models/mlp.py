@@ -1,0 +1,36 @@
+"""SwiGLU / GeGLU feed-forward blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Linear
+from repro.sharding import constrain
+
+
+class SwiGLU:
+    @staticmethod
+    def init(key, d_model: int, d_ff: int, *, param_dtype=jnp.float32,
+             d_out: int | None = None):
+        kg, ku, kd = jax.random.split(key, 3)
+        d_out = d_out or d_model
+        params = {
+            "gate": Linear.init(kg, d_model, d_ff, use_bias=False, param_dtype=param_dtype),
+            "up": Linear.init(ku, d_model, d_ff, use_bias=False, param_dtype=param_dtype),
+            "down": Linear.init(kd, d_ff, d_out, use_bias=False, param_dtype=param_dtype),
+        }
+        axes = {
+            "gate": {"w": ("embed", "ff")},
+            "up": {"w": ("embed", "ff")},
+            "down": {"w": ("ff", "embed")},
+        }
+        return params, axes
+
+    @staticmethod
+    def apply(params, x, *, dtype=None, act=jax.nn.silu):
+        g = Linear.apply(params["gate"], x, dtype=dtype)
+        u = Linear.apply(params["up"], x, dtype=dtype)
+        h = act(g) * u
+        h = constrain(h, ("batch", None, "ff"))
+        y = Linear.apply(params["down"], h, dtype=dtype)
+        return constrain(y, ("batch", None, "embed_act"))

@@ -1,0 +1,259 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of the GShard one-hot dispatch einsum
+(whose (tokens × experts × capacity) one-hot is infeasible at LLM batch sizes)
+we sort token→expert assignments and gather fixed-capacity per-expert slabs,
+so every tensor has static shape and the expert matmuls are dense
+(E, C, d)×(E, d, ff) einsums that map straight onto the MXU.
+
+Two execution paths:
+
+  * dense/global (``_apply_global``) — pure jnp, used on a single device and
+    as the semantic reference.  Under SPMD this path is catastrophic: the
+    data-dependent sort/gather between batch-sharded tokens and
+    expert-sharded slabs forces the partitioner into replicate-then-
+    repartition (≈280 GB/device/layer of collectives on olmoe train_4k —
+    measured, see EXPERIMENTS.md §Perf).
+
+  * expert-parallel shard_map (``_apply_ep``) — selected automatically when
+    an ambient shard context is present and the expert count divides the
+    "model" axis.  Activations are batch-sharded over ("pod","data") and
+    REPLICATED over "model", so dispatch needs no communication at all: each
+    model rank selects, from its local tokens, the assignments routed to its
+    own E/model experts (local sort, local capacity), runs its expert FFNs,
+    and the only collective is one psum over "model" to combine expert
+    outputs (+ a psum for the data-sharded router stats).  Capacity is
+    enforced per (data-shard × expert) — the standard EP relaxation; with no
+    drops the two paths are numerically identical (tested).
+
+Aux losses: switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.nn import Linear
+from repro.sharding import constrain, current_ctx, no_shard_ctx
+from repro.models.config import MoECfg
+
+
+class MoE:
+    @staticmethod
+    def init(key, d_model: int, mcfg: MoECfg, *, param_dtype=jnp.float32):
+        kr, kg, ku, kd = jax.random.split(key, 4)
+        E, dff = mcfg.n_experts, mcfg.d_ff_expert
+        std = (1.0 / d_model) ** 0.5
+
+        def w(k, shape):
+            return (std * jax.random.truncated_normal(k, -2.0, 2.0, shape)
+                    ).astype(param_dtype)
+
+        params = {
+            "router": Linear.init(kr, d_model, E, use_bias=False,
+                                  param_dtype=param_dtype),
+            "gate": w(kg, (E, d_model, dff)),
+            "up": w(ku, (E, d_model, dff)),
+            "down": (std * (dff / d_model) ** -0.5
+                     * jax.random.truncated_normal(kd, -2.0, 2.0, (E, dff, d_model))
+                     ).astype(param_dtype),
+        }
+        axes = {
+            "router": {"w": ("embed", "experts")},
+            "gate": ("experts", "embed", "expert_ff"),
+            "up": ("experts", "embed", "expert_ff"),
+            "down": ("experts", "expert_ff", "embed"),
+        }
+        return params, axes
+
+    @staticmethod
+    def apply(params, x, mcfg: MoECfg, *, dtype=None):
+        """x: (B, S, d) → (y, aux) with aux = {"lb_loss", "z_loss", ...}.
+
+        Picks the expert-parallel shard_map path when a shard context is
+        active and E divides the "model" axis; falls back to the global
+        reference path otherwise (single device, tests, probes)."""
+        ctx = current_ctx()
+        if ctx is not None:
+            _, mesh = ctx
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            m = sizes.get("model", 1)
+            batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+            bsh = 1
+            for a in batch_axes:
+                bsh *= sizes[a]
+            if (m > 1 and mcfg.n_experts % m == 0
+                    and x.shape[0] % max(bsh, 1) == 0):
+                return MoE._apply_ep(params, x, mcfg, mesh, batch_axes,
+                                     dtype=dtype)
+        return MoE._apply_global(params, x, mcfg, dtype=dtype)
+
+    # ------------------------------------------------------------------
+    # shared sort-based dispatch core (operates on whatever token set /
+    # expert set it is given — global or per-shard-local)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _dispatch_compute_combine(xf, flat_e, gate_flat, gate_w, up_w, down_w,
+                                  *, n_buckets, C, w_dt, K):
+        """xf: (N, d) tokens; flat_e: (N·K,) bucket ids in [0, n_buckets]
+        (== n_buckets ⇒ foreign/ignored); gate_flat: (N·K,) combine weights.
+        Expert weights: (n_buckets, d, f) / (n_buckets, f, d).
+        → (y (N, d) in w_dt, n_dropped scalar, counts (n_buckets,))."""
+        N, d = xf.shape
+        NK = flat_e.shape[0]
+        order = jnp.argsort(flat_e)                      # stable
+        sorted_e = flat_e[order]
+        token_of = order // K
+        counts_all = jnp.bincount(flat_e, length=n_buckets + 1)
+        counts = counts_all[:n_buckets]
+        offsets_all = jnp.concatenate([jnp.zeros((1,), counts_all.dtype),
+                                       jnp.cumsum(counts_all)[:-1]])
+        rank_in_e = jnp.arange(NK) - offsets_all[sorted_e]
+        slab_idx = offsets_all[:n_buckets, None] + jnp.arange(C)[None, :]
+        slab_valid = jnp.arange(C)[None, :] < counts[:, None]
+        slab_idx = jnp.clip(slab_idx, 0, NK - 1)
+        slab_tok = token_of[slab_idx]                    # (n_buckets, C)
+
+        x_e = jnp.take(xf, slab_tok.reshape(-1), axis=0
+                       ).reshape(n_buckets, C, d)
+        x_e = x_e * slab_valid[..., None].astype(x_e.dtype)
+        x_e = constrain(x_e, ("experts", None, "embed_act"))
+
+        g = jnp.einsum("ecd,edf->ecf", x_e.astype(w_dt), gate_w.astype(w_dt))
+        u = jnp.einsum("ecd,edf->ecf", x_e.astype(w_dt), up_w.astype(w_dt))
+        h = jax.nn.silu(g) * u
+        h = constrain(h, ("experts", None, "expert_ff"))
+        y_e = jnp.einsum("ecf,efd->ecd", h, down_w.astype(w_dt))
+        y_e = constrain(y_e, ("experts", None, "embed_act"))
+
+        foreign = sorted_e >= n_buckets
+        dropped = (rank_in_e >= C) & ~foreign
+        dead = dropped | foreign
+        src = jnp.where(dead, 0,
+                        sorted_e * C + jnp.minimum(rank_in_e, C - 1))
+        y_sorted = jnp.take(y_e.reshape(n_buckets * C, d), src, axis=0)
+        y_sorted = jnp.where(dead[:, None], 0.0, y_sorted)
+        y_sorted = y_sorted * gate_flat[order][:, None].astype(y_sorted.dtype)
+        y = jnp.zeros((N, d), y_sorted.dtype).at[token_of].add(y_sorted)
+        n_dropped = jnp.sum(jnp.where(dropped, 1.0, 0.0))
+        return y, n_dropped, counts
+
+    @staticmethod
+    def _router(params, xf, mcfg: MoECfg):
+        """→ (top_p (N,K), top_e (N,K), lb_loss, z_loss, mean_probs (E,))."""
+        E, K = mcfg.n_experts, mcfg.top_k
+        logits = Linear.apply(params, xf.astype(jnp.float32))        # (N, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        if mcfg.norm_topk:
+            top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+        me = jnp.mean(probs, axis=0)
+        ce = jnp.mean(
+            jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1),
+            axis=0)
+        lb_loss = E * jnp.sum(me * ce) / K
+        z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        return top_p, top_e, lb_loss, z_loss
+
+    # ------------------------------------------------------------------
+    # global reference path (single device / probes)
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _apply_global(params, x, mcfg: MoECfg, *, dtype=None):
+        B, S, d = x.shape
+        N = B * S
+        E, K = mcfg.n_experts, mcfg.top_k
+        xf = x.reshape(N, d)
+        top_p, top_e, lb_loss, z_loss = MoE._router(params["router"], xf, mcfg)
+
+        C = int(max(8, round(N * K * mcfg.capacity_factor / E)))
+        C = min(C, N * K)
+        w_dt = dtype or x.dtype
+        y, n_dropped, counts = MoE._dispatch_compute_combine(
+            xf, top_e.reshape(-1), top_p.reshape(-1),
+            params["gate"], params["up"], params["down"],
+            n_buckets=E, C=C, w_dt=w_dt, K=K)
+
+        aux = {
+            "lb_loss": lb_loss,
+            "z_loss": z_loss,
+            "expert_load": counts.astype(jnp.float32) / max(N * K, 1),
+            "drop_frac": n_dropped / max(N * K, 1),
+        }
+        y = constrain(y.reshape(B, S, d), ("batch", None, "embed_act"))
+        return y.astype(x.dtype), aux
+
+    # ------------------------------------------------------------------
+    # expert-parallel shard_map path
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _apply_ep(params, x, mcfg: MoECfg, mesh, batch_axes, *, dtype=None):
+        """Experts sharded over "model"; tokens batch-sharded and model-
+        replicated ⇒ dispatch is LOCAL (zero communication) and combine is a
+        single psum over "model".  Capacity is per (data-shard × expert)."""
+        B, S, d = x.shape
+        E, K = mcfg.n_experts, mcfg.top_k
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = sizes["model"]
+        E_loc = E // m
+        bsh = 1
+        for a in batch_axes:
+            bsh *= sizes[a]
+        N_loc = (B // bsh) * S
+        C = int(max(8, round(N_loc * K * mcfg.capacity_factor / E)))
+        C = min(C, N_loc * K)
+        w_dt = dtype or x.dtype
+        bspec = batch_axes if len(batch_axes) != 1 else batch_axes[0]
+
+        def body(router_w, gate_w, up_w, down_w, xb):
+            with no_shard_ctx():        # body works on explicit blocks
+                Bl, Sl, _ = xb.shape
+                xf = xb.reshape(Bl * Sl, d)
+                top_p, top_e, lb_loss, z_loss = MoE._router(
+                    {"w": router_w}, xf, mcfg)
+                # my experts: contiguous block [rank·E_loc, (rank+1)·E_loc)
+                rank = jax.lax.axis_index("model")
+                first = rank * E_loc
+                flat_e = top_e.reshape(-1)
+                local_e = jnp.where(
+                    (flat_e >= first) & (flat_e < first + E_loc),
+                    flat_e - first, E_loc)                   # E_loc = foreign
+                y_part, n_dropped, counts_loc = MoE._dispatch_compute_combine(
+                    xf, local_e, top_p.reshape(-1),
+                    gate_w, up_w, down_w, n_buckets=E_loc, C=C, w_dt=w_dt, K=K)
+                # combine expert contributions across model ranks (bf16 wire)
+                y = jax.lax.psum(y_part, "model")
+                # aux: identical across model ranks pre-axis_index → mean
+                # over batch shards only; load/drop need both reductions
+                nk = N_loc * K * max(bsh, 1)
+                load = counts_loc.astype(jnp.float32)
+                if batch_axes:
+                    lb_loss = jax.lax.pmean(lb_loss, batch_axes)
+                    z_loss = jax.lax.pmean(z_loss, batch_axes)
+                    load = jax.lax.psum(load, batch_axes)
+                    n_dropped = jax.lax.psum(n_dropped, batch_axes)
+                # (E_loc,) per model rank → full (E,) everywhere
+                load_full = jax.lax.all_gather(load, "model", tiled=True)
+                drop = jax.lax.psum(n_dropped, "model") / nk
+                aux = {"lb_loss": lb_loss, "z_loss": z_loss,
+                       "expert_load": load_full / nk, "drop_frac": drop}
+                return y.reshape(Bl, Sl, d).astype(xb.dtype), aux
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P("model", None, None), P("model", None, None),
+                      P("model", None, None), P(bspec, None, None)),
+            out_specs=(P(bspec, None, None),
+                       {"lb_loss": P(), "z_loss": P(),
+                        "expert_load": P(), "drop_frac": P()}),
+            check_vma=False)
+        router_w = params["router"]["w"]
+        y, aux = fn(router_w, params["gate"], params["up"], params["down"], x)
+        y = constrain(y, ("batch", None, "embed_act"))
+        return y.astype(x.dtype), aux

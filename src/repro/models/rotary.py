@@ -1,0 +1,80 @@
+"""Rotary position embeddings, including Qwen2-VL's multimodal M-RoPE.
+
+M-RoPE splits the head_dim//2 rotary frequencies into sections assigned to
+(temporal, height, width) position streams.  With the vision frontend stubbed
+(assignment rule), patch positions come from a synthetic square grid and text
+positions collapse to t=h=w, which is exactly Qwen2-VL's behaviour for
+text-only segments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inv_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def section_ids(head_dim: int, sections: tuple[int, ...]) -> jnp.ndarray:
+    """Per-frequency stream index in {0..len(sections)-1}; sections sum to
+    head_dim//2 (padded with the last stream if short)."""
+    half = head_dim // 2
+    ids = []
+    for s, n in enumerate(sections):
+        ids.extend([s] * n)
+    while len(ids) < half:
+        ids.append(len(sections) - 1)
+    return jnp.asarray(ids[:half], jnp.int32)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                sections: tuple[int, ...] | None = None) -> jnp.ndarray:
+    """positions: (B, S) or (B, n_streams, S) for M-RoPE → angles (B, S, hd//2)."""
+    freqs = inv_freqs(head_dim, theta)                       # (half,)
+    if positions.ndim == 2:
+        return positions[..., None].astype(jnp.float32) * freqs
+    assert sections is not None
+    # (B, n_streams, S, half)
+    all_angles = positions[..., None].astype(jnp.float32) * freqs
+    ids = section_ids(head_dim, sections)                    # (half,)
+    ids = jnp.broadcast_to(ids, all_angles.shape[:1] + all_angles.shape[2:])
+    # select per-frequency stream: (B, S, half)
+    return jnp.take_along_axis(
+        jnp.moveaxis(all_angles, 1, -1),                     # (B, S, half, n_streams)
+        ids[..., None], axis=-1)[..., 0]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, n_heads, head_dim); angles: (B, S, head_dim//2).
+
+    GPT-NeoX style half rotation (matches Llama/Qwen weights layout)."""
+    orig_dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(orig_dtype)
+
+
+def text_positions(batch: int, seq: int, start) -> jnp.ndarray:
+    """(B, S) int32 positions starting at ``start`` (scalar or (B,) array)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]
+    start = jnp.asarray(start, jnp.int32)
+    start = start.reshape(-1, 1) if start.ndim else start[None, None]
+    return jnp.broadcast_to(pos + start, (batch, seq))
+
+
+def mrope_positions(batch: int, seq: int, n_patches: int, start) -> jnp.ndarray:
+    """(B, 3, S) positions: a synthetic √n_patches grid for the vision prefix
+    (t=0, h=row, w=col), then t=h=w text positions for the remainder."""
+    side = max(int(round(n_patches ** 0.5)), 1)
+    idx = jnp.arange(seq, dtype=jnp.int32)
+    is_text = idx >= n_patches
+    text_pos = jnp.asarray(start, jnp.int32) + idx  # decode: start offsets all
+    t = jnp.where(is_text, text_pos, 0)
+    h = jnp.where(is_text, text_pos, idx // side)
+    w = jnp.where(is_text, text_pos, idx % side)
+    pos = jnp.stack([t, h, w], axis=0)[None]        # (1, 3, S)
+    return jnp.broadcast_to(pos, (batch, 3, seq))

@@ -1,0 +1,688 @@
+"""Full language-model assembly for every assigned architecture family.
+
+Parameters for the repeated blocks are stacked on a leading "layers" axis and
+applied with jax.lax.scan (policy-controlled remat), so the 80-layer Qwen2-72B
+config lowers and compiles in seconds with a compact HLO.  cfg.use_scan=False
+switches to a python loop over the same stacked params — used by the roofline
+cost-probe, which compiles 2- and 4-layer unrolled variants to recover
+per-layer HLO FLOPs that scan bodies hide (see launch/dryrun.py).
+
+Entry points (all pure):
+  LM.init(key, cfg)                        -> (params, axes)
+  LM.apply(params, inputs, cfg)            -> (logits, aux)   # train / full fwd
+  LM.prefill(params, inputs, cfg, max_seq) -> (logits_last, cache)
+  LM.decode(params, tokens, cfg, cache)    -> (logits, cache) # one token
+  LM.cache_spec(cfg, batch, max_seq)       -> pytree of (shape, dtype, axes)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Embedding, LayerNorm, Linear, RMSNorm
+from repro.sharding import constrain
+from repro.models.attention import Attention
+from repro.models.blocks import (
+    CrossDecoderBlock,
+    DecoderBlock,
+    EncoderBlock,
+    SSMBlock,
+    SharedAttnBlock,
+)
+from repro.models.config import ModelConfig
+from repro.models.rotary import mrope_positions, rope_angles, text_positions
+
+ZERO_AUX = lambda: {"lb_loss": jnp.zeros((), jnp.float32),
+                    "z_loss": jnp.zeros((), jnp.float32),
+                    "drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _aux_of(aux):
+    out = ZERO_AUX()
+    if aux:
+        for k in out:
+            if k in aux:
+                out[k] = aux[k].astype(jnp.float32)
+    return out
+
+
+def _stack_init(block_init, key, n: int, cfg):
+    """vmap a block init over n layer keys; returns (stacked params, axes with
+    a leading 'layers' dim)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: block_init(k, cfg)[0])(keys)
+    _, axes = block_init(keys[0], cfg)
+    axes = _prefix_axes(axes, "layers")
+    return params, axes
+
+
+def _prefix_axes(axes, name: str):
+    def is_leaf(x):
+        return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+    return jax.tree.map(lambda ax: (name,) + ax, axes, is_leaf=is_leaf)
+
+
+def _angles(cfg: ModelConfig, batch: int, seq: int, start=0):
+    if cfg.ssm is not None and cfg.hybrid is None:
+        return None
+    if cfg.m_rope:
+        pos = mrope_positions(batch, seq, cfg.n_vision_patches if seq > 1 else 0,
+                              start)
+        return rope_angles(pos, cfg.hd, cfg.rope_theta, cfg.m_rope_sections)
+    pos = text_positions(batch, seq, start)
+    return rope_angles(pos, cfg.hd, cfg.rope_theta)
+
+
+def _hybrid_groups(cfg: ModelConfig) -> int:
+    assert cfg.hybrid is not None
+    return cfg.n_layers // cfg.hybrid.attn_every
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(lambda p: p[i], tree)
+
+
+class LM:
+    # ------------------------------------------------------------- init
+
+    @staticmethod
+    def init(key, cfg: ModelConfig):
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+
+        params["embed"] = Embedding.init(keys[0], cfg.vocab, cfg.d_model,
+                                         param_dtype=cfg.pdtype)
+        axes["embed"] = {"table": ("vocab", "embed")}
+
+        if cfg.enc_dec:
+            params["enc_blocks"], axes["enc_blocks"] = _stack_init(
+                EncoderBlock.init, keys[1], cfg.n_enc_layers, cfg)
+            params["dec_blocks"], axes["dec_blocks"] = _stack_init(
+                CrossDecoderBlock.init, keys[2], cfg.n_layers, cfg)
+            params["ln_enc"] = LayerNorm.init(keys[3], cfg.d_model,
+                                              param_dtype=cfg.pdtype)
+            axes["ln_enc"] = jax.tree.map(lambda _: ("embed_act",), params["ln_enc"])
+        elif cfg.hybrid is not None:
+            G, A = _hybrid_groups(cfg), cfg.hybrid.attn_every
+            mp, max_ = _stack_init(SSMBlock.init, keys[1], cfg.n_layers, cfg)
+            # reshape stacked (L, ...) → (G, A, ...)
+            params["blocks"] = jax.tree.map(
+                lambda p: p.reshape((G, A) + p.shape[1:]), mp)
+            axes["blocks"] = _prefix_axes(max_, "layers")  # (layers, layers, ...)
+            sp, sax = _stack_init(SharedAttnBlock.init, keys[2],
+                                  cfg.hybrid.n_shared_blocks, cfg)
+            params["shared"], axes["shared"] = sp, sax
+            kd = jax.random.split(keys[3], G)
+            params["down"] = jax.vmap(
+                lambda k: Linear.init(k, 2 * cfg.d_model, cfg.d_model,
+                                      use_bias=False, param_dtype=cfg.pdtype))(kd)
+            axes["down"] = {"w": ("layers", "embed", "embed")}
+        elif cfg.ssm is not None:
+            params["blocks"], axes["blocks"] = _stack_init(
+                SSMBlock.init, keys[1], cfg.n_layers, cfg)
+        else:
+            params["blocks"], axes["blocks"] = _stack_init(
+                DecoderBlock.init, keys[1], cfg.n_layers, cfg)
+
+        norm = LayerNorm if cfg.family == "audio" else RMSNorm
+        params["ln_f"] = norm.init(keys[4], cfg.d_model, param_dtype=cfg.pdtype)
+        axes["ln_f"] = jax.tree.map(lambda _: ("embed_act",), params["ln_f"])
+
+        if not cfg.tie_embeddings:
+            params["lm_head"] = Linear.init(keys[5], cfg.d_model, cfg.vocab,
+                                            use_bias=False, param_dtype=cfg.pdtype)
+            axes["lm_head"] = {"w": ("embed", "vocab")}
+        return params, axes
+
+    # ------------------------------------------------------------- shared bits
+
+    @staticmethod
+    def _embed(params, tokens, cfg, inputs=None):
+        h = Embedding.apply(params["embed"], tokens, dtype=cfg.cdtype)
+        if cfg.family == "vlm" and inputs is not None and "patches" in inputs:
+            P = inputs["patches"].shape[1]
+            h = jnp.concatenate(
+                [inputs["patches"].astype(cfg.cdtype), h[:, P:]], axis=1)
+        return constrain(h, ("batch", None, "embed_act"))
+
+    @staticmethod
+    def _logits(params, h, cfg):
+        if cfg.tie_embeddings:
+            logits = Embedding.attend(params["embed"], h)
+        else:
+            w = params["lm_head"]["w"]
+            logits = jnp.einsum("...d,dv->...v", h, w,
+                                preferred_element_type=jnp.float32)
+        return constrain(logits, ("batch", None, "vocab"))
+
+    @staticmethod
+    def _scan_blocks(block_apply, blocks, x, cfg, extra=None):
+        """Scan (or unrolled loop) over stacked layer params.  ``block_apply``
+        maps (layer_params, x) -> (x, aux_dict)."""
+        def body(carry, layer_params):
+            y, aux = block_apply(layer_params, carry)
+            return y, _aux_of(aux)
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.use_scan:
+            x, auxs = jax.lax.scan(body, x, blocks)
+            aux = jax.tree.map(jnp.sum, auxs)
+        else:
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            aux = ZERO_AUX()
+            for i in range(n):
+                x, a = body(x, _index_tree(blocks, i))
+                aux = jax.tree.map(lambda u, v: u + v, aux, a)
+        return x, aux
+
+    # ------------------------------------------------------------- forward
+
+    @staticmethod
+    def apply(params, inputs, cfg: ModelConfig, *, return_hidden: bool = False):
+        """Full-sequence forward.  inputs: {"tokens": (B, S)} plus
+        family extras ("patches" for vlm, "frames" for audio).
+        return_hidden=True returns the final-norm hidden states instead of
+        logits — the chunked-CE train path computes per-chunk logits itself
+        so the (B, S, V) fp32 tensor never materializes."""
+        if cfg.enc_dec:
+            return LM._apply_encdec(params, inputs, cfg,
+                                    return_hidden=return_hidden)
+        tokens = inputs["tokens"]
+        B, S = tokens.shape
+        h = LM._embed(params, tokens, cfg, inputs)
+        angles = _angles(cfg, B, S)
+
+        if cfg.hybrid is not None:
+            h, aux = LM._apply_hybrid(params, h, cfg, angles)
+        elif cfg.ssm is not None:
+            h, aux = LM._scan_blocks(
+                lambda p, x: SSMBlock.apply(p, x, cfg), params["blocks"], h, cfg)
+        else:
+            h, aux = LM._scan_blocks(
+                lambda p, x: DecoderBlock.apply(p, x, cfg, angles=angles),
+                params["blocks"], h, cfg)
+
+        norm = LayerNorm if cfg.family == "audio" else RMSNorm
+        h = norm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+        if return_hidden:
+            return h, aux
+        return LM._logits(params, h, cfg), aux
+
+    @staticmethod
+    def _apply_hybrid(params, h, cfg, angles):
+        """Zamba2: groups of attn_every SSM layers, each followed by the
+        shared attention block over concat(h, emb0) + per-group down-proj."""
+        emb0 = h
+        A = cfg.hybrid.attn_every
+        n_shared = cfg.hybrid.n_shared_blocks
+        shared = params["shared"]
+
+        def group_body(carry, xs):
+            x, g = carry
+            mamba_g, down_g = xs
+            for i in range(A):
+                x, _ = SSMBlock.apply(_index_tree(mamba_g, i), x, cfg)
+            sel = _index_tree(shared, jax.lax.rem(g, n_shared))
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            x2 = SharedAttnBlock.apply(sel, x2, cfg, angles=angles)
+            x = x + Linear.apply(down_g, x2, dtype=cfg.cdtype)
+            return (x, g + 1), ZERO_AUX()
+
+        if cfg.remat != "none":
+            group_body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        G = _hybrid_groups(cfg)
+        if cfg.use_scan:
+            (h, _), auxs = jax.lax.scan(
+                group_body, (h, jnp.zeros((), jnp.int32)),
+                (params["blocks"], params["down"]))
+            aux = jax.tree.map(jnp.sum, auxs)
+        else:
+            carry = (h, jnp.zeros((), jnp.int32))
+            aux = ZERO_AUX()
+            for gi in range(G):
+                carry, a = group_body(
+                    carry, (_index_tree(params["blocks"], gi),
+                            _index_tree(params["down"], gi)))
+            h = carry[0]
+        return h, aux
+
+    @staticmethod
+    def _apply_encdec(params, inputs, cfg, *, return_hidden: bool = False):
+        frames, tokens = inputs["frames"], inputs["tokens"]
+        B, Se = frames.shape[:2]
+        Sd = tokens.shape[1]
+        enc_ang = _angles(cfg, B, Se)
+        x = constrain(frames.astype(cfg.cdtype), ("batch", None, "embed_act"))
+        x, _ = LM._scan_blocks(
+            lambda p, h: (EncoderBlock.apply(p, h, cfg, angles=enc_ang), None),
+            params["enc_blocks"], x, cfg)
+        enc_out = LayerNorm.apply(params["ln_enc"], x, eps=cfg.norm_eps)
+
+        dec_ang = _angles(cfg, B, Sd)
+        h = LM._embed(params, tokens, cfg)
+        h, aux = LM._scan_blocks(
+            lambda p, x_: (CrossDecoderBlock.apply(p, x_, cfg, enc_out=enc_out,
+                                                   angles=dec_ang), None),
+            params["dec_blocks"], h, cfg)
+        h = LayerNorm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+        if return_hidden:
+            return h, aux
+        return LM._logits(params, h, cfg), aux
+
+    # ------------------------------------------------------------- cache
+
+    @staticmethod
+    def cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+        """Pytree of (shape, dtype, logical_axes) describing the decode state."""
+        L = cfg.n_layers
+        spec: dict[str, Any] = {"index": ((), jnp.int32, ())}
+        if cfg.enc_dec:
+            kv = Attention.cache_shape(cfg, batch, max_seq)
+            spec["self"] = {
+                n: ((L,) + s, cfg.cdtype, ("layers",) + ax)
+                for n, (s, ax) in kv.items()}
+            ce_shape = (L, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+            ce_ax = ("layers", "batch", "enc_seq", "kv_heads", None)
+            spec["cross"] = {"k": (ce_shape, cfg.cdtype, ce_ax),
+                             "v": (ce_shape, cfg.cdtype, ce_ax)}
+        elif cfg.hybrid is not None:
+            G, A = _hybrid_groups(cfg), cfg.hybrid.attn_every
+            ss = SSMBlock.state_shape(cfg, batch)
+            spec["mamba"] = {n: ((G, A) + s, dt, ("layers", "layers") + ax)
+                             for n, (s, dt, ax) in ss.items()}
+            kv = Attention.cache_shape(cfg, batch, max_seq)
+            spec["attn"] = {n: ((G,) + s, cfg.cdtype, ("layers",) + ax)
+                            for n, (s, ax) in kv.items()}
+        elif cfg.ssm is not None:
+            ss = SSMBlock.state_shape(cfg, batch)
+            spec["layers"] = {n: ((L,) + s, dt, ("layers",) + ax)
+                              for n, (s, dt, ax) in ss.items()}
+        else:
+            kv = Attention.cache_shape(cfg, batch, max_seq)
+            spec["layers"] = {n: ((L,) + s, cfg.cdtype, ("layers",) + ax)
+                              for n, (s, ax) in kv.items()}
+        return spec
+
+    @staticmethod
+    def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+        spec = LM.cache_spec(cfg, batch, max_seq)
+        return jax.tree.map(lambda s: jnp.zeros(s[0], s[1]), spec,
+                            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                            and isinstance(x[0], tuple))
+
+    # ------------------------------------------------------------- prefill
+
+    @staticmethod
+    def prefill(params, inputs, cfg: ModelConfig, max_seq: int):
+        """Forward over the prompt, building the decode cache.  Returns
+        (last-position logits, cache)."""
+        cache = LM.init_cache(cfg, inputs["tokens"].shape[0], max_seq)
+        if cfg.enc_dec:
+            return LM._prefill_encdec(params, inputs, cfg, cache, max_seq)
+        tokens = inputs["tokens"]
+        B, S = tokens.shape
+        h = LM._embed(params, tokens, cfg, inputs)
+        angles = _angles(cfg, B, S)
+
+        if cfg.hybrid is not None:
+            logits, cache = LM._prefill_hybrid(params, h, cfg, angles, cache, S, max_seq)
+        elif cfg.ssm is not None:
+            # full-state prefill: run layer-by-layer, capturing final states
+            h, states = LM._ssm_prefill_states(params["blocks"], h, cfg)
+            cache = {**cache, "layers": states}
+            h = RMSNorm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+            logits = LM._logits(params, h[:, -1:], cfg)
+        else:
+            def body(x, layer_params):
+                y, kv = LM._decoder_prefill_block(layer_params, x, cfg, angles, max_seq)
+                return y, kv
+            if cfg.use_scan:
+                h, kvs = jax.lax.scan(body, h, params["blocks"])
+            else:
+                n = jax.tree.leaves(params["blocks"])[0].shape[0]
+                kv_list = []
+                for i in range(n):
+                    h, kv = body(h, _index_tree(params["blocks"], i))
+                    kv_list.append(kv)
+                kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kv_list)
+            cache = {**cache, "layers": kvs}
+            norm = LayerNorm if cfg.family == "audio" else RMSNorm
+            h = norm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+            logits = LM._logits(params, h[:, -1:], cfg)
+        cache["index"] = jnp.asarray(S, jnp.int32)
+        return logits, cache
+
+    @staticmethod
+    def _decoder_prefill_block(layer_params, x, cfg, angles, max_seq):
+        norm = LayerNorm if cfg.family == "audio" else RMSNorm
+        h = norm.apply(layer_params["ln1"], x, eps=cfg.norm_eps)
+        h, (k, v) = Attention.apply(layer_params["attn"], h, cfg, angles=angles,
+                                    causal=True, window=cfg.sliding_window,
+                                    return_kv=True)
+        x = x + h
+        h = norm.apply(layer_params["ln2"], x, eps=cfg.norm_eps)
+        h, _ = DecoderBlock._ffn(layer_params, h, cfg)
+        return x + h, LM._kv_to_ring(k, v, cfg, max_seq)
+
+    @staticmethod
+    def _kv_to_ring(k, v, cfg, max_seq):
+        """Arrange full-sequence K/V into the ring-buffer cache layout sized
+        for ``max_seq`` (position p lives at slot p % W)."""
+        S = k.shape[1]
+        W = Attention.cache_len(cfg, max_seq)
+        if W < S:
+            k, v = k[:, S - W:], v[:, S - W:]
+            shift = (S - W) % W
+            k = jnp.roll(k, shift, axis=1)
+            v = jnp.roll(v, shift, axis=1)
+        elif W > S:
+            pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k, "v": v}
+
+    @staticmethod
+    def _ssm_prefill_states(blocks, h, cfg):
+        """Run stacked SSM blocks, returning output and final per-layer states
+        (h_state fp32, conv tail)."""
+        from repro.models.mamba import Mamba1, Mamba2
+        impl = Mamba1 if cfg.ssm.version == 1 else Mamba2
+
+        def body(x, layer_params):
+            hn = RMSNorm.apply(layer_params["ln"], x, eps=cfg.norm_eps)
+            y, state = LM._mamba_apply_with_state(layer_params["mamba"], hn, cfg,
+                                                  impl)
+            return x + y, state
+
+        if cfg.use_scan:
+            h, states = jax.lax.scan(body, h, blocks)
+        else:
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            st_list = []
+            for i in range(n):
+                h, st = body(h, _index_tree(blocks, i))
+                st_list.append(st)
+            states = jax.tree.map(lambda *xs: jnp.stack(xs), *st_list)
+        return h, states
+
+    @staticmethod
+    def _mamba_apply_with_state(params, x, cfg, impl):
+        """Full-sequence mamba forward that also returns the final recurrent
+        state — the prefill path.  Implemented by replaying the last d_conv-1
+        inputs for the conv state and running the scan with a carried state."""
+        # Reuse apply() for y; recover the final state by re-running the scan
+        # carry on the projected sequence (cheap relative to projections).
+        from repro.models.mamba import Mamba1, Mamba2
+        if impl is Mamba1:
+            y = Mamba1.apply(params, x, cfg)
+            state = LM._mamba1_final_state(params, x, cfg)
+        else:
+            y = Mamba2.apply(params, x, cfg)
+            state = LM._mamba2_final_state(params, x, cfg)
+        return y, state
+
+    @staticmethod
+    def _mamba1_final_state(params, x, cfg):
+        from repro.models.mamba import Mamba1
+        from repro.nn import Conv1D
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        xz = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        x_in, _ = jnp.split(xz, 2, axis=-1)
+        x_conv = jax.nn.silu(Conv1D.apply(params["conv"], x_in, causal=True,
+                                          groups=di, dtype=cfg.cdtype))
+        dt, Bc, _ = Mamba1._dbc(params, x_conv, cfg)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        xf = x_conv.astype(jnp.float32)
+
+        def step(h, inp):
+            dt_t, x_t, B_t = inp
+            decay = jnp.exp(dt_t[..., None] * A[None])
+            h = decay * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            return h, None
+
+        h0 = jnp.zeros((x.shape[0], di, N), jnp.float32)
+        hf, _ = jax.lax.scan(step, h0, (jnp.moveaxis(dt, 1, 0),
+                                        jnp.moveaxis(xf, 1, 0),
+                                        jnp.moveaxis(Bc, 1, 0)))
+        k = cfg.ssm.d_conv
+        return {"h": hf, "conv": x_in[:, -(k - 1):, :]}
+
+    @staticmethod
+    def _mamba2_final_state(params, x, cfg):
+        from repro.models.mamba import Mamba2
+        from repro.nn import Conv1D
+        di, N = cfg.d_inner, cfg.ssm.d_state
+        G, H, hd = cfg.ssm.n_groups, cfg.ssm_heads, cfg.ssm.headdim
+        zxbcdt = Linear.apply(params["in_proj"], x, dtype=cfg.cdtype)
+        _, xs_, Bc, Cc, dt = Mamba2._split(cfg, zxbcdt)
+        conv_in = jnp.concatenate([xs_, Bc, Cc], axis=-1)
+        conv_out = jax.nn.silu(Conv1D.apply(params["conv"], conv_in, causal=True,
+                                            groups=conv_in.shape[-1],
+                                            dtype=cfg.cdtype))
+        xs_, Bc, _ = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                             params["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        B_, L = x.shape[0], x.shape[1]
+        xh = xs_.reshape(B_, L, H, hd).astype(jnp.float32)
+        Bh = jnp.repeat(Bc.reshape(B_, L, G, N), H // G, axis=2).astype(jnp.float32)
+
+        def step(h, inp):
+            x_t, dt_t, B_t = inp
+            a = jnp.exp(dt_t * A[None])
+            h = a[..., None, None] * h + \
+                (dt_t[..., None] * x_t)[..., None] * B_t[:, :, None, :]
+            return h, None
+
+        h0 = jnp.zeros((B_, H, hd, N), jnp.float32)
+        hf, _ = jax.lax.scan(step, h0, (jnp.moveaxis(xh, 1, 0),
+                                        jnp.moveaxis(dt, 1, 0),
+                                        jnp.moveaxis(Bh, 1, 0)))
+        k = cfg.ssm.d_conv
+        return {"h": hf, "conv": conv_in[:, -(k - 1):, :]}
+
+    @staticmethod
+    def _prefill_hybrid(params, h, cfg, angles, cache, S, max_seq):
+        emb0 = h
+        A = cfg.hybrid.attn_every
+        n_shared = cfg.hybrid.n_shared_blocks
+        shared = params["shared"]
+        G = _hybrid_groups(cfg)
+
+        def group_body(carry, xs):
+            x, g = carry
+            mamba_g, down_g = xs
+            sts = []
+            for i in range(A):
+                lp = _index_tree(mamba_g, i)
+                hn = RMSNorm.apply(lp["ln"], x, eps=cfg.norm_eps)
+                from repro.models.mamba import Mamba2
+                y, st = LM._mamba_apply_with_state(lp["mamba"], hn, cfg, Mamba2)
+                x = x + y
+                sts.append(st)
+            states = jax.tree.map(lambda *xs_: jnp.stack(xs_), *sts)
+            sel = _index_tree(shared, jax.lax.rem(g, n_shared))
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            hh = RMSNorm.apply(sel["ln1"], x2, eps=cfg.norm_eps)
+            hh, (k, v) = Attention.apply(sel["attn"], hh, cfg, angles=angles,
+                                         causal=True, return_kv=True)
+            x2 = x2 + hh
+            hh = RMSNorm.apply(sel["ln2"], x2, eps=cfg.norm_eps)
+            from repro.models.mlp import SwiGLU
+            x2 = x2 + SwiGLU.apply(sel["mlp"], hh, dtype=cfg.cdtype)
+            x = x + Linear.apply(down_g, x2, dtype=cfg.cdtype)
+            kv = LM._kv_to_ring(k, v, cfg, max_seq)
+            return (x, g + 1), (states, kv)
+
+        if cfg.use_scan:
+            (h, _), (mamba_states, kvs) = jax.lax.scan(
+                group_body, (h, jnp.zeros((), jnp.int32)),
+                (params["blocks"], params["down"]))
+        else:
+            carry = (h, jnp.zeros((), jnp.int32))
+            outs = []
+            for gi in range(G):
+                carry, out = group_body(
+                    carry, (_index_tree(params["blocks"], gi),
+                            _index_tree(params["down"], gi)))
+                outs.append(out)
+            mamba_states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                        *[o[0] for o in outs])
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+            h = carry[0]
+        cache = {**cache, "mamba": mamba_states, "attn": kvs}
+        h = RMSNorm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+        return LM._logits(params, h[:, -1:], cfg), cache
+
+    @staticmethod
+    def _prefill_encdec(params, inputs, cfg, cache, max_seq):
+        frames, tokens = inputs["frames"], inputs["tokens"]
+        B, Se = frames.shape[:2]
+        Sd = tokens.shape[1]
+        enc_ang = _angles(cfg, B, Se)
+        x = constrain(frames.astype(cfg.cdtype), ("batch", None, "embed_act"))
+        x, _ = LM._scan_blocks(
+            lambda p, h_: (EncoderBlock.apply(p, h_, cfg, angles=enc_ang), None),
+            params["enc_blocks"], x, cfg)
+        enc_out = LayerNorm.apply(params["ln_enc"], x, eps=cfg.norm_eps)
+
+        dec_ang = _angles(cfg, B, Sd)
+        h = LM._embed(params, tokens, cfg)
+
+        def body(x_, layer_params):
+            hh = LayerNorm.apply(layer_params["ln1"], x_, eps=cfg.norm_eps)
+            hh, (k, v) = Attention.apply(layer_params["self_attn"], hh, cfg,
+                                         angles=dec_ang, causal=True,
+                                         return_kv=True)
+            x_ = x_ + hh
+            hh = LayerNorm.apply(layer_params["ln2"], x_, eps=cfg.norm_eps)
+            ckv = CrossDecoderBlock.cross_kv(layer_params, enc_out, cfg)
+            hh = Attention.apply(layer_params["cross_attn"], hh, cfg,
+                                 cross_kv=ckv, causal=False)
+            x_ = x_ + hh
+            hh = LayerNorm.apply(layer_params["ln3"], x_, eps=cfg.norm_eps)
+            from repro.models.mlp import SwiGLU
+            x_ = x_ + SwiGLU.apply(layer_params["mlp"], hh, dtype=cfg.cdtype)
+            return x_, (LM._kv_to_ring(k, v, cfg, max_seq), {"k": ckv[0], "v": ckv[1]})
+
+        if cfg.use_scan:
+            h, (self_kv, cross_kv) = jax.lax.scan(body, h, params["dec_blocks"])
+        else:
+            n = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+            outs = []
+            for i in range(n):
+                h, out = body(h, _index_tree(params["dec_blocks"], i))
+                outs.append(out)
+            self_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+            cross_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+        cache = {**cache, "self": self_kv, "cross": cross_kv}
+        cache["index"] = jnp.asarray(Sd, jnp.int32)
+        h = LayerNorm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+        return LM._logits(params, h[:, -1:], cfg), cache
+
+    # ------------------------------------------------------------- decode
+
+    @staticmethod
+    def decode(params, tokens, cfg: ModelConfig, cache):
+        """tokens: (B, 1) → (logits (B, 1, V), new cache).  cache["index"] is
+        the absolute position of this token."""
+        index = cache["index"]
+        B = tokens.shape[0]
+        h = LM._embed(params, tokens, cfg)
+        angles = _angles(cfg, B, 1, start=index)
+
+        if cfg.enc_dec:
+            def body(x, xs):
+                lp, st = xs
+                y, st2 = CrossDecoderBlock.decode(lp, x, cfg, st, index,
+                                                  angles=angles)
+                return y, st2
+            h, new_state = LM._decode_scan(
+                body, h, params["dec_blocks"],
+                {"self": cache["self"], "cross": cache["cross"]}, cfg)
+            new_cache = {**cache, **new_state}
+        elif cfg.hybrid is not None:
+            h, new_cache = LM._decode_hybrid(params, h, cfg, cache, index, angles)
+        elif cfg.ssm is not None:
+            def body(x, xs):
+                lp, st = xs
+                return SSMBlock.decode(lp, x, cfg, st, index)
+            h, states = LM._decode_scan(body, h, params["blocks"],
+                                        cache["layers"], cfg)
+            new_cache = {**cache, "layers": states}
+        else:
+            def body(x, xs):
+                lp, st = xs
+                return DecoderBlock.decode(lp, x, cfg, st, index, angles=angles)
+            h, states = LM._decode_scan(body, h, params["blocks"],
+                                        cache["layers"], cfg)
+            new_cache = {**cache, "layers": states}
+
+        norm = LayerNorm if cfg.family == "audio" else RMSNorm
+        h = norm.apply(params["ln_f"], h, eps=cfg.norm_eps)
+        logits = LM._logits(params, h, cfg)
+        new_cache["index"] = index + 1
+        return logits, new_cache
+
+    @staticmethod
+    def _decode_scan(body, h, blocks, states, cfg):
+        if cfg.use_scan:
+            h, new_states = jax.lax.scan(lambda c, xs: body(c, xs), h,
+                                         (blocks, states))
+            return h, new_states
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        outs = []
+        for i in range(n):
+            st_i = _index_tree(states, i)
+            h, st2 = body(h, (_index_tree(blocks, i), st_i))
+            outs.append(st2)
+        return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    @staticmethod
+    def _decode_hybrid(params, h, cfg, cache, index, angles):
+        emb0 = h
+        A = cfg.hybrid.attn_every
+        n_shared = cfg.hybrid.n_shared_blocks
+        shared = params["shared"]
+
+        def group_body(carry, xs):
+            x, g = carry
+            mamba_g, down_g, m_state, kv = xs
+            new_m = []
+            for i in range(A):
+                x, st = SSMBlock.decode(_index_tree(mamba_g, i), x, cfg,
+                                        _index_tree(m_state, i), index)
+                new_m.append(st)
+            m_states = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_m)
+            sel = _index_tree(shared, jax.lax.rem(g, n_shared))
+            x2 = jnp.concatenate([x, emb0], axis=-1)
+            x2, kv2 = SharedAttnBlock.decode(sel, x2, cfg, kv, index,
+                                             angles=angles)
+            x = x + Linear.apply(down_g, x2, dtype=cfg.cdtype)
+            return (x, g + 1), (m_states, kv2)
+
+        if cfg.use_scan:
+            (h, _), (m_states, kvs) = jax.lax.scan(
+                group_body, (h, jnp.zeros((), jnp.int32)),
+                (params["blocks"], params["down"], cache["mamba"], cache["attn"]))
+        else:
+            G = _hybrid_groups(cfg)
+            carry = (h, jnp.zeros((), jnp.int32))
+            outs = []
+            for gi in range(G):
+                carry, out = group_body(
+                    carry, (_index_tree(params["blocks"], gi),
+                            _index_tree(params["down"], gi),
+                            _index_tree(cache["mamba"], gi),
+                            _index_tree(cache["attn"], gi)))
+                outs.append(out)
+            m_states = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[0] for o in outs])
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
+            h = carry[0]
+        return h, {**cache, "mamba": m_states, "attn": kvs}

@@ -1,0 +1,40 @@
+"""Minimal functional NN substrate (flax is unavailable in this environment).
+
+Conventions:
+  * params are nested dicts (pytrees) of jnp arrays;
+  * every layer exposes ``init(key, ...) -> params`` and a pure ``apply``;
+  * dtype policy: params kept in ``param_dtype``, compute in ``dtype``.
+"""
+from repro.nn.init import (
+    lecun_normal,
+    normal_init,
+    truncated_normal,
+    zeros_init,
+    ones_init,
+)
+from repro.nn.layers import (
+    Linear,
+    Embedding,
+    RMSNorm,
+    LayerNorm,
+    BatchNorm,
+    Conv1D,
+    MLP,
+)
+from repro.nn.rnn import GRU
+
+__all__ = [
+    "lecun_normal",
+    "normal_init",
+    "truncated_normal",
+    "zeros_init",
+    "ones_init",
+    "Linear",
+    "Embedding",
+    "RMSNorm",
+    "LayerNorm",
+    "BatchNorm",
+    "Conv1D",
+    "MLP",
+    "GRU",
+]

@@ -1,0 +1,49 @@
+"""Parameter initializers (callable(key, shape, dtype) -> array)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(stddev: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+    return init
+
+
+def truncated_normal(stddev: float = 0.02, lower: float = -2.0, upper: float = 2.0):
+    def init(key, shape, dtype=jnp.float32):
+        u = jax.random.truncated_normal(key, lower, upper, shape)
+        return (stddev * u).astype(dtype)
+
+    return init
+
+
+def lecun_normal(in_axis: int = 0):
+    """Fan-in scaled normal — the default for projection weights."""
+
+    def init(key, shape, dtype=jnp.float32):
+        fan_in = shape[in_axis]
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        u = jax.random.truncated_normal(key, -2.0, 2.0, shape)
+        # correct the truncated normal's variance shrinkage (~0.87962)
+        return (std / 0.87962566103423978 * u).astype(dtype)
+
+    return init
+
+
+def zeros_init():
+    def init(key, shape, dtype=jnp.float32):
+        del key
+        return jnp.zeros(shape, dtype)
+
+    return init
+
+
+def ones_init():
+    def init(key, shape, dtype=jnp.float32):
+        del key
+        return jnp.ones(shape, dtype)
+
+    return init

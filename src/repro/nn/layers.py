@@ -1,0 +1,187 @@
+"""Core functional layers.
+
+Each layer is a namespace of pure functions:
+  ``Layer.init(key, **dims) -> params``  and  ``Layer.apply(params, x) -> y``.
+Params are plain dicts so they compose into model pytrees and shard with
+jax.sharding.NamedSharding via the partition rules in repro.sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import lecun_normal, normal_init, ones_init, zeros_init
+
+
+class Linear:
+    @staticmethod
+    def init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+             param_dtype=jnp.float32, w_init=None):
+        w_init = w_init or lecun_normal(in_axis=0)
+        kw, kb = jax.random.split(key)
+        params = {"w": w_init(kw, (in_dim, out_dim), param_dtype)}
+        if use_bias:
+            params["b"] = zeros_init()(kb, (out_dim,), param_dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x, *, dtype=None):
+        w = params["w"]
+        if dtype is not None:
+            w = w.astype(dtype)
+            x = x.astype(dtype)
+        y = x @ w
+        if "b" in params:
+            b = params["b"].astype(y.dtype)
+            y = y + b
+        return y
+
+
+class Embedding:
+    @staticmethod
+    def init(key, vocab: int, dim: int, *, param_dtype=jnp.float32, scale: float = 1.0):
+        return {"table": normal_init(0.02 * scale)(key, (vocab, dim), param_dtype)}
+
+    @staticmethod
+    def apply(params, ids, *, dtype=None):
+        table = params["table"]
+        if dtype is not None:
+            table = table.astype(dtype)
+        return jnp.take(table, ids, axis=0)
+
+    @staticmethod
+    def attend(params, x):
+        """Tied readout: logits = x @ table.T (fp32 accumulation)."""
+        table = params["table"]
+        return jnp.einsum("...d,vd->...v", x, table,
+                          preferred_element_type=jnp.float32)
+
+
+class RMSNorm:
+    @staticmethod
+    def init(key, dim: int, *, param_dtype=jnp.float32):
+        return {"scale": ones_init()(key, (dim,), param_dtype)}
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-6):
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(orig_dtype)
+
+
+class LayerNorm:
+    @staticmethod
+    def init(key, dim: int, *, param_dtype=jnp.float32):
+        return {
+            "scale": jnp.ones((dim,), param_dtype),
+            "bias": jnp.zeros((dim,), param_dtype),
+        }
+
+    @staticmethod
+    def apply(params, x, *, eps: float = 1e-5):
+        orig_dtype = x.dtype
+        x = x.astype(jnp.float32)
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(orig_dtype)
+
+
+class BatchNorm:
+    """Batch norm with externally threaded running stats (used by the MLOps
+    DNN's deployment-parameter stream, per paper §3.2.1)."""
+
+    @staticmethod
+    def init(key, dim: int, *, param_dtype=jnp.float32):
+        del key
+        return {
+            "scale": jnp.ones((dim,), param_dtype),
+            "bias": jnp.zeros((dim,), param_dtype),
+        }
+
+    @staticmethod
+    def init_state(dim: int):
+        return {"mean": jnp.zeros((dim,), jnp.float32),
+                "var": jnp.ones((dim,), jnp.float32),
+                "count": jnp.zeros((), jnp.float32)}
+
+    @staticmethod
+    def apply(params, state, x, *, training: bool, momentum: float = 0.9,
+              eps: float = 1e-5):
+        if training:
+            mean = jnp.mean(x, axis=tuple(range(x.ndim - 1)))
+            var = jnp.var(x, axis=tuple(range(x.ndim - 1)))
+            new_state = {
+                "mean": momentum * state["mean"] + (1 - momentum) * mean,
+                "var": momentum * state["var"] + (1 - momentum) * var,
+                "count": state["count"] + 1.0,
+            }
+        else:
+            mean, var = state["mean"], state["var"]
+            new_state = state
+        y = (x - mean) * jax.lax.rsqrt(var + eps)
+        return y * params["scale"] + params["bias"], new_state
+
+
+class Conv1D:
+    """NLC 1-D convolution (used by the resource-metrics stream and by the
+    Mamba short conv). ``causal=True`` left-pads so output length == input."""
+
+    @staticmethod
+    def init(key, in_ch: int, out_ch: int, kernel: int, *, use_bias: bool = True,
+             param_dtype=jnp.float32, groups: int = 1):
+        kw, kb = jax.random.split(key)
+        fan_in = in_ch // groups * kernel
+        std = (1.0 / max(fan_in, 1)) ** 0.5
+        params = {"w": (std * jax.random.normal(kw, (kernel, in_ch // groups, out_ch))
+                        ).astype(param_dtype)}
+        if use_bias:
+            params["b"] = jnp.zeros((out_ch,), param_dtype)
+        return params
+
+    @staticmethod
+    def apply(params, x, *, stride: int = 1, causal: bool = False,
+              groups: int = 1, dtype=None):
+        w = params["w"]
+        if dtype is not None:
+            w = w.astype(dtype)
+            x = x.astype(dtype)
+        k = w.shape[0]
+        padding = [(k - 1, 0)] if causal else "SAME"
+        y = jax.lax.conv_general_dilated(
+            x, w,
+            window_strides=(stride,),
+            padding=padding,
+            dimension_numbers=("NLC", "LIO", "NLC"),
+            feature_group_count=groups,
+        )
+        if "b" in params:
+            y = y + params["b"].astype(y.dtype)
+        return y
+
+
+class MLP:
+    """Plain dense stack with activation, used by the control-plane DNN."""
+
+    @staticmethod
+    def init(key, dims, *, use_bias: bool = True, param_dtype=jnp.float32):
+        layers = []
+        keys = jax.random.split(key, len(dims) - 1)
+        for i, k in enumerate(keys):
+            layers.append(Linear.init(k, dims[i], dims[i + 1], use_bias=use_bias,
+                                      param_dtype=param_dtype))
+        return {"layers": layers}
+
+    @staticmethod
+    def apply(params, x, *, act=jax.nn.relu, final_act=None):
+        n = len(params["layers"])
+        for i, layer in enumerate(params["layers"]):
+            x = Linear.apply(layer, x)
+            if i < n - 1:
+                x = act(x)
+            elif final_act is not None:
+                x = final_act(x)
+        return x

@@ -1,0 +1,47 @@
+"""GRU recurrence for the performance-indicator stream (paper §3.2.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import lecun_normal
+
+
+class GRU:
+    @staticmethod
+    def init(key, in_dim: int, hidden: int, *, param_dtype=jnp.float32):
+        k1, k2, k3 = jax.random.split(key, 3)
+        init = lecun_normal(in_axis=0)
+        return {
+            "wi": init(k1, (in_dim, 3 * hidden), param_dtype),   # input → r,z,n
+            "wh": init(k2, (hidden, 3 * hidden), param_dtype),   # hidden → r,z,n
+            "b": jnp.zeros((3 * hidden,), param_dtype),
+        }
+
+    @staticmethod
+    def cell(params, h, x):
+        hidden = h.shape[-1]
+        gi = x @ params["wi"] + params["b"]
+        gh = h @ params["wh"]
+        i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+        h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+        r = jax.nn.sigmoid(i_r + h_r)
+        z = jax.nn.sigmoid(i_z + h_z)
+        n = jnp.tanh(i_n + r * h_n)
+        del hidden
+        return (1.0 - z) * n + z * h
+
+    @staticmethod
+    def apply(params, xs, h0=None):
+        """xs: (batch, time, in_dim) → (hidden_final, all_hidden (B,T,H))."""
+        batch = xs.shape[0]
+        hidden = params["wh"].shape[0]
+        if h0 is None:
+            h0 = jnp.zeros((batch, hidden), xs.dtype)
+
+        def step(h, x_t):
+            h = GRU.cell(params, h, x_t)
+            return h, h
+
+        h_final, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+        return h_final, jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,29 @@
+from repro.optim.adamw import adamw, sgd, apply_updates, global_norm, clip_by_global_norm
+from repro.optim.schedule import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    wsd_schedule,
+)
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    error_feedback_compress,
+    init_error_feedback,
+)
+
+__all__ = [
+    "adamw",
+    "sgd",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "wsd_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "error_feedback_compress",
+    "init_error_feedback",
+]

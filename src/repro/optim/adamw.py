@@ -1,0 +1,104 @@
+"""AdamW (decoupled weight decay) in optax style: init/update pairs.
+
+State and moments are kept in fp32 regardless of param dtype so that bf16
+training remains stable; the update is cast back to the param dtype at apply
+time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object       # pytree like params (fp32)
+    nu: object       # pytree like params (fp32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, mask=None):
+    """lr: float or callable(step)->float. mask: pytree of bools — True where
+    weight decay applies (defaults to ndim>=2 leaves, i.e. matrices only)."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(f32, params),
+                          nu=jax.tree.map(f32, params))
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        if mask is None:
+            decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+        else:
+            decay_mask = mask
+
+        def upd(g, m, v, p, do_decay):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - b2 ** step.astype(jnp.float32))
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if do_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        flat_u, flat_m, flat_v = [], [], []
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_m = jax.tree.leaves(state.mu)
+        leaves_v = jax.tree.leaves(state.nu)
+        leaves_p = jax.tree.leaves(params)
+        leaves_mask = jax.tree.leaves(decay_mask)
+        for g, m, v, p, dm in zip(leaves_g, leaves_m, leaves_v, leaves_p, leaves_mask):
+            u, m2, v2 = upd(g, m, v, p, dm)
+            flat_u.append(u)
+            flat_m.append(m2)
+            flat_v.append(v2)
+        updates = jax.tree.unflatten(treedef, flat_u)
+        new_state = AdamWState(step=step,
+                               mu=jax.tree.unflatten(treedef, flat_m),
+                               nu=jax.tree.unflatten(treedef, flat_v))
+        return updates, new_state
+
+    return init, update
+
+
+def sgd(lr, *, momentum: float = 0.0):
+    def init(params):
+        if momentum:
+            return {"step": jnp.zeros((), jnp.int32),
+                    "mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr_t = lr(state["step"] + 1) if callable(lr) else lr
+        if momentum:
+            new_mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads)
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), new_mom, params)
+            return updates, {"step": state["step"] + 1, "mom": new_mom}
+        updates = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype), grads, params)
+        return updates, {"step": state["step"] + 1}
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,63 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization trick).
+
+Error-feedback int8: each step compresses (grad + residual) to per-tensor-scaled
+int8, communicates the int8 payload, and carries the quantization error into
+the next step's residual. This keeps convergence close to fp32 SGD/Adam while
+cutting DCI (inter-pod) gradient traffic 4x vs bf16 / 8x vs fp32.
+
+The compress/decompress pair is pure and jit-safe so it can live inside the
+pjit'd train step; the pod-axis psum is then performed on the decompressed
+fp32 (hierarchical: in-pod reduce first at full precision, cross-pod on the
+compressed stream — see launch/train.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def error_feedback_compress(grads, residuals):
+    """Returns (compressed pytree of (q, scale), new_residuals).
+
+    decompress(q, scale) + residual' == grad + residual  (up to clipping).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = compress_int8(corrected)
+        deq = decompress_int8(q, scale)
+        new_r = corrected - deq
+        return (q, scale), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    comp, new_res = [], []
+    for g, r in zip(flat_g, flat_r):
+        c, nr = one(g, r)
+        comp.append(c)
+        new_res.append(nr)
+    return jax.tree.unflatten(treedef, comp), jax.tree.unflatten(treedef, new_res)
+
+
+def decompress_tree(compressed, dtype=jnp.float32):
+    """Inverse of the compress step over a pytree of (q, scale) tuples."""
+    def is_leaf(x):
+        return isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+
+    return jax.tree.map(lambda c: decompress_int8(c[0], c[1], dtype), compressed,
+                        is_leaf=is_leaf)

@@ -1,0 +1,46 @@
+"""LR schedules as callables(step) -> lr."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, *, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         *, final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                 *, decay_frac: float = 0.1):
+    """Warmup-stable-decay (used by several of the assigned archs' recipes)."""
+    decay_steps = int(total_steps * decay_frac)
+    stable_end = total_steps - decay_steps
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        decay = peak_lr * jnp.clip((total_steps - step) / max(decay_steps, 1), 0.0, 1.0)
+        lr = jnp.where(step < warmup_steps, warm,
+                       jnp.where(step < stable_end, peak_lr, decay))
+        return lr
+
+    return sched

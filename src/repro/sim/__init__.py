@@ -1,0 +1,25 @@
+"""Cluster + serving simulator grounded in the dry-run roofline numbers.
+
+The control plane (repro.core) optimizes against this data-plane model:
+workload traces (workload.py) drive a queueing serving model (serving.py)
+whose per-replica throughput/latency comes from the compiled dry-run cells
+(roofline_db.py); the cluster model (cluster.py) accounts cost/provisioning;
+baseline.py implements the paper's "traditional MLOps" comparison points.
+"""
+from repro.sim.cluster import Cluster, PROVIDERS, REGION_COST_MULT
+from repro.sim.roofline_db import RooflineDB, RooflineTerms, PEAK_FLOPS, HBM_BW, ICI_BW
+from repro.sim.serving import ServiceProfile, ServingModel, WorkloadSpec, mmc_wait_s
+from repro.sim.workload import REGIONS, TraceConfig, generate_trace
+from repro.sim.baseline import (
+    StaticAllocator, ThresholdAutoscaler, TRADITIONAL_STRATEGY,
+    traditional_deploy_seconds,
+)
+
+__all__ = [
+    "Cluster", "PROVIDERS", "REGION_COST_MULT",
+    "RooflineDB", "RooflineTerms", "PEAK_FLOPS", "HBM_BW", "ICI_BW",
+    "ServiceProfile", "ServingModel", "WorkloadSpec", "mmc_wait_s",
+    "REGIONS", "TraceConfig", "generate_trace",
+    "StaticAllocator", "ThresholdAutoscaler", "TRADITIONAL_STRATEGY",
+    "traditional_deploy_seconds",
+]

@@ -1,0 +1,60 @@
+"""Shared fixtures: tiny per-family model configs (CPU-fast).
+
+IMPORTANT: tests must see the default single CPU device — the 512-device
+XLA override belongs exclusively to launch/dryrun.py (and the subprocess
+sharding tests, which re-exec python with their own env).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import LM, ModelConfig, MoECfg, SSMCfg, HybridCfg
+
+B, S, V = 2, 16, 64
+
+
+def tiny(family, **kw):
+    base = dict(name=f"tiny-{family}", family=family, n_layers=2, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab=V,
+                param_dtype="float32", dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+TINY_CFGS = {
+    "dense": tiny("dense", qkv_bias=True),
+    "swa": tiny("dense", sliding_window=8),
+    "vlm": tiny("vlm", m_rope=True, m_rope_sections=(2, 1, 1), n_vision_patches=4),
+    # capacity_factor=4.0 ⇒ dropless at this size (decode consistency exact)
+    "moe": tiny("moe", moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=32,
+                                  capacity_factor=4.0)),
+    "ssm1": tiny("ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+                 ssm=SSMCfg(d_state=4, version=1)),
+    "ssm2": tiny("ssm", n_heads=0, n_kv_heads=0, d_ff=0,
+                 ssm=SSMCfg(d_state=4, version=2, headdim=8)),
+    "hybrid": tiny("hybrid", n_heads=4, n_kv_heads=4, d_ff=64,
+                   ssm=SSMCfg(d_state=4, version=2, headdim=8),
+                   hybrid=HybridCfg(attn_every=2, n_shared_blocks=2)),
+    "audio": tiny("audio", enc_dec=True, n_enc_layers=2),
+}
+
+
+def inputs_for(cfg, key, batch=B, seq=S):
+    out = {"tokens": jax.random.randint(key, (batch, seq), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        out["patches"] = jnp.ones((batch, cfg.n_vision_patches, cfg.d_model),
+                                  jnp.float32)
+    if cfg.enc_dec:
+        out["frames"] = jnp.ones((batch, seq, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(params=list(TINY_CFGS))
+def family_cfg(request):
+    return request.param, TINY_CFGS[request.param]

@@ -1,0 +1,158 @@
+"""Checkpoint manager (atomic commit, async, GC, restore) + data pipeline
+(deterministic counted stream — the preemption-resume contract) + the elastic
+re-mesh restore path on a 1-device mesh.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, TokenPipeline, extra_inputs
+from repro.models.steps import init_train_state, make_train_step
+
+
+def small_state(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, (8, 4)),
+            "nested": {"b": jnp.arange(5.0), "step": jnp.asarray(3, jnp.int32)}}
+
+
+def tree_equal(a, b):
+    return all(bool(jnp.array_equal(x, y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = small_state()
+    mgr.save(7, state, blocking=True)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, manifest = mgr.restore(like)
+    assert manifest["step"] == 7
+    assert tree_equal(restored, state)
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    state = small_state()
+    mgr.save(1, state)              # async
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert tree_equal(restored, state)
+
+
+def test_no_tmp_dirs_after_commit(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, small_state(), blocking=True)
+    assert not list(tmp_path.glob("*.tmp"))
+    assert (tmp_path / "step_1" / "manifest.json").exists()
+
+
+def test_gc_keeps_newest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, small_state(), blocking=True)
+    assert mgr.steps() == [3, 4]
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=5)
+    s1, s2 = small_state(1), small_state(2)
+    mgr.save(1, s1, blocking=True)
+    mgr.save(2, s2, blocking=True)
+    like = jax.tree.map(jnp.zeros_like, s1)
+    r1, _ = mgr.restore(like, step=1)
+    assert tree_equal(r1, s1) and not tree_equal(r1, s2)
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.zeros((4,))}, blocking=True)
+    (tmp_path / "step_1" / "w.npy").unlink()
+    np.save(tmp_path / "step_1" / "w.npy", np.zeros((5,)))
+    with pytest.raises(ValueError, match="shape mismatch"):
+        mgr.restore({"w": jnp.zeros((4,))})
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(tmp_path).restore({"w": jnp.zeros(2)})
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Full TrainState through the elastic re-mesh path on a (1,1) mesh —
+    the same code that re-shards onto a different topology after node loss."""
+    from repro.configs import get_smoke_config
+    from repro.launch.elastic import ReMesh, elastic_restore
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2.5-3b"), n_layers=2)
+    _, (opt_init, _) = make_train_step(cfg)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt_init)
+    state = state._replace(step=jnp.asarray(5, jnp.int32))
+    CheckpointManager(tmp_path).save(5, state, blocking=True)
+
+    state2, jitted, mesh = elastic_restore(tmp_path, cfg,
+                                           ReMesh(data_axis=1, model_axis=1))
+    assert tree_equal(state2.params, state.params)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    state3, metrics = jitted(state2, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state3.step) == 6
+
+
+# ---------------------------------------------------------------- data
+
+def test_pipeline_is_pure_in_step():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=4, seed=42)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    for step in (0, 7, 123):
+        b1, b2 = p1.batch(step), p2.batch(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_pipeline_steps_differ():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=4)
+    p = TokenPipeline(cfg)
+    assert not np.array_equal(p.batch(0)["tokens"], p.batch(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=2)
+    b = TokenPipeline(cfg).batch(0)
+    # labels[t] == tokens[t+1] within the same underlying (S+1) stream
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_within_vocab():
+    cfg = DataConfig(vocab=50, seq_len=64, global_batch=4)
+    b = TokenPipeline(cfg).batch(3)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 50
+    assert b["tokens"].dtype == np.int32
+
+
+def test_extra_inputs_deterministic():
+    from conftest import TINY_CFGS
+    cfg = TINY_CFGS["vlm"]
+    b = {"tokens": np.ones((2, 8), np.int32)}
+    e1, e2 = extra_inputs(cfg, b), extra_inputs(cfg, b)
+    np.testing.assert_array_equal(e1["patches"], e2["patches"])
+    assert e1["patches"].shape == (2, cfg.n_vision_patches, cfg.d_model)
+
+
+def test_resume_reproduces_future_batches():
+    """The preemption contract: a fresh pipeline at step k yields the exact
+    batch a continuously-running pipeline would have produced."""
+    cfg = DataConfig(vocab=70, seq_len=16, global_batch=2, seed=9)
+    run = [TokenPipeline(cfg).batch(s)["tokens"] for s in range(5)]
+    resumed = TokenPipeline(cfg)                 # "restarted process"
+    np.testing.assert_array_equal(resumed.batch(3)["tokens"], run[3])
+    np.testing.assert_array_equal(resumed.batch(4)["tokens"], run[4])

@@ -1,0 +1,124 @@
+"""Chunked (flash-style) attention and chunked cross-entropy: numerics and
+gradients must be identical to the full-materialization reference paths
+(EXPERIMENTS.md §Perf C3/C4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.steps as steps
+from repro.models import LM
+from repro.models.attention import Attention, _mask_bias, sdpa_ref
+
+from conftest import TINY_CFGS, inputs_for
+
+
+@pytest.fixture
+def qkv():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, None)])
+def test_chunked_attention_matches_full(qkv, causal, window, monkeypatch):
+    q, k, v = qkv
+    B, S = q.shape[:2]
+    monkeypatch.setattr(Attention, "CHUNK_Q", 16)   # force chunking
+    got = Attention._sdpa_masked(q, k, v, causal=causal, window=window)
+    q_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    bias = (_mask_bias(q_pos, jnp.arange(S), causal=causal, window=window)
+            if (causal or window is not None) else None)
+    want = sdpa_ref(q, k, v, bias)
+    np.testing.assert_allclose(got, want, atol=2e-6, rtol=2e-6)
+
+
+def test_chunked_attention_gradients_match(qkv, monkeypatch):
+    q, k, v = qkv
+
+    def loss(chunked):
+        if chunked:
+            monkeypatch.setattr(Attention, "CHUNK_Q", 16)
+        else:
+            monkeypatch.setattr(Attention, "CHUNK_Q", 10**9)
+        return lambda q_: Attention._sdpa_masked(
+            q_, k, v, causal=True, window=None).sum()
+
+    g_c = jax.grad(loss(True))(q)
+    g_f = jax.grad(loss(False))(q)
+    np.testing.assert_allclose(g_c, g_f, atol=3e-6, rtol=3e-6)
+
+
+def test_chunked_ce_matches_full():
+    cfg = TINY_CFGS["dense"]
+    key = jax.random.PRNGKey(1)
+    params, _ = LM.init(key, cfg)
+    B, S = 2, 64
+    batch = inputs_for(cfg, key, batch=B, seq=S)
+    labels = jax.random.randint(jax.random.fold_in(key, 9), (B, S), 0,
+                                cfg.vocab)
+    h, _ = LM.apply(params, batch, cfg, return_hidden=True)
+    ce_c = steps.chunked_cross_entropy(params, h, labels, cfg, chunk=16)
+    logits, _ = LM.apply(params, batch, cfg)
+    ce_f = steps.cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(ce_c), float(ce_f), rtol=1e-6)
+
+
+def test_chunked_ce_gradients_match():
+    cfg = TINY_CFGS["dense"]
+    key = jax.random.PRNGKey(2)
+    params, _ = LM.init(key, cfg)
+    B, S = 2, 64
+    batch = inputs_for(cfg, key, batch=B, seq=S)
+    labels = jax.random.randint(jax.random.fold_in(key, 9), (B, S), 0,
+                                cfg.vocab)
+
+    def loss_chunked(p):
+        h, _ = LM.apply(p, batch, cfg, return_hidden=True)
+        return steps.chunked_cross_entropy(p, h, labels, cfg, chunk=16)
+
+    def loss_full(p):
+        logits, _ = LM.apply(p, batch, cfg)
+        return steps.cross_entropy(logits, labels)
+
+    g1, g2 = jax.grad(loss_chunked)(params), jax.grad(loss_full)(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+
+def test_chunked_ce_respects_ignore_id():
+    cfg = TINY_CFGS["dense"]
+    key = jax.random.PRNGKey(3)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key, batch=2, seq=32)
+    labels = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    labels = labels.at[:, 16:].set(-1)              # mask second half
+    h, _ = LM.apply(params, batch, cfg, return_hidden=True)
+    ce_c = steps.chunked_cross_entropy(params, h, labels, cfg, chunk=8)
+    logits, _ = LM.apply(params, batch, cfg)
+    ce_f = steps.cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(ce_c), float(ce_f), rtol=1e-6)
+
+
+def test_bf16_cast_train_step_still_learns():
+    """cast_params_sharded path: bf16 compute with fp32 masters converges."""
+    import dataclasses
+    cfg = dataclasses.replace(TINY_CFGS["dense"], dtype="bfloat16")
+    key = jax.random.PRNGKey(4)
+    batch = inputs_for(cfg, key)
+    batch["labels"] = batch["tokens"]
+    train_step, (opt_init, _) = steps.make_train_step(cfg, lr=5e-3)
+    state = steps.init_train_state(key, cfg, opt_init)
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+    # masters stay fp32
+    assert all(p.dtype == jnp.float32 for p in jax.tree.leaves(state.params))

@@ -1,0 +1,343 @@
+"""The paper's control plane: forecaster, DynamicScaler (§3.3.2), predictive
+allocator (§3.3.1), strategy selection + rollout/canary (§3.4), monitoring +
+adaptation (§3.5).  Property tests pin the safety envelope: decisions never
+violate constraints regardless of metric values.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation.forecaster import WorkloadForecaster
+from repro.core.allocation.rl import ACTIONS, reward_fn
+from repro.core.monitoring.adapt import AdaptiveOptimizer
+from repro.core.monitoring.anomaly import AnomalyDetector, trend
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.orchestration.rollout import (
+    CanaryAnalyzer, CanarySample, Phase, RolloutManager,
+    binomial_z_pvalue, welch_t_pvalue_one_sided,
+)
+from repro.core.orchestration.selector import (
+    DecisionTreeSelector, DeploymentContext, OutcomeStats,
+)
+from repro.core.orchestration.strategies import (
+    CATALOG, DeployEnv, total_deploy_seconds,
+)
+from repro.core.scaling.scaler import (
+    DynamicScaler, ScalingConstraints, ScalingOptimizer,
+)
+from repro.sim.baseline import ThresholdAutoscaler, traditional_deploy_seconds
+
+
+def linear_perf_model(replicas: int, rps: float):
+    """Simple capacity model: each replica serves 10 rps at 100 ms; latency
+    blows past the SLO when utilization > 1."""
+    cap = replicas * 10.0
+    util = min(rps / max(cap, 1e-9), 2.0)
+    lat = 100.0 if util <= 0.8 else 100.0 + 800.0 * (util - 0.8)
+    return lat, min(util, 1.0)
+
+
+# ---------------------------------------------------------------- forecaster
+
+def test_forecaster_learns_diurnal_pattern():
+    tpd = 48
+    f = WorkloadForecaster(ticks_per_day=tpd)
+    t = np.arange(6 * tpd)
+    series = 100 + 50 * np.sin(2 * np.pi * t / tpd)
+    for v in series[:5 * tpd]:
+        f.update(v)
+    errs = []
+    for v in series[5 * tpd:]:
+        errs.append(abs(f.predict(1) - v))
+        f.update(v)
+    # after five days the one-step error is a small fraction of the amplitude
+    assert np.mean(errs) < 12.0, np.mean(errs)
+
+
+def test_forecaster_peak_geq_mean_prediction():
+    f = WorkloadForecaster(ticks_per_day=24)
+    for v in 100 + 10 * np.random.default_rng(0).standard_normal(100):
+        f.update(v)
+    assert f.predict_peak(5) >= f.predict(1) - 1e-9
+
+
+def test_forecaster_nonnegative():
+    f = WorkloadForecaster(ticks_per_day=24)
+    for v in (5.0, 1.0, 0.5, 0.1):
+        f.update(v)
+    assert f.predict(1) >= 0.0
+
+
+# ---------------------------------------------------------------- scaler
+
+@settings(max_examples=40, deadline=None)
+@given(
+    current=st.integers(1, 64),
+    load=st.floats(0.0, 5000.0),
+    max_step=st.integers(1, 8),
+)
+def test_scaler_respects_constraints(current, load, max_step):
+    c = ScalingConstraints(min_replicas=1, max_replicas=64, max_step=max_step)
+    opt = ScalingOptimizer(linear_perf_model)
+    d = opt.optimize(current_load={}, predicted_load=load, efficiency=0.5,
+                     constraints=c, current_replicas=current)
+    assert c.min_replicas <= d.target_replicas <= c.max_replicas
+    assert abs(d.delta) <= max_step
+
+
+def test_scaler_scales_up_for_load():
+    c = ScalingConstraints(slo_ms=200.0, max_step=8)
+    opt = ScalingOptimizer(linear_perf_model)
+    d = opt.optimize(current_load={}, predicted_load=300.0, efficiency=0.5,
+                     constraints=c, current_replicas=4)
+    assert d.delta > 0           # 4 replicas = 40 rps capacity, need ~37+
+
+
+def test_scaler_picks_cheapest_feasible():
+    c = ScalingConstraints(slo_ms=200.0, max_step=32, max_replicas=64)
+    opt = ScalingOptimizer(linear_perf_model)
+    d = opt.optimize(current_load={}, predicted_load=100.0, efficiency=0.5,
+                     constraints=c, current_replicas=32)
+    # 100 rps at util<=0.85 → 12 replicas suffice; optimizer must shrink
+    assert d.target_replicas <= 16
+
+
+def test_scaler_downscale_hysteresis_and_cooldown():
+    """Scale-down requires the optimizer to propose a lower target for
+    down_sustain consecutive ticks, and is then rate-limited by cooldown."""
+    f = WorkloadForecaster(ticks_per_day=24)
+    for v in (50.0,) * 10:
+        f.update(v)
+    s = DynamicScaler(f, linear_perf_model, horizon_ticks=2, down_sustain=3)
+    c = ScalingConstraints(cooldown_ticks=5, max_step=8)
+    m = {"rps": 50.0, "rps_window": [50.0] * 4, "flop_util": 0.2}
+    d1 = s.compute_scaling_decision(m, c, current_replicas=32)
+    d2 = s.compute_scaling_decision(m, c, current_replicas=32)
+    assert d1.delta == 0 and d1.reason == "down_hysteresis"
+    assert d2.delta == 0 and d2.reason == "down_hysteresis"
+    d3 = s.compute_scaling_decision(m, c, current_replicas=32)
+    assert d3.delta < 0                       # sustained for 3 ticks → down
+    d4 = s.compute_scaling_decision(m, c, current_replicas=d3.target_replicas)
+    assert d4.delta == 0                      # hysteresis counter restarted
+
+
+def test_cluster_scale_down_cancels_cold_replicas_first():
+    from repro.sim import Cluster
+    c = Cluster(seed=0)
+    c.scale_to(4)
+    c.tick = 10**6                            # 4 warm replicas
+    c.scale_to(6)                             # +2 cold (provisioning)
+    assert c.ready_replicas() == 4
+    c.scale_to(4)                             # must cancel the 2 cold ones
+    assert c.ready_replicas() == 4 and c.total_replicas() == 4
+
+
+def test_scaler_analyze_current_load():
+    f = WorkloadForecaster()
+    s = DynamicScaler(f, linear_perf_model)
+    stats = s.analyze_current_load({"rps_window": [10.0, 20.0, 30.0]})
+    assert stats["peak"] == 30.0 and stats["current"] == 30.0
+    assert stats["mean"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------- reward
+
+def test_reward_prefers_good_operating_points():
+    good = reward_fn(utilization=0.8, latency_ms=150, slo_ms=200,
+                     cost_per_tick=1.0, cost_scale=10.0)
+    slo_violation = reward_fn(utilization=0.9, latency_ms=400, slo_ms=200,
+                              cost_per_tick=1.0, cost_scale=10.0)
+    wasteful = reward_fn(utilization=0.2, latency_ms=150, slo_ms=200,
+                         cost_per_tick=8.0, cost_scale=10.0)
+    assert good > slo_violation and good > wasteful
+
+
+# ---------------------------------------------------------------- selector
+
+def test_tree_selector_branches():
+    t = DecisionTreeSelector()
+    base = dict(model_params_b=7, traffic_rps=500, slo_ms=200,
+                error_budget=0.01, spare_capacity_frac=0.2,
+                cost_sensitivity=0.5, is_critical=True)
+    assert t.select(DeploymentContext(**base)) == "canary_10"
+    assert t.select(DeploymentContext(**{**base, "model_params_b": 70})) \
+        == "canary_progressive"
+    assert t.select(DeploymentContext(**{**base, "model_params_b": 70,
+                                         "spare_capacity_frac": 0.02})) \
+        == "rolling"
+    assert t.select(DeploymentContext(**{**base, "is_critical": False,
+                                         "traffic_rps": 2})) == "all_at_once"
+    assert t.select(DeploymentContext(**{**base, "spare_capacity_frac": 1.2,
+                                         "cost_sensitivity": 0.1})) \
+        == "blue_green"
+
+
+def test_outcome_stats_rollback_rate():
+    s = OutcomeStats()
+    s.record("canary_10", deploy_s=100, rolled_back=False)
+    s.record("canary_10", deploy_s=120, rolled_back=True)
+    assert s.rollback_rate("canary_10") == pytest.approx(0.5)
+    assert s.rollback_rate("rolling") == 0.0
+
+
+# ---------------------------------------------------------------- deploy time
+
+def test_deploy_time_traditional_vs_optimized():
+    """The §4.1.1 structure: traditional (sequential + manual gates + cold
+    compile cache) must be substantially slower than an optimized strategy."""
+    env = DeployEnv(params_bytes=14e9, chips_per_replica=16, n_replicas=16,
+                    tick_s=120.0)
+    trad = traditional_deploy_seconds(env)
+    fast = total_deploy_seconds(CATALOG["canary_progressive"], env)
+    assert trad > 1.4 * fast
+    assert trad > 1800          # tens of minutes, like the paper's 45 min
+
+
+def test_all_strategies_end_at_full_traffic():
+    for s in CATALOG.values():
+        assert s.stages[-1] == 1.0 or s.name == "shadow"
+
+
+# ---------------------------------------------------------------- canary
+
+def test_welch_detects_regression():
+    rng = np.random.default_rng(0)
+    control = rng.normal(100, 10, 400)
+    canary_bad = rng.normal(130, 10, 400)
+    canary_ok = rng.normal(100, 10, 400)
+    assert welch_t_pvalue_one_sided(canary_bad, control) < 0.01
+    assert welch_t_pvalue_one_sided(canary_ok, control) > 0.05
+
+
+def test_binomial_detects_error_spike():
+    assert binomial_z_pvalue(40, 1000, 5, 1000) < 0.01
+    assert binomial_z_pvalue(6, 1000, 5, 1000) > 0.05
+
+
+def _sample(rng, lat_mean, err_rate=0.001, util=0.6, n=400):
+    return CanarySample(latencies_ms=rng.normal(lat_mean, 8, n),
+                        n_requests=n, n_errors=int(err_rate * n),
+                        utilization=util)
+
+
+def test_rollout_completes_when_healthy():
+    rng = np.random.default_rng(1)
+    env = DeployEnv(params_bytes=1e9, chips_per_replica=16, n_replicas=8)
+    mgr = RolloutManager("canary_10", env)
+    mgr.start()
+    for _ in range(20):
+        if mgr.state.phase in (Phase.COMPLETED, Phase.ROLLED_BACK):
+            break
+        mgr.tick(canary=_sample(rng, 100), control=_sample(rng, 100))
+    assert mgr.state.phase == Phase.COMPLETED
+    assert mgr.state.traffic_frac == 1.0
+    assert not mgr.state.rolled_back
+
+
+def test_rollout_rolls_back_on_latency_regression():
+    rng = np.random.default_rng(2)
+    env = DeployEnv(params_bytes=1e9, chips_per_replica=16, n_replicas=8)
+    mgr = RolloutManager("canary_10", env)
+    mgr.start()
+    for _ in range(20):
+        if mgr.state.phase in (Phase.COMPLETED, Phase.ROLLED_BACK):
+            break
+        mgr.tick(canary=_sample(rng, 150), control=_sample(rng, 100))
+    assert mgr.state.phase == Phase.ROLLED_BACK
+    assert mgr.state.traffic_frac == 0.0
+
+
+def test_rollout_tolerates_tiny_regression():
+    """Practical-significance guard: a 2% latency delta on huge samples is
+    statistically significant but must NOT roll back (min 5% regression)."""
+    rng = np.random.default_rng(3)
+    env = DeployEnv(params_bytes=1e9, chips_per_replica=16, n_replicas=8)
+    mgr = RolloutManager("canary_10", env)
+    mgr.start()
+    for _ in range(20):
+        if mgr.state.phase in (Phase.COMPLETED, Phase.ROLLED_BACK):
+            break
+        mgr.tick(canary=_sample(rng, 102, n=5000),
+                 control=_sample(rng, 100, n=5000))
+    assert mgr.state.phase == Phase.COMPLETED
+
+
+def test_rollout_error_spike_rolls_back():
+    rng = np.random.default_rng(4)
+    env = DeployEnv(params_bytes=1e9, chips_per_replica=16, n_replicas=8)
+    mgr = RolloutManager("canary_progressive", env)
+    mgr.start()
+    for _ in range(30):
+        if mgr.state.phase in (Phase.COMPLETED, Phase.ROLLED_BACK):
+            break
+        mgr.tick(canary=_sample(rng, 100, err_rate=0.05),
+                 control=_sample(rng, 100, err_rate=0.001))
+    assert mgr.state.phase == Phase.ROLLED_BACK
+
+
+# ---------------------------------------------------------------- monitoring
+
+def test_collector_aggregates_and_flags_stragglers():
+    c = MetricsCollector(straggler_factor=1.5)
+    for rid in range(4):
+        lat = [100.0] * 10 if rid != 3 else [400.0] * 10
+        c.submit(ReplicaReport(replica_id=rid, tick=0, latency_ms_samples=lat,
+                               n_requests=10, n_errors=0, flop_util=0.5,
+                               hbm_util=0.4, ici_util=0.3, mem_frac=0.6,
+                               queue_depth=2))
+    rec = c.aggregate(0, n_replicas=4, max_replicas=8)
+    assert rec["rps"] == 40
+    assert rec["replicas_frac"] == 0.5
+    assert 100 <= rec["latency_p50"] <= 400
+    assert c.stragglers() == [3]
+
+
+def test_collector_decays_stale_replicas():
+    c = MetricsCollector()
+    c.submit(ReplicaReport(0, tick=0, latency_ms_samples=[100], n_requests=5,
+                           n_errors=0, flop_util=1.0, hbm_util=1.0,
+                           ici_util=1.0, mem_frac=1.0, queue_depth=0))
+    rec = c.aggregate(3, n_replicas=1, max_replicas=8)   # 3 ticks stale
+    assert rec["flop_util"] == pytest.approx(0.125)      # 0.5^3
+
+
+def test_anomaly_detector_flags_spike_only():
+    d = AnomalyDetector(z_threshold=4.0, min_history=8)
+    rng = np.random.default_rng(5)
+    anomalies = []
+    for t in range(60):
+        v = 100 + rng.normal(0, 2) + (500 if t == 50 else 0)
+        anomalies += d.update(t, {"rps": v})
+    assert any(a.tick == 50 and a.kind == "spike" for a in anomalies)
+    assert all(a.tick == 50 for a in anomalies)          # no false positives
+
+
+def test_trend_estimator():
+    assert trend(np.arange(50.0)) == pytest.approx(1.0, abs=0.05)
+    assert abs(trend(np.full(50, 7.0))) < 1e-9
+
+
+def test_adaptive_optimizer_moves_knobs_within_bounds():
+    a = AdaptiveOptimizer(eval_window=4)
+    for i in range(40):
+        a.push({"flop_util": 0.5}, violations=i % 3, cost=1.0)
+        st = a.maybe_adapt()
+    assert 1 <= a.state.horizon <= 12
+    assert 1 <= a.state.cooldown <= 12
+    assert 0.6 <= a.state.util_hi <= 0.95
+    base = ScalingConstraints()
+    c = a.constraints(base)
+    assert c.cooldown_ticks == a.state.cooldown
+
+
+# ---------------------------------------------------------------- baseline
+
+def test_threshold_autoscaler_is_reactive_with_patience():
+    t = ThresholdAutoscaler(hi=0.8, lo=0.3, patience=2, max_step=2)
+    assert t.decide({"flop_util": 0.9}, 4) == 4      # patience 1
+    assert t.decide({"flop_util": 0.9}, 4) == 6      # fires
+    assert t.decide({"flop_util": 0.5}, 6) == 6      # in band
+    assert t.decide({"flop_util": 0.1}, 6) == 6
+    assert t.decide({"flop_util": 0.1}, 6) == 5      # down by 1

@@ -1,0 +1,74 @@
+"""collective_bytes(): the HLO wire-cost parser the roofline reads.
+
+Synthetic post-SPMD HLO lines pin the ring-cost formulas, group-size
+parsing (iota and explicit forms), async -start handling, and the
+bf16→f32 all-reduce promotion correction (XLA:CPU promotes reduction
+wires to f32; TPU reduces native bf16).
+"""
+import pytest
+
+from repro.launch.hlo_cost import collective_bytes
+
+GiB = 2**30
+
+
+def test_all_gather_ring_cost():
+    # result 1024 f32 = 4096 B, groups of 16 → wire = 15/16 × 4096
+    hlo = ("%ag = f32[1024]{0} all-gather(%x), channel_id=1, "
+           "replica_groups=[16,16]<=[256], dimensions={0}")
+    total, detail = collective_bytes(hlo)
+    assert total == pytest.approx(15 / 16 * 4096)
+    assert detail["counts"]["all-gather"] == 1
+
+
+def test_all_reduce_ring_cost():
+    hlo = ("%ar = f32[1000]{0} all-reduce(%x), channel_id=2, "
+           "replica_groups=[1,8]<=[8], to_apply=%add.1")
+    total, _ = collective_bytes(hlo)
+    assert total == pytest.approx(2 * 7 / 8 * 4000)
+
+
+def test_reduce_scatter_cost():
+    hlo = ("%rs = bf16[256]{0} reduce-scatter(%x), channel_id=3, "
+           "replica_groups=[1,4]<=[4], dimensions={0}, to_apply=%add.2")
+    total, _ = collective_bytes(hlo)
+    assert total == pytest.approx(3 * 512)      # (n-1) × result
+
+
+def test_collective_permute_and_async_start():
+    hlo = "\n".join([
+        "%cp = f32[100]{0} collective-permute(%x), channel_id=4",
+        "%ag = f32[64]{0} all-gather-start(%y), channel_id=5, "
+        "replica_groups=[1,2]<=[2], dimensions={0}",
+    ])
+    total, detail = collective_bytes(hlo)
+    assert detail["bytes"]["collective-permute"] == 400
+    assert detail["counts"]["all-gather"] == 1
+
+
+def test_explicit_group_form():
+    hlo = ("%ar = f32[8]{0} all-reduce(%x), "
+           "replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add")
+    total, _ = collective_bytes(hlo)
+    assert total == pytest.approx(2 * 3 / 4 * 32)
+
+
+def test_promoted_bf16_reduction_corrected_in_detail():
+    """Promoted (bf16→f32) reductions: raw total keeps the f32 width
+    (comparable on this backend); the TPU-corrected total halves them."""
+    hlo = "\n".join([
+        "%ar1 = f32[1000]{0} all-reduce(%a), replica_groups=[1,8]<=[8], "
+        "to_apply=%add.10.clone_promoted",
+        "%ar2 = f32[1000]{0} all-reduce(%b), replica_groups=[1,8]<=[8], "
+        "to_apply=%add.11",
+    ])
+    total, detail = collective_bytes(hlo)
+    one = 2 * 7 / 8 * 4000
+    assert total == pytest.approx(2 * one)
+    assert detail["tpu_corrected_total"] == pytest.approx(1.5 * one)
+
+
+def test_single_device_groups_skipped():
+    hlo = "%ar = f32[8]{0} all-reduce(%x), replica_groups=[8,1]<=[8], to_apply=%a"
+    total, _ = collective_bytes(hlo)
+    assert total == 0.0

@@ -1,0 +1,218 @@
+"""Model-family behaviour: forward shapes, prefill/decode consistency with the
+full forward, train-step finiteness, family-specific invariants.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import LM, ModelConfig, MoECfg
+from repro.models.steps import (
+    cross_entropy, init_train_state, make_train_step,
+)
+
+from conftest import TINY_CFGS, inputs_for, tiny, B, S, V
+
+
+# ---------------------------------------------------------------- per family
+
+def test_forward_shapes_and_finite(family_cfg):
+    name, cfg = family_cfg
+    key = jax.random.PRNGKey(0)
+    params, axes = LM.init(key, cfg)
+    logits, aux = LM.apply(params, inputs_for(cfg, key), cfg)
+    assert logits.shape == (B, S, V)
+    assert bool(jnp.isfinite(logits).all()), name
+    # axes pytree mirrors params exactly (strict zip raises on mismatch)
+    jax.tree.map(lambda p, a: None, params,
+                 jax.tree.map(lambda x: x, axes,
+                              is_leaf=lambda x: isinstance(x, tuple)))
+
+
+def test_prefill_matches_full_forward(family_cfg):
+    name, cfg = family_cfg
+    key = jax.random.PRNGKey(1)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key)
+    logits, _ = LM.apply(params, batch, cfg)
+    lp, cache = LM.prefill(params, batch, cfg, max_seq=S + 4)
+    assert lp.shape == (B, 1, V)
+    np.testing.assert_allclose(lp[:, 0], logits[:, -1], atol=2e-4, rtol=2e-4)
+    assert int(cache["index"]) == S
+
+
+def test_decode_matches_extended_forward(family_cfg):
+    """One decode step == full forward on the (prompt + new token) sequence.
+
+    Skipped where the comparison is ill-defined: vlm (patch prefix changes
+    position bookkeeping between S and S+1) and enc-dec (decoder grows but
+    encoder input does not)."""
+    name, cfg = family_cfg
+    if cfg.enc_dec or cfg.family == "vlm":
+        pytest.skip("decode consistency checked via shapes for this family")
+    key = jax.random.PRNGKey(2)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key)
+    lp, cache = LM.prefill(params, batch, cfg, max_seq=S + 4)
+    tok = jnp.argmax(lp[:, 0], -1).astype(jnp.int32)[:, None]
+    ld, cache2 = LM.decode(params, tok, cfg, cache)
+    assert int(cache2["index"]) == S + 1
+    full, _ = LM.apply(
+        params, {"tokens": jnp.concatenate([batch["tokens"], tok], 1)}, cfg)
+    np.testing.assert_allclose(ld[:, 0], full[:, -1], atol=5e-4, rtol=5e-4)
+
+
+def test_multi_step_decode_finite(family_cfg):
+    name, cfg = family_cfg
+    key = jax.random.PRNGKey(3)
+    params, _ = LM.init(key, cfg)
+    lp, cache = LM.prefill(params, inputs_for(cfg, key), cfg, max_seq=S + 8)
+    tok = jnp.argmax(lp[:, 0], -1).astype(jnp.int32)[:, None]
+    for _ in range(4):
+        ld, cache = LM.decode(params, tok, cfg, cache)
+        assert bool(jnp.isfinite(ld).all())
+        tok = jnp.argmax(ld[:, 0], -1).astype(jnp.int32)[:, None]
+
+
+def test_train_step_decreases_loss(family_cfg):
+    name, cfg = family_cfg
+    key = jax.random.PRNGKey(4)
+    batch = inputs_for(cfg, key)
+    batch["labels"] = batch["tokens"]
+    train_step, (opt_init, _) = make_train_step(cfg, lr=5e-3)
+    state = init_train_state(key, cfg, opt_init)
+    step = jax.jit(train_step)
+    losses = []
+    for _ in range(8):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], f"{name}: no learning {losses}"
+
+
+# ---------------------------------------------------------------- invariants
+
+def test_swa_equals_dense_when_window_covers_seq():
+    dense = TINY_CFGS["dense"]
+    wide = dataclasses.replace(dense, sliding_window=4 * S)
+    key = jax.random.PRNGKey(5)
+    params, _ = LM.init(key, dense)
+    batch = inputs_for(dense, key)
+    l1, _ = LM.apply(params, batch, dense)
+    l2, _ = LM.apply(params, batch, wide)
+    np.testing.assert_allclose(l1, l2, atol=1e-5, rtol=1e-5)
+
+
+def test_swa_cache_is_window_bounded():
+    cfg = TINY_CFGS["swa"]             # window 8
+    spec = LM.cache_spec(cfg, batch=2, max_seq=1024)
+    k_shape = spec["layers"]["k"][0]
+    assert k_shape[2] == cfg.sliding_window     # (L, B, W, KV, hd)
+
+
+def test_swa_decode_beyond_window_matches_full_forward():
+    """Ring-buffer correctness: decode far past the window must still equal
+    the sliding-window full forward on the extended sequence."""
+    cfg = TINY_CFGS["swa"]             # window = 8 < S = 16
+    key = jax.random.PRNGKey(6)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key)
+    lp, cache = LM.prefill(params, batch, cfg, max_seq=S + 8)
+    toks = batch["tokens"]
+    tok = jnp.argmax(lp[:, 0], -1).astype(jnp.int32)[:, None]
+    for _ in range(6):                 # wraps the ring nearly once
+        toks = jnp.concatenate([toks, tok], 1)
+        ld, cache = LM.decode(params, tok, cfg, cache)
+        full, _ = LM.apply(params, {"tokens": toks}, cfg)
+        np.testing.assert_allclose(ld[:, 0], full[:, -1], atol=5e-4, rtol=5e-4)
+        tok = jnp.argmax(ld[:, 0], -1).astype(jnp.int32)[:, None]
+
+
+def test_moe_capacity_drops_are_the_only_decode_divergence():
+    """With capacity_factor small, the full forward drops tokens (decode does
+    not — each token trivially fits), so outputs may diverge; with a large
+    factor there are no drops and decode is exact.  This pins the semantics."""
+    tight = tiny("moe", moe=MoECfg(n_experts=4, top_k=2, d_ff_expert=32,
+                                   capacity_factor=0.5))
+    key = jax.random.PRNGKey(7)
+    params, _ = LM.init(key, tight)
+    batch = inputs_for(tight, key)
+    _, aux = LM.apply(params, batch, tight)
+    assert float(aux["drop_frac"]) > 0.0       # tokens were dropped
+    loose = TINY_CFGS["moe"]
+    params, _ = LM.init(key, loose)
+    _, aux = LM.apply(params, batch, loose)
+    assert float(aux["drop_frac"]) == 0.0
+
+
+def test_moe_router_load_balance_loss_bounds():
+    """Per-layer lb_loss ≥ 1 (equality iff perfectly balanced); expert_load
+    sums to 1.  Checked on the MoE layer directly (LM aggregates over scan)."""
+    from repro.models.moe import MoE
+    cfg = TINY_CFGS["moe"]
+    key = jax.random.PRNGKey(8)
+    params, _ = MoE.init(key, cfg.d_model, cfg.moe)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    _, aux = MoE.apply(params, x, cfg.moe)
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-3
+    np.testing.assert_allclose(float(jnp.sum(aux["expert_load"])), 1.0,
+                               atol=1e-5)
+    # LM-level: summed over the 2 scanned layers
+    lparams, _ = LM.init(key, cfg)
+    _, lm_aux = LM.apply(lparams, inputs_for(cfg, key), cfg)
+    assert float(lm_aux["lb_loss"]) >= cfg.n_layers * (1.0 - 1e-3)
+
+
+def test_scan_and_unrolled_agree(family_cfg):
+    name, cfg = family_cfg
+    key = jax.random.PRNGKey(9)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key)
+    l_scan, _ = LM.apply(params, batch, cfg)
+    unrolled = dataclasses.replace(cfg, use_scan=False, remat="none")
+    l_un, _ = LM.apply(params, batch, unrolled)
+    np.testing.assert_allclose(l_scan, l_un, atol=2e-4, rtol=2e-4)
+
+
+def test_vlm_patches_change_only_prefix_rows():
+    cfg = TINY_CFGS["vlm"]
+    key = jax.random.PRNGKey(10)
+    params, _ = LM.init(key, cfg)
+    batch = inputs_for(cfg, key)
+    l1, _ = LM.apply(params, batch, cfg)
+    batch2 = dict(batch)
+    batch2["patches"] = batch["patches"] * 2.0
+    l2, _ = LM.apply(params, batch2, cfg)
+    # causal: token positions *before* the patch prefix end can change, but
+    # the model must remain finite and differ somewhere (patches are used)
+    assert not bool(jnp.allclose(l1, l2))
+
+
+def test_cross_entropy_matches_naive():
+    key = jax.random.PRNGKey(11)
+    logits = jax.random.normal(key, (3, 5, 17))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (3, 5), 0, 17)
+    got = cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    want = -jnp.mean(jnp.take_along_axis(p, labels[..., None], -1))
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_cross_entropy_ignores_masked_labels():
+    key = jax.random.PRNGKey(12)
+    logits = jax.random.normal(key, (2, 4, 9))
+    labels = jnp.array([[1, 2, -1, -1], [3, -1, -1, -1]])
+    got = cross_entropy(logits, labels)
+    p = jax.nn.log_softmax(logits, -1)
+    want = -(p[0, 0, 1] + p[0, 1, 2] + p[1, 0, 3]) / 3
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_param_count_analytic_close_to_actual(family_cfg):
+    name, cfg = family_cfg
+    params, _ = LM.init(jax.random.PRNGKey(0), cfg)
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    est = cfg.n_params()
+    assert abs(est - actual) / actual < 0.15, (name, est, actual)

@@ -1,0 +1,123 @@
+"""Optimizer substrate: AdamW math vs a numpy reference, global-norm clipping,
+LR schedules, and the error-feedback int8 gradient compression invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+from repro.optim.adamw import AdamWState
+from repro.optim.compression import (
+    compress_int8, decompress_int8, decompress_tree, error_feedback_compress,
+    init_error_feedback,
+)
+from repro.optim.schedule import linear_warmup_cosine, wsd_schedule
+
+
+def test_adamw_matches_numpy_reference():
+    """2-D params (weight decay applies); 1-D params (no decay by default)."""
+    lr, wd, b1, b2, eps = 1e-2, 0.1, 0.9, 0.999, 1e-8
+    opt_init, opt_update = adamw(lr, weight_decay=wd, b1=b1, b2=b2, eps=eps)
+    p = {"w": jnp.array([[1.0, -2.0, 3.0]]), "b": jnp.array([0.5])}
+    g = {"w": jnp.array([[0.1, 0.2, -0.3]]), "b": jnp.array([0.05])}
+    state = opt_init(p)
+    ref = {k: np.asarray(p[k]) for k in p}
+    mom = {k: np.zeros_like(ref[k]) for k in p}
+    vel = {k: np.zeros_like(ref[k]) for k in p}
+    for t in range(1, 4):
+        updates, state = opt_update(g, state, p)
+        p = apply_updates(p, updates)
+        for k in ref:
+            gw = np.asarray(g[k])
+            mom[k] = b1 * mom[k] + (1 - b1) * gw
+            vel[k] = b2 * vel[k] + (1 - b2) * gw ** 2
+            mhat = mom[k] / (1 - b1 ** t)
+            nhat = vel[k] / (1 - b2 ** t)
+            decay = wd * ref[k] if ref[k].ndim >= 2 else 0.0
+            ref[k] = ref[k] - lr * (mhat / (np.sqrt(nhat) + eps) + decay)
+            np.testing.assert_allclose(np.asarray(p[k]), ref[k], rtol=1e-5)
+
+
+def test_adamw_converges_on_quadratic():
+    opt_init, opt_update = adamw(0.1, weight_decay=0.0)
+    p = {"x": jnp.array([5.0, -3.0])}
+    state = opt_init(p)
+    for _ in range(200):
+        g = jax.tree.map(lambda x: 2 * x, p)     # d/dx x^2
+        updates, state = opt_update(g, state, p)
+        p = apply_updates(p, updates)
+    assert float(jnp.abs(p["x"]).max()) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.array([3.0, 0.0]), "b": jnp.array([0.0, 4.0])}   # norm 5
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    # under the limit: untouched
+    same, norm2 = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), np.asarray(g["a"]))
+
+
+def test_cosine_schedule_endpoints():
+    sched = linear_warmup_cosine(1e-3, warmup_steps=10, total_steps=100,
+                                 final_frac=0.1)
+    assert float(sched(0)) < 1e-4 + 1e-9
+    np.testing.assert_allclose(float(sched(10)), 1e-3, rtol=1e-5)
+    np.testing.assert_allclose(float(sched(100)), 1e-4, rtol=1e-5)
+    # monotone decay after warmup
+    vals = [float(sched(s)) for s in range(10, 101, 10)]
+    assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_wsd_schedule_phases():
+    sched = wsd_schedule(1e-3, warmup_steps=10, total_steps=100, decay_frac=0.2)
+    np.testing.assert_allclose(float(sched(50)), 1e-3, rtol=1e-6)   # stable
+    assert float(sched(5)) < 1e-3                                   # warmup
+    assert float(sched(95)) < 1e-3                                  # decay
+    np.testing.assert_allclose(float(sched(100)), 0.0, atol=1e-9)
+
+
+# ---------------------------------------------------------------- compression
+
+@settings(max_examples=25, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(1, 256))
+def test_int8_roundtrip_error_bound(scale, n):
+    x = scale * jax.random.normal(jax.random.PRNGKey(n), (n,))
+    q, s = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, s) - x)
+    # quantization error ≤ half a quantization step
+    assert float(err.max()) <= float(s) * 0.5 + 1e-9
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_invariant():
+    """decompress(q) + new_residual == grad + old_residual (lossless ledger)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (8,)) * 10}
+    res = init_error_feedback(g)
+    comp, res2 = error_feedback_compress(g, res)
+    deq = decompress_tree(comp)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(deq[k] + res2[k]),
+                                   np.asarray(g[k] + res[k]), atol=1e-5)
+
+
+def test_error_feedback_unbiased_over_steps():
+    """Residual carrying ⇒ the *sum* of decompressed grads tracks the sum of
+    true grads (compression error does not accumulate)."""
+    key = jax.random.PRNGKey(2)
+    g_true = [0.01 * jax.random.normal(jax.random.fold_in(key, i), (128,))
+              for i in range(50)]
+    res = init_error_feedback({"w": g_true[0]})
+    acc_deq = np.zeros(128)
+    acc_true = np.zeros(128)
+    for g in g_true:
+        comp, res = error_feedback_compress({"w": g}, res)
+        acc_deq += np.asarray(decompress_tree(comp)["w"])
+        acc_true += np.asarray(g)
+    # final residual bounds the gap
+    gap = np.abs(acc_deq + np.asarray(res["w"]) - acc_true).max()
+    assert gap < 1e-4

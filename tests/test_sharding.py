@@ -1,0 +1,170 @@
+"""Logical-axis partition rules: spec construction, divisibility fallback,
+mesh-axis uniqueness, ambient constrain context — plus a subprocess dry-run
+on an 8-device host mesh (device-count override must not leak into this
+process, hence the re-exec).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import (
+    AxisRules, SERVE_RULES, TRAIN_RULES, constrain, current_ctx, spec_for,
+    tree_specs,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis_names + devices.shape) for spec tests — a real
+    multi-device Mesh cannot be built in the 1-CPU test process."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.empty(shape, object)
+
+
+MESH_2D = FakeMesh((16, 16), ("data", "model"))
+MESH_3D = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_specs():
+    rules = TRAIN_RULES
+    assert spec_for(("batch", "seq"), rules, MESH_2D, (256, 4096)) == P(("data",))
+    assert spec_for(("batch", "seq"), rules, MESH_3D, (256, 4096)) == \
+        P(("pod", "data"))
+    assert spec_for(("embed", "ff"), rules, MESH_2D, (4096, 16384)) == \
+        P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    # 40 heads % 16 != 0 → replicated (the known qwen2.5-14b case)
+    assert spec_for(("embed", "heads"), TRAIN_RULES, MESH_2D, (5120, 40)) == \
+        P("data")
+    # divisible head count keeps the mapping
+    assert spec_for(("embed", "heads"), TRAIN_RULES, MESH_2D, (5120, 64)) == \
+        P("data", "model")
+
+
+def test_batch_partial_divisibility_keeps_prefix():
+    # batch 2 on ("pod","data") = (2,16): full product 32 doesn't divide, but
+    # the "pod" prefix (2) does → P(("pod",))
+    assert spec_for(("batch", None), TRAIN_RULES, MESH_3D, (2, 128)) == \
+        P(("pod",))
+
+
+def test_no_mesh_axis_used_twice():
+    rules = AxisRules({"a": ("model",), "b": ("model",)})
+    spec = spec_for(("a", "b"), rules, MESH_2D, (64, 64))
+    assert spec == P("model")        # second use dropped
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 40, 64, 256]),
+                  min_size=1, max_size=4),
+    names=st.lists(st.sampled_from(["batch", "embed", "heads", "ff", "vocab",
+                                    "experts", None]),
+                   min_size=1, max_size=4),
+)
+def test_spec_always_valid(dims, names):
+    """Property: every produced spec (a) only names real mesh axes, (b) never
+    repeats a mesh axis, (c) every sharded dim is divisible by its axis product."""
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    spec = spec_for(names, TRAIN_RULES, MESH_2D, dims)
+    sizes = dict(zip(MESH_2D.axis_names, MESH_2D.devices.shape))
+    seen = []
+    for i, entry in enumerate(spec):
+        axes = (entry,) if isinstance(entry, str) else (entry or ())
+        for a in axes:
+            assert a in sizes
+            assert a not in seen
+            seen.append(a)
+        if axes:
+            prod = int(np.prod([sizes[a] for a in axes]))
+            assert dims[i] % prod == 0
+
+
+def test_tree_specs_mirrors_structure():
+    axes_tree = {"w": ("embed", "ff"), "b": ("ff",)}
+    shapes = {"w": jax.ShapeDtypeStruct((128, 64), jax.numpy.float32),
+              "b": jax.ShapeDtypeStruct((64,), jax.numpy.float32)}
+    specs = tree_specs(axes_tree, TRAIN_RULES, MESH_2D, shapes)
+    assert specs["w"] == P("data", "model")
+    assert specs["b"] == P("model")
+
+
+def test_serve_rules_shard_cache_seq():
+    assert spec_for(("batch", "cache_seq", "kv_heads", None), SERVE_RULES,
+                    MESH_2D, (128, 32768, 8, 128)) == P(("data",), "model")
+    # train rules keep cache_seq replicated
+    assert spec_for(("batch", "cache_seq", "kv_heads", None), TRAIN_RULES,
+                    MESH_2D, (128, 32768, 8, 128)) == P(("data",))
+
+
+def test_constrain_noop_without_context():
+    assert current_ctx() is None
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, ("batch", "embed"))
+    assert y is x                      # literally untouched
+
+
+def test_rules_replace_is_functional():
+    r2 = TRAIN_RULES.replace(cache_seq=("model",))
+    assert TRAIN_RULES.get("cache_seq") == ()
+    assert r2.get("cache_seq") == ("model",)
+
+
+# ---------------------------------------------------------------- subprocess
+
+SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_mesh
+from repro.launch.hlo_cost import collective_bytes
+import dataclasses
+cfg = get_smoke_config("qwen2.5-3b")
+cfg = dataclasses.replace(cfg, n_layers=2)
+mesh = make_mesh((2, 4), ("data", "model"))
+import repro.models.config as mc
+shape = mc.ShapeCfg("t", 64, 8, "train")
+mc.SHAPES["t"] = shape
+lowered = lower_cell(cfg, "t", mesh)
+compiled = lowered.compile()
+coll, detail = collective_bytes(compiled.as_text())
+assert coll > 0, "expected collectives on a 2x4 mesh"
+print("OK", int(coll), compiled.cost_analysis()["flops"] > 0)
+"""
+
+
+def test_dryrun_smoke_on_8_host_devices():
+    """lower+compile a reduced train cell on a (2,4) mesh in a subprocess —
+    proves the full dry-run path (shardings, donation, collectives) works
+    end to end without touching this process's device count."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.startswith("OK")
+
+
+def test_serve_dryrun_smoke_on_8_host_devices():
+    code = SUBPROC.replace('"t", 64, 8, "train"', '"t", 64, 8, "decode"')
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.startswith("OK")

@@ -1,0 +1,206 @@
+"""Simulator: cluster cost/provisioning, queueing serving model properties,
+workload traces, roofline DB grounding (reads the real dry-run artifacts).
+"""
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import SHAPES
+from repro.sim import (
+    Cluster, RooflineDB, ServiceProfile, ServingModel, TraceConfig,
+    WorkloadSpec, generate_trace, mmc_wait_s,
+)
+from repro.sim.workload import REGIONS
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------- cluster
+
+def test_cluster_scale_and_cost():
+    c = Cluster(provider="gcp", region="na", chips_per_replica=16, tick_s=3600)
+    c.scale_to(4)
+    assert c.total_replicas() == 4
+    assert c.ready_replicas() == 0            # provisioning delay
+    for _ in range(100):
+        c.advance()
+    assert c.ready_replicas() == 4
+    # 4 replicas × 16 chips × $1.20/hr × 100 h
+    assert c.spend_usd == pytest.approx(4 * 16 * 1.20 * 100, rel=1e-6)
+
+
+def test_cluster_scale_down_immediate():
+    c = Cluster()
+    c.scale_to(5)
+    c.scale_to(2)
+    assert c.total_replicas() == 2
+
+
+def test_cluster_failures_trigger_replacement():
+    c = Cluster(seed=1)
+    c.scale_to(8)
+    c.tick = 10**6                            # everyone ready
+    before = {r.id for r in c.replicas}
+    for _ in range(50):
+        c.advance(fail_prob=0.05)
+    after = {r.id for r in c.replicas}
+    assert after != before                    # some replaced
+    assert c.total_replicas() == 8            # capacity restored
+
+
+def test_region_cost_multipliers():
+    na = Cluster(region="na"); na.scale_to(1); na.advance()
+    au = Cluster(region="au"); au.scale_to(1); au.advance()
+    assert au.spend_usd > na.spend_usd
+
+
+# ---------------------------------------------------------------- queueing
+
+@settings(max_examples=30, deadline=None)
+@given(lam=st.floats(0.1, 50.0), mu=st.floats(0.1, 10.0),
+       c=st.integers(1, 200))
+def test_mmc_wait_nonnegative(lam, mu, c):
+    w = mmc_wait_s(lam, mu, c)
+    assert w >= 0.0 or math.isinf(w)
+    if lam >= c * mu:
+        assert math.isinf(w)
+
+
+def test_mmc_wait_monotone_in_servers():
+    waits = [mmc_wait_s(8.0, 1.0, c) for c in (9, 12, 16, 32)]
+    assert all(a >= b - 1e-12 for a, b in zip(waits, waits[1:]))
+
+
+def test_mmc_wait_monotone_in_load():
+    waits = [mmc_wait_s(lam, 1.0, 10) for lam in (2.0, 5.0, 8.0, 9.5)]
+    assert all(a <= b + 1e-12 for a, b in zip(waits, waits[1:]))
+
+
+def test_mmc_large_c_approximation_continuous():
+    """The c≥120 normal approximation must not jump discontinuously."""
+    w119 = mmc_wait_s(100.0, 1.0, 119)
+    w121 = mmc_wait_s(100.0, 1.0, 121)
+    assert abs(w119 - w121) < max(w119, 1e-6) * 2.0
+
+
+# ---------------------------------------------------------------- serving
+
+@pytest.fixture(scope="module")
+def profile():
+    db = RooflineDB(DRYRUN_DIR)
+    return ServiceProfile.from_db(db, "qwen2.5-3b")
+
+
+def test_profile_from_dryrun_is_measured(profile):
+    db = RooflineDB(DRYRUN_DIR)
+    assert db.terms("qwen2.5-3b", "decode_32k").measured
+    assert profile.decode_step_s > 0
+    assert profile.slots == SHAPES["decode_32k"].global_batch // 16
+
+
+def test_latency_decreases_with_replicas(profile):
+    m = ServingModel(profile, WorkloadSpec(prompt_len=512, gen_len=64))
+    lats = [m.latency_util(r, 5.0)[0] for r in (1, 2, 4, 8)]
+    assert all(a >= b - 1e-9 for a, b in zip(lats, lats[1:]))
+
+
+def test_utilization_increases_with_load(profile):
+    m = ServingModel(profile, WorkloadSpec())
+    utils = [m.latency_util(4, rps)[1] for rps in (0.5, 1.0, 2.0)]
+    assert all(a <= b for a, b in zip(utils, utils[1:]))
+    assert all(0 <= u <= 1 for u in utils)
+
+
+def test_overload_produces_errors_and_queue(profile):
+    m = ServingModel(profile, WorkloadSpec(prompt_len=512, gen_len=64),
+                     tick_s=60.0, seed=0)
+    cap = profile.requests_per_s(WorkloadSpec(prompt_len=512, gen_len=64))
+    r = None
+    for _ in range(8):
+        r = m.tick(replicas=1, rps=cap * 5.0)     # 5× overload
+    assert r.errors > 0
+    assert r.queue_depth >= 0
+    assert r.utilization > 0.9
+
+
+def test_underload_is_healthy(profile):
+    m = ServingModel(profile, WorkloadSpec(prompt_len=512, gen_len=64),
+                     tick_s=60.0, seed=0)
+    cap = profile.requests_per_s(WorkloadSpec(prompt_len=512, gen_len=64))
+    r = m.tick(replicas=8, rps=cap * 8 * 0.3)
+    assert r.errors == 0
+    assert 0.1 < r.utilization < 0.6
+    assert np.isfinite(r.latency_ms_samples).all()
+
+
+# ---------------------------------------------------------------- traces
+
+def test_trace_positive_and_diurnal():
+    cfg = TraceConfig(base_rps=100.0, ticks_per_day=96, seed=3)
+    rps = generate_trace(cfg, 96 * 7)
+    assert (rps >= 1.0).all()
+    # diurnal structure: within-day range is a large fraction of the mean
+    day = rps[:96]
+    assert (day.max() - day.min()) / day.mean() > 0.4
+
+
+def test_trace_weekend_dip():
+    cfg = TraceConfig(base_rps=100.0, ticks_per_day=24, weekly_amp=0.3,
+                      noise_cv=0.01, spike_prob=0.0, seed=4)
+    rps = generate_trace(cfg, 24 * 7)
+    weekday = rps[:24 * 5].mean()
+    weekend = rps[24 * 5:].mean()
+    assert weekend < weekday
+
+
+def test_trace_regions_differ_in_phase():
+    n = 96 * 2
+    na = generate_trace(TraceConfig(region="na", ticks_per_day=96,
+                                    noise_cv=0.0, spike_prob=0.0), n)
+    apac = generate_trace(TraceConfig(region="apac", ticks_per_day=96,
+                                      noise_cv=0.0, spike_prob=0.0), n)
+    assert int(np.argmax(na[:96])) != int(np.argmax(apac[:96]))
+    assert set(REGIONS) == {"na", "eu", "apac", "sa", "au"}
+
+
+def test_trace_spikes_present():
+    cfg = TraceConfig(spike_prob=0.05, noise_cv=0.0, seed=5)
+    rps = generate_trace(cfg, 500)
+    base = generate_trace(TraceConfig(spike_prob=0.0, noise_cv=0.0, seed=5), 500)
+    assert rps.max() > 1.5 * base.max()
+
+
+# ---------------------------------------------------------------- roofline db
+
+def test_roofline_db_reads_all_measured_cells():
+    db = RooflineDB(DRYRUN_DIR)
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models import applicable_shapes
+    n_measured = 0
+    for arch in ARCH_IDS:
+        for shape in applicable_shapes(get_config(arch)):
+            t = db.terms(arch, shape)
+            assert t.step_time > 0
+            assert t.bottleneck in ("compute", "memory", "collective")
+            assert t.step_time == max(t.t_compute, t.t_memory, t.t_collective)
+            n_measured += t.measured
+    assert n_measured == 33                    # every assigned cell compiled
+
+
+def test_roofline_analytic_fallback():
+    db = RooflineDB("/nonexistent")
+    t = db.terms("qwen2.5-3b", "train_4k")
+    assert not t.measured
+    assert t.step_time > 0
+
+
+def test_roofline_terms_scale_with_hardware_constants():
+    from repro.sim.roofline_db import HBM_BW, ICI_BW, PEAK_FLOPS
+    db = RooflineDB(DRYRUN_DIR)
+    t = db.terms("qwen2-72b", "train_4k")
+    assert t.t_compute == pytest.approx(t.flops / PEAK_FLOPS)
+    assert t.t_memory == pytest.approx(t.bytes / HBM_BW)
+    assert t.t_collective == pytest.approx(t.coll_bytes / ICI_BW)
