@@ -1,114 +1,65 @@
-"""End-to-end serving driver: a REAL model served with batched requests,
-monitored and scaled by the paper's control plane.
+"""Closed-loop autoscaling demo: the control plane drives a REAL multi-replica
+data plane.
 
-The data plane is the actual ServingEngine (reduced qwen2.5-3b, continuous
-slot batching, prefill + decode over a shared KV cache).  Every second of
-wall time is one control tick: the engine's measured latencies/throughput
-feed the MetricsCollector; the AnomalyDetector watches for load spikes; the
-PredictiveAllocator decides how many replicas the fleet *would* run (the
-single local engine stands in for one replica of the fleet — spare capacity
-is simulated, since this container has one CPU).
+The loop itself lives in repro/serving/closed_loop.py and is shared verbatim
+with benchmarks/serving_latency.py --engine: a ReplicaRouter over actual
+ServingEngines (reduced qwen2.5-3b by default: continuous slot batching,
+chunked prefill, per-slot ring positions), Poisson arrivals on a calm→spike→
+calm profile, per-replica reports into the MetricsCollector, the
+AnomalyDetector watching load, and the PredictiveAllocator's scaling
+decisions *actuated* via router.scale_to — replicas really appear and drain
+mid-run.
 
-Run:  PYTHONPATH=src python examples/serve_autoscale.py
+The run log shows, per tick: load, completions, p50/p95 latency, per-replica
+slot utilization, and the realized replica count with the decision reason —
+so the scaling event's before/after is visible directly.  Exits 1 if the
+scaler never changed the replica count (CI smoke relies on this).
+
+Run:  PYTHONPATH=src python examples/serve_autoscale.py --smoke
 """
-import time
+import argparse
+import sys
 
-import jax
-import numpy as np
-
-from repro.configs import get_smoke_config
-from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
-from repro.core.dnn.features import deploy_vector
-from repro.core.monitoring.anomaly import AnomalyDetector
-from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
-from repro.core.scaling.scaler import ScalingConstraints
-from repro.launch.serve import ServingEngine
-
-SLOTS = 4
-GEN_LEN = 8
-PROMPT_LEN = 16
-N_TICKS = 12
-
-cfg = get_smoke_config("qwen2.5-3b")
-engine = ServingEngine(cfg, slots=SLOTS, max_seq=48, seed=0)
-rng = np.random.default_rng(0)
-
-collector = MetricsCollector()
-anomaly = AnomalyDetector(z_threshold=3.0, min_history=4)
+from repro.configs import get_config, get_smoke_config
+from repro.serving.closed_loop import run_closed_loop
 
 
-def engine_capacity_model(replicas: int, rps: float):
-    """Perf model grounded in the engine's own measured step time."""
-    step_s = max(measured["step_s"], 1e-3)
-    service = GEN_LEN * step_s
-    cap = replicas * SLOTS / service
-    util = min(rps / max(cap, 1e-9), 1.0)
-    lat = service * (1.0 + 3.0 * max(util - 0.8, 0.0) / 0.2)
-    return lat * 1e3, util
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-fast); required for CI")
+    ap.add_argument("--ticks", type=int, default=14)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    print(f"engine: {cfg.name} {cfg.n_params() / 1e6:.1f}M params, "
+          f"router starts at 1 replica")
+    router, logs = run_closed_loop(cfg, autoscale=True, ticks=args.ticks,
+                                   seed=args.seed)
+    for t in logs:
+        util = " ".join(f"r{rid}={u:.2f}" for rid, u in t.replica_util)
+        flag = " [ANOMALY]" if t.anomaly else ""
+        print(f"tick {t.tick:2d}: rps={t.rps_target:4.1f} "
+              f"arrivals={t.arrivals:2d} served={t.served:2d} "
+              f"p50={t.latency_p50_ms:6.0f}ms p95={t.latency_p95_ms:6.0f}ms "
+              f"queue={t.queue_depth:4.1f} slot_util[{util}] "
+              f"-> {t.replicas} replicas ({t.reason}){flag}")
+
+    m = router.metrics()
+    print(f"\nfleet totals: {m['completed']} requests, "
+          f"{m['completed_tokens']} tokens, p50={m['latency_p50_ms']:.0f}ms "
+          f"p95={m['latency_p95_ms']:.0f}ms, "
+          f"throughput={m['throughput_tok_s']:.1f} tok/s (virtual)")
+    trajectory = [1] + [t.replicas for t in logs]
+    if len(set(trajectory)) == 1:
+        print("FAIL: the scaler never changed the replica count")
+        return 1
+    print(f"replica trajectory: {trajectory} — the control plane scaled "
+          f"the real data plane mid-run.")
+    return 0
 
 
-measured = {"step_s": 0.05}
-alloc = PredictiveAllocator(
-    engine_capacity_model, ScalingConstraints(slo_ms=2000.0, max_replicas=16),
-    deploy_vector(model_params_b=0.003, family="dense", mesh_model=1,
-                  mesh_data=1, region_idx=0, slo_ms=2000, cost_weight=0.5),
-    cfg=AllocatorConfig(mode="planner"))
-
-print(f"engine: {cfg.name} {cfg.n_params()/1e6:.1f}M params, {SLOTS} slots")
-owners = {}
-next_rid = 0
-lat_done: dict[int, float] = {}
-t_admit: dict[int, float] = {}
-replicas = 1
-
-for tick in range(N_TICKS):
-    # load profile: calm → spike → calm
-    rps_target = 3.0 if tick < 4 else (12.0 if tick < 8 else 3.0)
-    n_arrivals = rng.poisson(rps_target)
-    t0 = time.time()
-    lats, served = [], 0
-    # admit as many arrivals as there are free slots (rest queue → dropped)
-    for _ in range(n_arrivals):
-        free = [s for s in range(SLOTS) if not engine.active[s]]
-        if not free:
-            break
-        slot = free[0]
-        prompt = rng.integers(3, cfg.vocab, size=PROMPT_LEN).astype(np.int32)
-        engine.admit(slot, prompt, GEN_LEN)
-        owners[slot] = next_rid
-        t_admit[next_rid] = time.time()
-        next_rid += 1
-    # decode for ~1 simulated tick
-    steps = 0
-    while engine.active.any() and steps < GEN_LEN:
-        done = engine.tick()
-        steps += 1
-        for slot in done:
-            rid = owners[slot]
-            lats.append((time.time() - t_admit[rid]) * 1e3)
-            served += 1
-    wall = time.time() - t0
-    if steps:
-        measured["step_s"] = wall / steps
-    collector.submit(ReplicaReport(
-        replica_id=0, tick=tick, latency_ms_samples=lats, n_requests=served,
-        n_errors=max(n_arrivals - served - int(np.sum(engine.active)), 0),
-        flop_util=float(np.mean(engine.active)), hbm_util=0.5, ici_util=0.2,
-        mem_frac=0.4, queue_depth=0))
-    rec = collector.aggregate(tick, n_replicas=replicas, max_replicas=16)
-    rec["rps"] = float(n_arrivals)
-    rec["rps_window"] = [rec["rps"]]
-    anomalies = anomaly.update(tick, {"rps": rec["rps"]})
-    alloc.observe(rec)
-    alloc.replicas = replicas
-    decision = alloc.decide(rec)
-    alloc.apply(decision)
-    replicas = decision.target_replicas
-    flag = " [ANOMALY]" if anomalies else ""
-    print(f"tick {tick:2d}: rps={rps_target:4.0f} served={served} "
-          f"p50={rec['latency_p50']:.0f}ms slots_busy="
-          f"{int(np.sum(engine.active))} -> fleet target {replicas} "
-          f"replicas ({decision.reason}){flag}")
-
-print("\nserve_autoscale complete: the engine served real batched requests "
-      "while the control plane tracked load and scaled the (simulated) fleet.")
+if __name__ == "__main__":
+    sys.exit(main())

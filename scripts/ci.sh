@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 CI entrypoint: install dev deps, run the full suite, then the
+# closed-loop serving smoke (examples/serve_autoscale.py --smoke).
+# Mirrors .github/workflows/ci.yml so the same command works locally.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install --quiet -r requirements-dev.txt
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q
+python examples/serve_autoscale.py --smoke

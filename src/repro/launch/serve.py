@@ -1,9 +1,9 @@
-"""Serving driver: batched prefill + decode with a KV-cache pool.
+"""Serving driver CLI over the repro.serving subsystem.
 
-Demonstrates the data plane the MLOps control plane manages: requests arrive
-(Poisson), a continuous batcher admits them into fixed decode slots, prefill
-fills each slot's cache region, and the decode step advances all active slots
-one token per tick.  Per-request latency (p50/p95), throughput, and slot
+The engine itself lives in repro/serving/ (continuous batching, chunked
+prefill, per-slot ring positions, seeded sampling); this module keeps the
+seed's CLI surface and re-exports ServingEngine/_write_slot for backward
+compatibility.  Per-request latency (p50/p95), throughput, and slot
 utilization are reported — the same metrics the paper's monitoring stream
 consumes (core/monitoring).
 
@@ -16,81 +16,14 @@ import argparse
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.models import LM
-from repro.models.steps import make_decode_step, make_prefill_step
+from repro.serving import SamplingParams, ServingEngine, synthetic_requests
+from repro.serving.slots import write_slot as _write_slot  # noqa: F401 (compat)
+from repro.sim.serving import WorkloadSpec
 
-
-class ServingEngine:
-    """Single-replica engine with S decode slots over one shared cache pytree.
-
-    Slot-batched decode: every tick decodes a (S, 1) token batch; finished
-    slots are refilled from the queue via per-slot prefill.  (Real multi-host
-    serving shards the same cache via SERVE_RULES — see launch/dryrun.py's
-    decode cells; this driver exercises the logic end to end on CPU.)
-    """
-
-    def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0):
-        self.cfg = cfg
-        self.slots = slots
-        self.max_seq = max_seq
-        params, _ = LM.init(jax.random.PRNGKey(seed), cfg)
-        self.params = params
-        self.prefill = jax.jit(make_prefill_step(cfg, max_seq))
-        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
-        self.cache = LM.init_cache(cfg, slots, max_seq)
-        self.tokens = jnp.zeros((slots, 1), jnp.int32)
-        self.pos = np.zeros(slots, np.int64)        # per-slot position
-        self.remaining = np.zeros(slots, np.int64)  # tokens left to generate
-        self.active = np.zeros(slots, bool)
-
-    def admit(self, slot: int, prompt: np.ndarray, gen_len: int):
-        """Prefill one slot.  Single-slot prefill then merged into the pool
-        cache at this slot index (per-slot cache update)."""
-        inputs = {"tokens": jnp.asarray(prompt[None])}
-        if self.cfg.family == "vlm":
-            inputs["patches"] = jnp.zeros(
-                (1, self.cfg.n_vision_patches, self.cfg.d_model), self.cfg.cdtype)
-        if self.cfg.enc_dec:
-            inputs["frames"] = jnp.zeros(
-                (1, len(prompt), self.cfg.d_model), self.cfg.cdtype)
-        logits, cache1 = self.prefill(self.params, inputs)
-        # write slot: every cache leaf has batch at a known axis per family
-        self.cache = jax.tree.map(
-            lambda pool, one: _write_slot(pool, one, slot), self.cache, cache1)
-        tok = jnp.argmax(logits[:, -1], axis=-1)
-        self.tokens = self.tokens.at[slot, 0].set(tok[0].astype(jnp.int32))
-        self.pos[slot] = len(prompt)
-        self.remaining[slot] = gen_len
-        self.active[slot] = True
-
-    def tick(self):
-        """One decode step for all slots (inactive slots decode garbage that
-        is simply ignored — the fixed-shape batch is the TPU-friendly form)."""
-        logits, self.cache = self.decode(self.params, self.tokens, self.cache)
-        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
-        self.tokens = nxt
-        self.pos[self.active] += 1
-        self.remaining[self.active] -= 1
-        done = self.active & (self.remaining <= 0)
-        self.active &= ~done
-        return list(np.nonzero(done)[0])
-
-
-def _write_slot(pool, one, slot):
-    if pool.ndim == 0:      # index scalar: keep pool's (max over slots)
-        return jnp.maximum(pool, one)
-    # find the batch axis: the axis where pool == slots and one == 1
-    for ax in range(pool.ndim):
-        if one.shape[ax] == 1 and pool.shape[ax] != one.shape[ax]:
-            idx = [slice(None)] * pool.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return pool.at[tuple(idx)].set(one.astype(pool.dtype))
-    return pool
+__all__ = ["ServingEngine", "_write_slot", "main"]
 
 
 def main(argv=None):
@@ -102,50 +35,47 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="stream prompts through the decode tick in chunks")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--arrival-rps", type=float, default=100.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     eng = ServingEngine(cfg, slots=args.slots, max_seq=args.max_seq,
-                        seed=args.seed)
+                        seed=args.seed, prefill_chunk=args.prefill_chunk)
     rng = np.random.default_rng(args.seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rps, args.requests))
-    prompts = [rng.integers(3, cfg.vocab, size=args.prompt_len) for _ in range(args.requests)]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rps,
+                                         args.requests))
+    spec = WorkloadSpec(prompt_len=args.prompt_len, gen_len=args.gen_len)
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
+    requests = synthetic_requests(spec, args.requests, cfg.vocab, rng=rng,
+                                  sampling=sampling)
 
     t0 = time.time()
     submitted = 0
-    lat = {}
-    t_start = {}
-    finished = 0
-    queue = []
-    while finished < args.requests:
+    finished: list = []
+    while len(finished) < args.requests:
         now = time.time() - t0
         while submitted < args.requests and arrivals[submitted] <= now:
-            queue.append(submitted)
+            eng.submit(requests[submitted], now=arrivals[submitted])
             submitted += 1
-        free = [s for s in range(args.slots) if not eng.active[s]]
-        while queue and free:
-            rid, slot = queue.pop(0), free.pop(0)
-            t_start[rid] = arrivals[rid]
-            eng.admit(slot, prompts[rid].astype(np.int32), args.gen_len)
-            eng.slot_owner = getattr(eng, "slot_owner", {})
-            eng.slot_owner[slot] = rid
-        if eng.active.any():
-            for slot in eng.tick():
-                rid = eng.slot_owner[slot]
-                lat[rid] = (time.time() - t0) - t_start[rid]
-                finished += 1
-        else:
+        if eng.idle:
             time.sleep(0.001)
+            continue
+        finished.extend(eng.step(now=time.time() - t0))
 
     total = time.time() - t0
-    lats = np.array(sorted(lat.values()))
-    toks = args.requests * args.gen_len
+    lats = np.array(sorted(r.latency_s for r in finished))
+    toks = sum(len(r.tokens_out) for r in finished)
     print(f"requests={args.requests} gen_tokens={toks} wall={total:.2f}s "
           f"throughput={toks / total:.1f} tok/s")
     print(f"latency p50={np.percentile(lats, 50) * 1e3:.0f}ms "
-          f"p95={np.percentile(lats, 95) * 1e3:.0f}ms")
+          f"p95={np.percentile(lats, 95) * 1e3:.0f}ms "
+          f"slot_util={eng.stats.slot_utilization:.2f}")
     return 0
 
 

@@ -260,9 +260,13 @@ class Attention:
 
     @staticmethod
     def decode(params, x, cfg, cache, index, *, angles=None, cross_kv=None):
-        """x: (B, 1, d_in); cache: {"k","v"}: (B, Smax, KV, hd); index: scalar
-        int32 — absolute position being written.  Returns (y, new_cache)."""
+        """x: (B, 1, d_in); cache: {"k","v"}: (B, Smax, KV, hd); index: the
+        absolute position being written — scalar int32, or a (B,) vector when
+        each batch row sits at its own position (continuous batching: the
+        serving engine's slots are admitted at different times, so their ring
+        slots and validity horizons differ per row).  Returns (y, new_cache)."""
         B = x.shape[0]
+        index = jnp.asarray(index, jnp.int32)
         if cross_kv is not None:
             q = Linear.apply(params["wq"], x, dtype=cfg.cdtype)
             q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
@@ -276,10 +280,24 @@ class Attention:
             q = apply_rope(q, angles)
             k = apply_rope(k, angles)
         Smax = cache["k"].shape[1]
-        sk = Attention._splitk_ctx(Smax)
+        sk = Attention._splitk_ctx(Smax) if index.ndim == 0 else None
         if sk is not None:
             out, new_cache = Attention._decode_splitk(q, k, v, cache, index,
                                                       *sk)
+        elif index.ndim:
+            # per-row positions: scatter each row's K/V into its own ring
+            # slot, mask each row against its own validity horizon
+            slot = jax.lax.rem(index, Smax)
+            rows = jnp.arange(B)
+            k_cache = cache["k"].at[rows, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+            slots = jnp.arange(Smax, dtype=jnp.int32)
+            bias = jnp.where(slots[None, None, :] <= index[:, None, None],
+                             0.0, NEG_INF).astype(jnp.float32)
+            out = sdpa_ref(q, k_cache, v_cache, bias)
+            new_cache = {"k": k_cache, "v": v_cache}
         else:
             slot = jax.lax.rem(index, Smax)
             k_cache = jax.lax.dynamic_update_slice_in_dim(
@@ -391,7 +409,8 @@ class Attention:
                        ).reshape(Bl, 1, H, hd).astype(qb.dtype)
                 return out, k_blk, v_blk
 
-        fn = jax.shard_map(
+        from repro.sharding import shard_map
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(P(bspec, None, None),            # q (B,H,hd)
                       P(bspec, None, None),            # k_new (B,KV,hd)

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.nn import Linear
-from repro.sharding import constrain, current_ctx, no_shard_ctx
+from repro.sharding import constrain, current_ctx, no_shard_ctx, shard_map
 from repro.models.config import MoECfg
 
 
@@ -245,7 +245,7 @@ class MoE:
                        "expert_load": load_full / nk, "drop_frac": drop}
                 return y.reshape(Bl, Sl, d).astype(xb.dtype), aux
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(P(), P("model", None, None), P("model", None, None),
                       P("model", None, None), P(bspec, None, None)),

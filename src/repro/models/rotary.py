@@ -68,11 +68,22 @@ def text_positions(batch: int, seq: int, start) -> jnp.ndarray:
 
 def mrope_positions(batch: int, seq: int, n_patches: int, start) -> jnp.ndarray:
     """(B, 3, S) positions: a synthetic √n_patches grid for the vision prefix
-    (t=0, h=row, w=col), then t=h=w text positions for the remainder."""
+    (t=0, h=row, w=col), then t=h=w text positions for the remainder.
+
+    ``start`` is a scalar or a (B,) vector — the serving engine decodes a
+    slot-batch whose slots sit at different absolute positions."""
     side = max(int(round(n_patches ** 0.5)), 1)
     idx = jnp.arange(seq, dtype=jnp.int32)
     is_text = idx >= n_patches
-    text_pos = jnp.asarray(start, jnp.int32) + idx  # decode: start offsets all
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim:                                  # per-slot decode positions
+        text_pos = start[:, None] + idx[None, :]    # (B, S)
+        t = jnp.where(is_text[None], text_pos, 0)
+        h = jnp.where(is_text[None], text_pos, (idx // side)[None])
+        w = jnp.where(is_text[None], text_pos, (idx % side)[None])
+        pos = jnp.stack([t, h, w], axis=1)          # (B, 3, S)
+        return jnp.broadcast_to(pos, (batch, 3, seq))
+    text_pos = start + idx                          # decode: start offsets all
     t = jnp.where(is_text, text_pos, 0)
     h = jnp.where(is_text, text_pos, idx // side)
     w = jnp.where(is_text, text_pos, idx % side)

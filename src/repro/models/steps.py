@@ -182,6 +182,47 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_chunked_prefill_step(cfg: ModelConfig, max_seq: int, chunk: int):
+    """Prefill with bounded per-step work: a one-shot prefill of the first
+    ``chunk`` tokens builds the cache, then the remaining prompt streams
+    through the decode path one token per step (lax.scan).  Produces the same
+    (last-position logits, cache) as ``make_prefill_step``.
+
+    This is the REFERENCE form of the equivalence the serving engine exploits
+    (ServingEngine.admit/tick interleave the same per-token continuation with
+    live decode slots, which a self-contained scan cannot express) — the
+    engine test suite pins both implementations against one-shot prefill.
+
+    Constraints: enc-dec prefills one-shot (the encoder needs every frame);
+    vlm needs ``chunk > n_vision_patches`` so the patch prefix lands in the
+    one-shot portion.
+    """
+    if cfg.family == "vlm" and chunk <= cfg.n_vision_patches:
+        raise ValueError(
+            f"vlm chunked prefill needs chunk > n_vision_patches "
+            f"({chunk} <= {cfg.n_vision_patches})")
+
+    def chunked_prefill(params, inputs):
+        tokens = inputs["tokens"]
+        S = tokens.shape[1]
+        if S <= chunk or cfg.enc_dec:
+            return LM.prefill(params, inputs, cfg, max_seq)
+        first = dict(inputs)
+        first["tokens"] = tokens[:, :chunk]
+        logits, cache = LM.prefill(params, first, cfg, max_seq)
+        tail = jnp.moveaxis(tokens[:, chunk:, None], 1, 0)  # (S-chunk, B, 1)
+
+        def body(carry, tok):
+            _, cache = carry
+            logits, cache = LM.decode(params, tok, cfg, cache)
+            return (logits, cache), None
+
+        (logits, cache), _ = jax.lax.scan(body, (logits, cache), tail)
+        return logits, cache
+
+    return chunked_prefill
+
+
 def cache_axes(cfg: ModelConfig, batch: int, max_seq: int):
     spec = LM.cache_spec(cfg, batch, max_seq)
     return jax.tree.map(lambda s: s[2], spec,

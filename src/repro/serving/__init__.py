@@ -1,0 +1,32 @@
+"""Multi-replica continuous-batching serving subsystem (the data plane).
+
+Layout:
+  sampling.py   — per-request sampling params + host-side token sampler
+  scheduler.py  — Request lifecycle + FCFS admission queue
+  slots.py      — generic KV slot pool over any family's cache pytree
+  engine.py     — single-replica engine: chunked prefill streamed through the
+                  batched decode tick, per-slot ring positions
+  router.py     — N engines, least-loaded routing, scale up/down mid-run,
+                  ReplicaReport stream for core/monitoring
+  workload.py   — synthetic request generation (shares sim.WorkloadSpec)
+  closed_loop.py— the full control loop (router + collector + allocator),
+                  shared by examples/serve_autoscale.py and the serving
+                  latency benchmark's --engine mode
+
+The `core/` control plane (scaler + allocator) drives ReplicaRouter.scale_to;
+examples/serve_autoscale.py closes the loop end to end on CPU.
+"""
+from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.router import ReplicaRouter
+from repro.serving.sampling import SamplingParams, sample_token
+from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving.slots import SlotPool, write_slot
+from repro.serving.workload import poisson_arrival_times, synthetic_requests
+
+__all__ = [
+    "EngineCore", "ServingEngine", "ReplicaRouter",
+    "SamplingParams", "sample_token",
+    "FCFSScheduler", "Request",
+    "SlotPool", "write_slot",
+    "poisson_arrival_times", "synthetic_requests",
+]

@@ -1,0 +1,144 @@
+"""The closed control loop as one reusable driver.
+
+examples/serve_autoscale.py (the demo) and benchmarks/serving_latency.py
+--engine (the static-vs-autoscaled measurement) run EXACTLY this code — one
+implementation of the loop, one arrival pattern, one perf model — so the
+numbers the benchmark reports describe the same system the demo shows.
+
+Each control tick: Poisson arrivals spread uniformly over the tick enter the
+router only once the virtual clock passes their arrival time (submitting
+early would let a request be served before it "arrived", biasing latency
+low); the router runs ``steps_per_tick`` decode rounds; per-replica reports
+feed the MetricsCollector; and — when ``autoscale`` — the
+PredictiveAllocator's decision is actuated via router.scale_to.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
+from repro.core.dnn.features import deploy_vector
+from repro.core.monitoring.anomaly import AnomalyDetector
+from repro.core.monitoring.collector import MetricsCollector
+from repro.core.scaling.scaler import ScalingConstraints
+from repro.serving.router import ReplicaRouter
+from repro.serving.workload import synthetic_requests
+from repro.sim.serving import WorkloadSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    slots: int = 4
+    max_replicas: int = 4
+    max_seq: int = 48
+    prefill_chunk: int = 8
+    steps_per_tick: int = 10     # decode rounds per control tick
+    tick_s: float = 0.1          # virtual seconds per decode round
+    slo_ms: float = 2000.0
+    calm_rps: float = 1.2
+    spike_rps: float = 7.0
+
+
+@dataclasses.dataclass
+class TickLog:
+    tick: int
+    rps_target: float
+    arrivals: int
+    served: int
+    latency_p50_ms: float
+    latency_p95_ms: float
+    queue_depth: float
+    replica_util: list          # [(replica_id, slot_util)] this window
+    replicas: int               # realized count after actuation
+    reason: str
+    anomaly: bool
+
+
+def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
+    """calm → spike → calm (requests per virtual second)."""
+    lo, hi = ticks * 2 // 7, ticks * 9 // 14
+    return lc.spike_rps if lo <= tick < hi else lc.calm_rps
+
+
+def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
+                    seed: int = 0, lc: LoopConfig = LoopConfig(),
+                    spec: WorkloadSpec = WorkloadSpec(prompt_len=16,
+                                                      gen_len=8),
+                    profile=default_profile):
+    """→ (router, [TickLog]).  ``autoscale=False`` pins one replica (the
+    static baseline)."""
+    router = ReplicaRouter.shared_core(
+        cfg, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
+        prefill_chunk=lc.prefill_chunk, n_replicas=1,
+        max_replicas=lc.max_replicas)
+    rng = np.random.default_rng(seed)
+
+    # virtual-clock service time: streamed prompt tail + generation
+    service_s = ((spec.prompt_len - lc.prefill_chunk) + spec.gen_len + 1) \
+        * lc.tick_s
+
+    def perf_model(replicas, rps):
+        """(latency_ms, util) — capacity model over the engine's own slot
+        arithmetic; the planner scales so predicted latency meets the SLO."""
+        cap = max(replicas, 1) * lc.slots / service_s
+        util = min(rps / max(cap, 1e-9), 1.0)
+        lat = service_s * (1.0 + 3.0 * max(util - 0.8, 0.0) / 0.2)
+        return lat * 1e3, util
+
+    collector = MetricsCollector()
+    anomaly = AnomalyDetector(z_threshold=3.0, min_history=4)
+    alloc = PredictiveAllocator(
+        perf_model,
+        ScalingConstraints(min_replicas=1, max_replicas=lc.max_replicas,
+                           slo_ms=lc.slo_ms),
+        deploy_vector(model_params_b=cfg.n_params() / 1e9, family=cfg.family,
+                      mesh_model=1, mesh_data=1, region_idx=0,
+                      slo_ms=lc.slo_ms, cost_weight=0.5),
+        cfg=AllocatorConfig(mode="planner"), seed=seed)
+
+    now, next_rid = 0.0, 0
+    logs: list[TickLog] = []
+    tick_span = lc.steps_per_tick * lc.tick_s
+    for tick in range(ticks):
+        rps = profile(tick, ticks, lc)
+        n = int(rng.poisson(rps * tick_span))
+        reqs = synthetic_requests(spec, n, cfg.vocab, rng=rng,
+                                  base_rid=next_rid)
+        next_rid += n
+        arrivals = [(now + (i / max(n, 1)) * tick_span, r)
+                    for i, r in enumerate(reqs)]
+        served = 0
+        for _ in range(lc.steps_per_tick):
+            now += lc.tick_s
+            while arrivals and arrivals[0][0] <= now:
+                t_arr, r = arrivals.pop(0)
+                router.submit(r, now=t_arr)
+            served += len(router.step(now))
+
+        reports = router.reports(tick)
+        for rep in reports:
+            collector.submit(rep)
+        rec = collector.aggregate(tick, n_replicas=router.replica_count,
+                                  max_replicas=lc.max_replicas)
+        rec["rps"] = float(n)
+        rec["rps_window"] = [rec["rps"]]
+        anomalies = anomaly.update(tick, {"rps": rec["rps"]})
+        reason = "static"
+        if autoscale:
+            alloc.observe(rec)
+            alloc.replicas = router.replica_count
+            decision = alloc.decide(rec)
+            router.scale_to(decision.target_replicas, now=now)
+            alloc.apply(decision)
+            reason = decision.reason
+        logs.append(TickLog(
+            tick=tick, rps_target=rps, arrivals=n, served=served,
+            latency_p50_ms=rec["latency_p50"],
+            latency_p95_ms=rec["latency_p95"],
+            queue_depth=rec["queue_depth"],
+            replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
+            replicas=router.replica_count, reason=reason, anomaly=bool(
+                anomalies)))
+    return router, logs

@@ -1,0 +1,304 @@
+"""Single-replica continuous-batching engine.
+
+Every tick decodes one fixed-shape (slots, 1) token batch — the TPU-friendly
+form (real multi-host serving shards the same cache via SERVE_RULES; this
+engine exercises the logic end to end on CPU).  Three things distinguish it
+from a naive batched decoder:
+
+* **Chunked prefill.**  Admission prefills only the first ``prefill_chunk``
+  prompt tokens one-shot; the rest of the prompt *streams through the shared
+  decode tick* one token per step (the slot is in PREFILL phase and feeds
+  prompt tokens instead of sampled ones).  A long prompt therefore never
+  stalls the other slots' decode progress — admission cost per tick is
+  bounded by the chunk.
+
+* **Per-slot ring positions.**  The pool cache's "index" leaf is a (slots,)
+  vector, so every slot gets its own RoPE angles, ring-buffer write slot and
+  validity mask (see slots.py for why the seed's shared scalar was wrong).
+
+* **Sampling layer.**  Greedy argmax is just the default SamplingParams;
+  temperature/top-k sampling is seeded per request (scheduler.Request).
+
+The low-level admit()/tick() surface is kept compatible with the seed's
+launch/serve.py engine; submit()/step() add the queued-request lifecycle.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+from repro.models.steps import make_decode_step, make_prefill_step
+from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving.slots import SlotPool
+
+PHASE_FREE, PHASE_PREFILL, PHASE_DECODE = 0, 1, 2
+
+
+class EngineCore:
+    """Model params + jitted step functions, shared by all replicas of one
+    deployment — N engines reuse one compile and one weight copy."""
+
+    def __init__(self, cfg, max_seq: int, *, seed: int = 0):
+        self.cfg = cfg
+        self.max_seq = max_seq
+        params, _ = LM.init(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+        self.prefill = jax.jit(make_prefill_step(cfg, max_seq))
+        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+
+class EngineStats:
+    """Per-replica accumulators: a drainable window (one monitoring tick) on
+    top of lifetime totals."""
+
+    def __init__(self):
+        self.total_completed = 0
+        self.total_tokens = 0
+        self.total_ticks = 0
+        self.total_busy = 0.0
+        self.latencies_ms = deque(maxlen=4096)
+        self.queue_depth = 0
+        self._reset_window()
+
+    def _reset_window(self):
+        self._win_lat: list[float] = []
+        self._win_completed = 0
+        self._win_tokens = 0
+        self._win_ticks = 0
+        self._win_busy = 0.0
+
+    def on_tick(self, busy_slots: int, slots: int, queue_depth: int):
+        self.total_ticks += 1
+        self.total_busy += busy_slots / max(slots, 1)
+        self._win_ticks += 1
+        self._win_busy += busy_slots / max(slots, 1)
+        self.queue_depth = queue_depth
+
+    def on_complete(self, request: Request):
+        lat = request.latency_s
+        if lat is not None:
+            self.latencies_ms.append(lat * 1e3)
+            self._win_lat.append(lat * 1e3)
+        self.total_completed += 1
+        self.total_tokens += len(request.tokens_out)
+        self._win_completed += 1
+        self._win_tokens += len(request.tokens_out)
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.total_busy / max(self.total_ticks, 1)
+
+    def drain_window(self) -> dict:
+        """Window metrics since the last drain (one ReplicaReport's worth)."""
+        out = {
+            "latency_ms_samples": list(self._win_lat),
+            "n_requests": self._win_completed,
+            "n_tokens": self._win_tokens,
+            "slot_util": self._win_busy / max(self._win_ticks, 1),
+            "queue_depth": self.queue_depth,
+        }
+        self._reset_window()
+        return out
+
+
+class ServingEngine:
+    """One replica: S decode slots over one shared cache pytree."""
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
+                 prefill_chunk: int | None = None,
+                 core: EngineCore | None = None, replica_id: int = 0):
+        if cfg.enc_dec:
+            # prefill stores cross K/V at encoder length, but the pool spec
+            # is max_seq-sized; slot merging needs length-masked cross
+            # attention (the seed engine had the same latent mismatch).
+            raise NotImplementedError(
+                "enc-dec families are not slot-servable yet")
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.replica_id = replica_id
+        self.core = core if core is not None else EngineCore(
+            cfg, max_seq, seed=seed)
+        self.params = self.core.params
+        self.prefill = self.core.prefill
+        self.decode = self.core.decode
+        self.pool = SlotPool(cfg, slots, max_seq)
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._tokens_host = np.zeros(slots, np.int32)
+        self.pos = np.zeros(slots, np.int64)        # per-slot position
+        self.remaining = np.zeros(slots, np.int64)  # tokens left to generate
+        self.active = np.zeros(slots, bool)
+        self.phase = np.zeros(slots, np.int8)
+        self.slot_owner: dict[int, Request] = {}    # cleared on release
+        chunk = prefill_chunk if prefill_chunk is not None else max_seq
+        if cfg.family == "vlm":
+            # the patch prefix must land in the one-shot prefill portion
+            chunk = max(chunk, cfg.n_vision_patches + 1)
+        self.prefill_chunk = max(chunk, 1)
+        self._prompt: list[np.ndarray | None] = [None] * slots
+        self._fed = np.zeros(slots, np.int64)       # prompt tokens staged
+        self.scheduler = FCFSScheduler()
+        self.draining = False
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------------- queue API
+
+    def submit(self, request: Request, now: float = 0.0):
+        """Enqueue one request.  Validation happens HERE, not at admission:
+        a malformed request must bounce back to the submitter, not abort a
+        batch step mid-tick with other requests in flight."""
+        self._validate(np.asarray(request.prompt).reshape(-1))
+        if request.t_submit is None:
+            request.t_submit = now
+        self.scheduler.submit(request)
+
+    def _validate(self, prompt: np.ndarray):
+        P = len(prompt)
+        if P < 1:
+            raise ValueError("empty prompt")
+        if (not self.cfg.attn_free and self.cfg.sliding_window is None
+                and P >= self.max_seq):
+            raise ValueError(f"prompt ({P}) must fit below max_seq "
+                             f"({self.max_seq}) with room to generate")
+        if self.cfg.family == "vlm" and P <= self.cfg.n_vision_patches:
+            raise ValueError("vlm prompt must extend past the patch prefix")
+
+    @property
+    def idle(self) -> bool:
+        return not self.active.any() and not self.scheduler
+
+    @property
+    def load(self) -> float:
+        """Admitted + queued work relative to slot capacity."""
+        return (int(self.active.sum()) + self.scheduler.depth) / max(
+            self.slots, 1)
+
+    def step(self, now: float | None = None) -> list[Request]:
+        """One scheduling round: FCFS admission into free slots, one decode
+        tick, completion + slot release.  Returns finished requests."""
+        if now is None:
+            now = time.monotonic()
+        completed: list[Request] = []
+        if not self.draining:
+            free = [s for s in range(self.slots) if not self.active[s]]
+            while free and self.scheduler:
+                req = self.scheduler.pop()
+                slot = free.pop(0)
+                req.t_admit = now
+                req.replica_id = self.replica_id
+                self.admit(slot, req.prompt, req.gen_len, request=req)
+                if self.phase[slot] == PHASE_DECODE:
+                    req.t_first_token = now      # prompt fit in one chunk
+        for slot in self.tick(now=now):
+            req = self.slot_owner.get(slot)
+            self.release_slot(slot)
+            if isinstance(req, Request):
+                req.t_done = now
+                self.stats.on_complete(req)
+                completed.append(req)
+        self.stats.on_tick(int(self.active.sum()), self.slots,
+                           self.scheduler.depth)
+        return completed
+
+    # ------------------------------------------------------------- slot API
+
+    def admit(self, slot: int, prompt: np.ndarray, gen_len: int,
+              request: Request | None = None):
+        """Prefill one slot: one-shot over the first chunk, the remainder of
+        the prompt streams through tick() (PREFILL phase)."""
+        if self.active[slot]:
+            raise ValueError(f"slot {slot} is still active")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        P = len(prompt)
+        self._validate(prompt)      # defense; submit() already rejected
+        if not self.cfg.attn_free and self.cfg.sliding_window is None:
+            # full-attention ring wrap would overwrite live context
+            gen_len = min(gen_len, self.max_seq - P)
+        c = P if self.prefill_chunk >= P else self.prefill_chunk
+        inputs = {"tokens": jnp.asarray(prompt[None, :c])}
+        if self.cfg.family == "vlm":
+            inputs["patches"] = jnp.zeros(
+                (1, self.cfg.n_vision_patches, self.cfg.d_model),
+                self.cfg.cdtype)
+        logits, cache1 = self.prefill(self.params, inputs)
+        self.pool.write(cache1, slot, index=c)
+        self.pos[slot] = c
+        self._prompt[slot] = prompt
+        self.remaining[slot] = gen_len
+        self.active[slot] = True
+        if request is not None:
+            self.slot_owner[slot] = request
+        if c == P:
+            row = np.asarray(logits[0, -1], np.float32)
+            tok = (request.sample(row) if request is not None
+                   else int(np.argmax(row)))
+            self._tokens_host[slot] = tok
+            self.phase[slot] = PHASE_DECODE
+        else:
+            self._tokens_host[slot] = int(prompt[c])
+            self._fed[slot] = c + 1              # c cached + 1 staged
+            self.phase[slot] = PHASE_PREFILL
+        self.tokens = jnp.asarray(self._tokens_host[:, None])
+
+    def tick(self, now: float | None = None) -> list[int]:
+        """One decode step for all slots (inactive slots decode garbage that
+        is simply ignored).  Returns slots that finished this tick."""
+        if not self.active.any():
+            return []
+        logits, cache = self.decode(self.params, self.tokens, self.pool.cache)
+        self.pool.cache = cache
+        rows = np.asarray(logits[:, 0], np.float32)     # (slots, V)
+        done: list[int] = []
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            self.pos[slot] += 1
+            req = self.slot_owner.get(slot)
+            if self.phase[slot] == PHASE_PREFILL:
+                prompt = self._prompt[slot]
+                if self._fed[slot] < len(prompt):
+                    self._tokens_host[slot] = int(prompt[self._fed[slot]])
+                    self._fed[slot] += 1
+                else:
+                    # last prompt token just decoded → first generated token
+                    tok = (req.sample(rows[slot]) if isinstance(req, Request)
+                           else int(np.argmax(rows[slot])))
+                    self._tokens_host[slot] = tok
+                    self.phase[slot] = PHASE_DECODE
+                    if (isinstance(req, Request) and req.t_first_token is None
+                            and now is not None):
+                        req.t_first_token = now
+            else:
+                self.remaining[slot] -= 1
+                if self.remaining[slot] <= 0:
+                    self.active[slot] = False
+                    done.append(slot)
+                else:
+                    tok = (req.sample(rows[slot]) if isinstance(req, Request)
+                           else int(np.argmax(rows[slot])))
+                    self._tokens_host[slot] = tok
+        self.tokens = jnp.asarray(self._tokens_host[:, None])
+        return done
+
+    def release_slot(self, slot: int):
+        """Free a finished slot: owner cleared here — a stale owner must
+        never survive the slot's release (seed bug)."""
+        self.active[slot] = False
+        self.phase[slot] = PHASE_FREE
+        self._prompt[slot] = None
+        self._fed[slot] = 0
+        self.slot_owner.pop(slot, None)
+
+    # ------------------------------------------------------------- compat
+
+    @property
+    def cache(self):
+        return self.pool.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.pool.cache = value

@@ -1,0 +1,166 @@
+"""ReplicaRouter: N engines behind least-loaded routing, scalable mid-run.
+
+The router is the surface the control plane drives: `scale_to(n)` is the
+actuator for DynamicScaler / PredictiveAllocator decisions, and `reports()`
+emits the per-replica ReplicaReport stream that core/monitoring's
+MetricsCollector consumes (p50/p95 latency, throughput, slot utilization,
+queue depth).
+
+Scaling semantics:
+* up   — revive a draining replica if one exists (warm), else unpark a
+         previously retired engine, else build a new one via the factory
+         (engines share one EngineCore, so this is cheap: no re-init/re-jit).
+* down — mark the newest replicas "draining": they admit nothing new, their
+         queued (not yet admitted) requests are immediately re-routed to the
+         survivors, and the replica is retired to the warm pool once its
+         in-flight slots finish.  No request is ever lost or duplicated.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.monitoring.collector import ReplicaReport
+from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.scheduler import Request
+
+
+class ReplicaRouter:
+    def __init__(self, engine_factory, *, n_replicas: int = 1,
+                 max_replicas: int = 8):
+        """engine_factory(replica_id) -> ServingEngine."""
+        self._factory = engine_factory
+        self.max_replicas = max_replicas
+        self.engines: list[ServingEngine] = []
+        self._parked: list[ServingEngine] = []
+        self._next_replica_id = 0
+        self._t0: float | None = None
+        self._last_now = 0.0
+        for _ in range(max(n_replicas, 1)):
+            self._add_replica()
+
+    @classmethod
+    def shared_core(cls, cfg, *, slots: int, max_seq: int, seed: int = 0,
+                    prefill_chunk: int | None = None, n_replicas: int = 1,
+                    max_replicas: int = 8) -> "ReplicaRouter":
+        """Router whose replicas share one EngineCore (params + compiles)."""
+        core = EngineCore(cfg, max_seq, seed=seed)
+
+        def factory(replica_id: int) -> ServingEngine:
+            return ServingEngine(cfg, slots=slots, max_seq=max_seq,
+                                 prefill_chunk=prefill_chunk, core=core,
+                                 replica_id=replica_id)
+
+        return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas)
+
+    # ------------------------------------------------------------- topology
+
+    def _add_replica(self):
+        if self._parked:
+            eng = self._parked.pop()
+            eng.draining = False
+        else:
+            eng = self._factory(self._next_replica_id)
+            self._next_replica_id += 1
+        self.engines.append(eng)
+
+    @property
+    def serving_engines(self) -> list[ServingEngine]:
+        return [e for e in self.engines if not e.draining]
+
+    @property
+    def replica_count(self) -> int:
+        return len(self.serving_engines)
+
+    def scale_to(self, n: int, now: float = 0.0) -> int:
+        """Actuate a control-plane decision; returns the realized count."""
+        n = max(1, min(int(n), self.max_replicas))
+        for eng in self.engines:                 # revive drains first (warm)
+            if self.replica_count >= n:
+                break
+            if eng.draining:
+                eng.draining = False
+        while self.replica_count < n:
+            self._add_replica()
+        extra = self.replica_count - n
+        if extra > 0:
+            victims = sorted(self.serving_engines,
+                             key=lambda e: -e.replica_id)[:extra]
+            for eng in victims:
+                eng.draining = True
+            for eng in victims:                  # hand backlog to survivors
+                for req in eng.scheduler.drain():
+                    self.submit(req, now=now)
+        return self.replica_count
+
+    # ------------------------------------------------------------- requests
+
+    def submit(self, request: Request, now: float = 0.0):
+        if request.t_submit is None:
+            request.t_submit = now
+        if self._t0 is None or request.t_submit < self._t0:
+            self._t0 = request.t_submit
+        eng = min(self.serving_engines,
+                  key=lambda e: (e.load, e.replica_id))
+        eng.submit(request, now=now)
+
+    def step(self, now: float = 0.0) -> list[Request]:
+        """One tick across every replica (including draining ones, which
+        still finish their in-flight slots)."""
+        completed: list[Request] = []
+        for eng in list(self.engines):
+            completed.extend(eng.step(now))
+        for eng in [e for e in self.engines if e.draining and e.idle]:
+            if len(self.engines) > 1:
+                self.engines.remove(eng)
+                self._parked.append(eng)
+        self._last_now = max(self._last_now, now)
+        return completed
+
+    @property
+    def pending(self) -> int:
+        """Requests somewhere in the system (queued or in a slot)."""
+        return sum(e.scheduler.depth + int(e.active.sum())
+                   for e in self.engines)
+
+    # ------------------------------------------------------------- metrics
+
+    def reports(self, tick: int) -> list[ReplicaReport]:
+        """Per-replica reports for MetricsCollector.submit (drains each
+        engine's metric window).  Parked replicas keep reporting (empty
+        windows): the collector re-counts each replica's LAST report every
+        aggregate, so going silent would replay a parked replica's final
+        spike window forever — an explicit empty report zeroes it out."""
+        out = []
+        for eng in self.engines + self._parked:
+            w = eng.stats.drain_window()
+            out.append(ReplicaReport(
+                replica_id=eng.replica_id, tick=tick,
+                latency_ms_samples=w["latency_ms_samples"],
+                n_requests=w["n_requests"], n_errors=0,
+                flop_util=w["slot_util"],
+                hbm_util=w["slot_util"],          # CPU engine: slot occupancy
+                ici_util=0.0,                     # stands in for chip signals
+                mem_frac=w["slot_util"],
+                queue_depth=w["queue_depth"]))
+        return out
+
+    def metrics(self) -> dict:
+        """Fleet-level aggregates over engine lifetimes (parked replicas
+        keep their history — work they served must not vanish on drain)."""
+        ever = self.engines + self._parked
+        lats = [l for e in ever for l in e.stats.latencies_ms]
+        lat = np.asarray(lats) if lats else np.zeros(1)
+        tokens = sum(e.stats.total_tokens for e in ever)
+        completed = sum(e.stats.total_completed for e in ever)
+        wall = max(self._last_now - (self._t0 or 0.0), 1e-9)
+        return {
+            "latency_p50_ms": float(np.percentile(lat, 50)),
+            "latency_p95_ms": float(np.percentile(lat, 95)),
+            "throughput_tok_s": tokens / wall,
+            "completed": completed,
+            "completed_tokens": tokens,
+            "slot_utilization": float(np.mean(
+                [e.stats.slot_utilization for e in ever])),
+            "queue_depth": sum(e.scheduler.depth for e in self.engines),
+            "replicas": self.replica_count,
+        }

@@ -1,0 +1,84 @@
+"""Request lifecycle + FCFS admission.
+
+A Request moves QUEUED → PREFILL → DECODE → DONE.  The scheduler itself is
+deliberately simple — first-come-first-served with slot-count admission
+control — because the interesting scheduling (how many replicas exist at all)
+belongs to the control plane driving the router.  Timestamps are caller-
+supplied ("now" flows in from the driver), so tests run on a virtual clock
+and production drivers pass wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    gen_len: int
+    sampling: SamplingParams = SamplingParams()
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    replica_id: Optional[int] = None
+    tokens_out: list = dataclasses.field(default_factory=list)
+    _rng: Optional[np.random.Generator] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def sample(self, logits: np.ndarray) -> int:
+        """Sample (and record) the next output token; RNG is seeded from
+        (sampling.seed, rid) so replays are per-request deterministic."""
+        if self._rng is None:
+            self._rng = np.random.default_rng((self.sampling.seed, self.rid))
+        tok = sample_token(logits, self.sampling, self._rng)
+        self.tokens_out.append(tok)
+        return tok
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_done is None or self.t_submit is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_submit is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+
+class FCFSScheduler:
+    """First-come-first-served admission queue for one engine."""
+
+    def __init__(self):
+        self._queue: deque[Request] = deque()
+        self.n_submitted = 0
+
+    def submit(self, request: Request):
+        self._queue.append(request)
+        self.n_submitted += 1
+
+    def pop(self) -> Request:
+        return self._queue.popleft()
+
+    def drain(self) -> list[Request]:
+        """Remove and return every queued (not yet admitted) request — used
+        when a draining replica hands its backlog to the survivors."""
+        out = list(self._queue)
+        self._queue.clear()
+        return out
+
+    @property
+    def depth(self) -> int:
+        return len(self._queue)
+
+    def __bool__(self) -> bool:
+        return bool(self._queue)

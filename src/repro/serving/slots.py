@@ -1,0 +1,72 @@
+"""KV slot pool: one shared cache pytree, S decode slots, per-slot positions.
+
+``write_slot`` merges a single-request cache (batch 1) into the pool at a slot
+index by detecting the batch axis structurally — the axis where the pool is
+slot-sized and the single-request leaf is 1.  That one rule covers every
+family's cache layout without family-specific code:
+
+  dense/moe/vlm  k/v        (L, B, W, KV, hd)        → axis 1
+  swa            k/v        (L, B, window, KV, hd)   → axis 1
+  ssm            h / conv   (L, B, ...)              → axis 1
+  hybrid         mamba      (G, A, B, ...)           → axis 2
+                 attn k/v   (G, B, W, KV, hd)        → axis 1
+  audio          self/cross (L, B, ...)              → axis 1
+
+The pool's "index" leaf is a (slots,) int32 vector of per-slot absolute
+positions (the seed engine kept a single scalar — every slot decoded with the
+max position's RoPE angles and validity mask, which is wrong the moment
+admissions stagger).  LM.decode accepts the vector directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM
+
+
+def write_slot(pool, one, slot: int):
+    """Merge one batch-1 cache leaf into the pool leaf at ``slot``.
+
+    Identical shapes (a 1-slot pool) are a whole-pool overwrite — the seed's
+    axis scan found no differing axis and silently dropped the write."""
+    if pool.ndim == 0:          # defensive: scalar leaf — keep the max
+        return jnp.maximum(pool, one)
+    if pool.shape == one.shape:
+        return one.astype(pool.dtype)
+    for ax in range(pool.ndim):
+        if one.shape[ax] == 1 and pool.shape[ax] != one.shape[ax]:
+            idx = [slice(None)] * pool.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return pool.at[tuple(idx)].set(one.astype(pool.dtype))
+    return pool
+
+
+class SlotPool:
+    """The engine's shared decode cache with slot-granular writes."""
+
+    def __init__(self, cfg, slots: int, max_seq: int):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.cache = LM.init_cache(cfg, slots, max_seq)
+        # per-slot absolute positions replace the scalar index leaf
+        self.cache["index"] = jnp.zeros((slots,), jnp.int32)
+
+    @property
+    def index(self) -> jnp.ndarray:
+        return self.cache["index"]
+
+    def write(self, one, slot: int, *, index=None):
+        """Write a batch-1 cache pytree (from prefill) into ``slot``; the
+        slot's position is set to ``index`` (default: the one-cache's own)."""
+        rest_pool = {k: v for k, v in self.cache.items() if k != "index"}
+        rest_one = {k: v for k, v in one.items() if k != "index"}
+        rest = jax.tree.map(lambda p, o: write_slot(p, o, slot),
+                            rest_pool, rest_one)
+        pos = one["index"] if index is None else index
+        idx = self.cache["index"].at[slot].set(jnp.asarray(pos, jnp.int32))
+        self.cache = {**rest, "index": idx}
+
+    def set_index(self, values):
+        self.cache = {**self.cache, "index": jnp.asarray(values, jnp.int32)}

@@ -1,0 +1,32 @@
+"""Synthetic serving workloads — shares the simulator's WorkloadSpec so the
+control plane's queueing model (sim/serving.py) and the real data plane are
+parameterized by the same request shape (prompt_len, gen_len).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request
+from repro.sim.serving import WorkloadSpec
+
+
+def poisson_arrival_times(rps: float, n: int,
+                          rng: np.random.Generator) -> np.ndarray:
+    """n cumulative arrival times (seconds) at ``rps`` requests/second."""
+    return np.cumsum(rng.exponential(1.0 / max(rps, 1e-9), n))
+
+
+def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
+                       rng: np.random.Generator, base_rid: int = 0,
+                       sampling: SamplingParams = SamplingParams()
+                       ) -> list[Request]:
+    """n requests drawn from the spec's shape (uniform random token ids;
+    ids < 3 reserved for specials, as in the seed driver)."""
+    return [
+        Request(rid=base_rid + i,
+                prompt=rng.integers(3, vocab, size=spec.prompt_len
+                                    ).astype(np.int32),
+                gen_len=spec.gen_len, sampling=sampling)
+        for i in range(n)
+    ]

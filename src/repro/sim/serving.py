@@ -26,6 +26,10 @@ from repro.sim.roofline_db import RooflineDB
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
+    """Request shape shared by the queueing model AND the real data plane:
+    repro/serving/workload.py builds actual engine Requests from the same
+    spec the planner's perf model is parameterized by, so closed-loop runs
+    (examples/serve_autoscale.py) optimize against the workload they serve."""
     prompt_len: int = 1024
     gen_len: int = 128
     timeout_factor: float = 4.0      # × SLO before a request is dropped

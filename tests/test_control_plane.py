@@ -7,6 +7,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # collection must degrade to skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocation.forecaster import WorkloadForecaster

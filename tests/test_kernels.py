@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # collection must degrade to skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

@@ -4,6 +4,9 @@ LR schedules, and the error-feedback int8 gradient compression invariants.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # collection must degrade to skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw, apply_updates, clip_by_global_norm

@@ -1,0 +1,295 @@
+"""Serving engine: FCFS admission, slot lifecycle/reuse, chunked-prefill
+equivalence (chunked vs one-shot prefill produce identical greedy tokens),
+generic slot-pool writes across every family's cache pytree, per-slot
+positions (staggered admission must not perturb a request's tokens), and the
+seeded sampling layer.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import LM
+from repro.models.steps import make_chunked_prefill_step, make_prefill_step
+from repro.serving import (
+    Request, SamplingParams, ServingEngine, SlotPool, sample_token,
+)
+from repro.serving.engine import EngineCore
+
+from conftest import TINY_CFGS
+
+MAX_SEQ = 24
+# the issue's five families: dense, dense+sliding-window, vlm, moe, hybrid/ssm
+FIVE_FAMILIES = ["dense", "swa", "vlm", "moe", "hybrid"]
+
+
+@functools.lru_cache(maxsize=None)
+def core_for(family: str) -> EngineCore:
+    return EngineCore(TINY_CFGS[family], MAX_SEQ, seed=0)
+
+
+def make_engine(family: str, *, slots=2, prefill_chunk=None) -> ServingEngine:
+    return ServingEngine(TINY_CFGS[family], slots=slots, max_seq=MAX_SEQ,
+                         prefill_chunk=prefill_chunk, core=core_for(family))
+
+
+def make_requests(family: str, n, prompt_len=8, gen_len=4, seed=0,
+                  sampling=SamplingParams()):
+    cfg = TINY_CFGS[family]
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(3, cfg.vocab,
+                                        size=prompt_len).astype(np.int32),
+                    gen_len=gen_len, sampling=sampling) for i in range(n)]
+
+
+def run_to_completion(eng, n, max_steps=500):
+    done, now = [], 0.0
+    for _ in range(max_steps):
+        now += 1.0
+        done.extend(eng.step(now=now))
+        if len(done) >= n and eng.idle:
+            return done
+    raise AssertionError(f"only {len(done)}/{n} completed")
+
+
+# ---------------------------------------------------------------- scheduler
+
+
+def test_fcfs_admission_order():
+    eng = make_engine("dense", slots=2)
+    reqs = make_requests("dense", 5, gen_len=3)
+    for r in reqs:
+        eng.submit(r, now=0.0)
+    eng.step(now=1.0)
+    assert {r.rid for r in eng.slot_owner.values()} == {0, 1}
+    done = run_to_completion(eng, 5)
+    # FCFS: admission timestamps are monotone in rid
+    admits = [r.t_admit for r in sorted(done, key=lambda r: r.rid)]
+    assert admits == sorted(admits)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+
+
+def test_slot_reuse_and_owner_cleared_on_release():
+    eng = make_engine("dense", slots=1)
+    r0, r1 = make_requests("dense", 2, gen_len=2)
+    eng.submit(r0, now=0.0)
+    done = []
+    now = 0.0
+    while not done:
+        now += 1.0
+        done = eng.step(now=now)
+    # slot released: owner cleared, phase free, prompt buffer dropped
+    assert eng.slot_owner == {}
+    assert not eng.active[0]
+    assert eng._prompt[0] is None
+    eng.submit(r1, now=now)
+    done2 = run_to_completion(eng, 1)
+    assert done2[0].rid == 1 and done2[0].replica_id == eng.replica_id
+    assert eng.slot_owner == {}
+
+
+def test_admit_rejects_busy_slot_and_bad_prompts():
+    eng = make_engine("dense", slots=1)
+    eng.admit(0, np.arange(3, 8, dtype=np.int32), 2)
+    with pytest.raises(ValueError):
+        eng.admit(0, np.arange(3, 8, dtype=np.int32), 2)
+    eng2 = make_engine("dense", slots=1)
+    with pytest.raises(ValueError):
+        eng2.admit(0, np.zeros(0, np.int32), 2)
+    with pytest.raises(ValueError):  # full-attention prompt must fit max_seq
+        eng2.admit(0, np.full(MAX_SEQ, 3, np.int32), 2)
+
+
+def test_gen_len_clamped_to_cache_for_full_attention():
+    eng = make_engine("dense", slots=1)
+    [r] = make_requests("dense", 1, prompt_len=MAX_SEQ - 4, gen_len=100)
+    eng.submit(r, now=0.0)
+    done = run_to_completion(eng, 1)
+    assert len(done[0].tokens_out) == 4          # max_seq - prompt_len
+
+
+# ------------------------------------------------- chunked-prefill equivalence
+
+
+@pytest.mark.parametrize("family", FIVE_FAMILIES + ["ssm2"])
+def test_chunked_prefill_step_matches_one_shot(family):
+    cfg = TINY_CFGS[family]
+    params = core_for(family).params
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(3, cfg.vocab, size=12).astype(np.int32)
+    inputs = {"tokens": jnp.asarray(prompt[None])}
+    if cfg.family == "vlm":
+        inputs["patches"] = jnp.zeros(
+            (1, cfg.n_vision_patches, cfg.d_model), cfg.cdtype)
+    one_l, one_c = make_prefill_step(cfg, MAX_SEQ)(params, inputs)
+    chunk = 6 if cfg.family != "vlm" else cfg.n_vision_patches + 2
+    chk_l, chk_c = make_chunked_prefill_step(cfg, MAX_SEQ, chunk)(params,
+                                                                  inputs)
+    assert int(jnp.argmax(one_l[0, -1])) == int(jnp.argmax(chk_l[0, -1]))
+    assert int(one_c["index"]) == int(chk_c["index"]) == len(prompt)
+    np.testing.assert_allclose(np.asarray(one_l[:, -1], np.float32),
+                               np.asarray(chk_l[:, -1], np.float32),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_chunked_prefill_step_rejects_chunk_inside_patch_prefix():
+    cfg = TINY_CFGS["vlm"]
+    with pytest.raises(ValueError):
+        make_chunked_prefill_step(cfg, MAX_SEQ, cfg.n_vision_patches)
+
+
+@pytest.mark.parametrize("family", FIVE_FAMILIES)
+def test_engine_streamed_prefill_matches_one_shot(family):
+    """Admission with a small prefill chunk streams the prompt tail through
+    the decode tick — the full greedy token stream must be identical to a
+    whole-prompt prefill."""
+    reqs = make_requests(family, 2, prompt_len=10, gen_len=4, seed=7)
+    reqs[1].prompt = reqs[0].prompt.copy()
+    one = make_engine(family, slots=1, prefill_chunk=None)
+    one.submit(reqs[0], now=0.0)
+    [done_one] = run_to_completion(one, 1)
+    chunked = make_engine(family, slots=1, prefill_chunk=3)
+    chunked.submit(reqs[1], now=0.0)
+    [done_chk] = run_to_completion(chunked, 1)
+    assert done_one.tokens_out == done_chk.tokens_out
+    assert len(done_chk.tokens_out) == 4
+    # streamed prefill takes decode ticks, so TTFT comes later but exists
+    assert done_chk.t_first_token is not None
+
+
+# ------------------------------------------------------------- slot pool
+
+
+@pytest.mark.parametrize("family", FIVE_FAMILIES + ["ssm2"])
+def test_write_slot_axis_detection_per_family(family):
+    # (audio/enc-dec is excluded: prefill cross K/V is encoder-length while
+    # the pool spec is max_seq-sized — ServingEngine refuses it explicitly)
+    cfg = TINY_CFGS[family]
+    params = core_for(family).params
+    rng = np.random.default_rng(0)
+
+    def one_cache(n):
+        inputs = {"tokens": jnp.asarray(
+            rng.integers(3, cfg.vocab, size=n).astype(np.int32)[None])}
+        if cfg.family == "vlm":
+            inputs["patches"] = jnp.zeros(
+                (1, cfg.n_vision_patches, cfg.d_model), cfg.cdtype)
+        if cfg.enc_dec:
+            inputs["frames"] = jnp.zeros((1, n, cfg.d_model), cfg.cdtype)
+        return LM.prefill(params, inputs, cfg, MAX_SEQ)[1]
+
+    c0, c2 = one_cache(6), one_cache(5)
+    pool = SlotPool(cfg, 3, MAX_SEQ)
+    pool.write(c0, 0)
+    pool.write(c2, 2)
+    assert [int(v) for v in pool.index] == [6, 0, 5]
+
+    def batch_axis(pool_leaf, one_leaf):
+        for ax in range(pool_leaf.ndim):
+            if one_leaf.shape[ax] == 1 and pool_leaf.shape[ax] != 1:
+                return ax
+        raise AssertionError("no batch axis found")
+
+    rest_pool = {k: v for k, v in pool.cache.items() if k != "index"}
+    rest_one0 = {k: v for k, v in c0.items() if k != "index"}
+    checked = []
+
+    def check(p, o):
+        p, o = np.asarray(p), np.asarray(o)
+        ax = batch_axis(p, o)
+        np.testing.assert_array_equal(np.take(p, 0, axis=ax),
+                                      np.take(o, 0, axis=ax))
+        np.testing.assert_array_equal(np.take(p, 1, axis=ax),
+                                      np.zeros_like(np.take(p, 1, axis=ax)))
+        checked.append(ax)
+        return p
+
+    jax.tree.map(check, rest_pool, rest_one0)
+    assert checked                                  # every family has leaves
+    if family == "hybrid":                          # mamba states: batch at 2
+        assert 2 in checked and 1 in checked
+
+
+def test_write_slot_single_slot_pool_is_overwrite():
+    """A 1-slot pool has identical pool/one shapes; the seed's axis scan
+    silently dropped the write — it must be a whole-pool overwrite."""
+    cfg = TINY_CFGS["dense"]
+    params = core_for("dense").params
+    prompt = np.arange(3, 9, dtype=np.int32)
+    _, one = LM.prefill(params, {"tokens": jnp.asarray(prompt[None])}, cfg,
+                        MAX_SEQ)
+    pool = SlotPool(cfg, 1, MAX_SEQ)
+    assert float(jnp.abs(pool.cache["layers"]["k"]).sum()) == 0.0
+    pool.write(one, 0)
+    np.testing.assert_array_equal(pool.cache["layers"]["k"],
+                                  one["layers"]["k"])
+    assert int(pool.index[0]) == len(prompt)
+
+
+# ------------------------------------------------------- per-slot positions
+
+
+@pytest.mark.parametrize("family", ["dense", "swa", "vlm"])
+def test_staggered_admission_does_not_perturb_tokens(family):
+    """A request admitted mid-flight (other slots deep into decode) must
+    produce exactly the tokens it produces alone — per-slot ring positions,
+    RoPE angles, and validity masks (the seed's shared scalar index failed
+    this)."""
+    ra, rb, rb_solo = make_requests(family, 3, prompt_len=8, gen_len=6,
+                                    seed=11)
+    rb_solo.prompt = rb.prompt.copy()
+
+    solo = make_engine(family, slots=2)
+    solo.submit(rb_solo, now=0.0)
+    [done_solo] = run_to_completion(solo, 1)
+
+    eng = make_engine(family, slots=2)
+    eng.submit(ra, now=0.0)
+    now = 0.0
+    for _ in range(3):                              # ra is 3 tokens deep
+        now += 1.0
+        eng.step(now=now)
+    eng.submit(rb, now=now)
+    done = run_to_completion(eng, 2)
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[rb.rid].tokens_out == done_solo.tokens_out
+
+
+# ------------------------------------------------------------- sampling
+
+
+def test_greedy_sampling_is_argmax():
+    logits = np.array([0.1, 2.0, -1.0, 2.0])
+    assert sample_token(logits, SamplingParams()) == 1        # first max wins
+    # top_k=1 collapses to the (unique) max regardless of temperature
+    assert sample_token(np.array([0.1, 3.0, -1.0, 2.0]),
+                        SamplingParams(temperature=0.7, top_k=1),
+                        np.random.default_rng(0)) == 1
+
+
+def test_seeded_sampling_is_deterministic_per_request():
+    sampling = SamplingParams(temperature=0.9, top_k=4, seed=5)
+    [r1] = make_requests("dense", 1, gen_len=6, sampling=sampling)
+    [r2] = make_requests("dense", 1, gen_len=6, sampling=sampling)
+    e1, e2 = make_engine("dense", slots=1), make_engine("dense", slots=1)
+    e1.submit(r1, now=0.0)
+    e2.submit(r2, now=0.0)
+    [d1] = run_to_completion(e1, 1)
+    [d2] = run_to_completion(e2, 1)
+    assert d1.tokens_out == d2.tokens_out
+    assert len(d1.tokens_out) == 6
+
+
+def test_temperature_zero_matches_greedy_engine_default():
+    [r_explicit] = make_requests("dense", 1, gen_len=5,
+                                 sampling=SamplingParams(temperature=0.0))
+    [r_default] = make_requests("dense", 1, gen_len=5)
+    e1, e2 = make_engine("dense", slots=1), make_engine("dense", slots=1)
+    e1.submit(r_explicit, now=0.0)
+    e2.submit(r_default, now=0.0)
+    [d1] = run_to_completion(e1, 1)
+    [d2] = run_to_completion(e2, 1)
+    assert d1.tokens_out == d2.tokens_out

@@ -1,0 +1,198 @@
+"""ReplicaRouter: least-loaded routing, conservation under random arrivals
+and mid-run scaling (no request lost or double-completed), and throughput
+accounting (reported throughput == completed tokens / wall time).
+
+The conservation check is one shared helper; deterministic tests pin fixed
+seeds (always run), and hypothesis — when installed — fuzzes the same helper
+over random arrival/scaling sequences.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.serving import ReplicaRouter, Request, SamplingParams
+from repro.serving.engine import EngineCore
+
+from conftest import TINY_CFGS
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MAX_SEQ = 24
+SLOTS = 2
+TICK_S = 0.5
+
+
+@functools.lru_cache(maxsize=None)
+def shared_core() -> EngineCore:
+    return EngineCore(TINY_CFGS["dense"], MAX_SEQ, seed=0)
+
+
+def make_router(n_replicas=1, max_replicas=4) -> ReplicaRouter:
+    core = shared_core()
+    cfg = TINY_CFGS["dense"]
+
+    def factory(replica_id):
+        from repro.serving import ServingEngine
+        return ServingEngine(cfg, slots=SLOTS, max_seq=MAX_SEQ,
+                             prefill_chunk=4, core=core,
+                             replica_id=replica_id)
+
+    return ReplicaRouter(factory, n_replicas=n_replicas,
+                         max_replicas=max_replicas)
+
+
+def run_sequence(arrivals, scale_events, *, n_replicas=1, max_steps=2000):
+    """arrivals: [(step, prompt_len, gen_len)]; scale_events: {step: target}.
+    Returns (router, completed, wall_time).  Asserts conservation."""
+    cfg = TINY_CFGS["dense"]
+    rng = np.random.default_rng(0)
+    router = make_router(n_replicas=n_replicas)
+    reqs = {
+        i: Request(rid=i,
+                   prompt=rng.integers(3, cfg.vocab, size=p).astype(np.int32),
+                   gen_len=g)
+        for i, (_, p, g) in enumerate(arrivals)
+    }
+    by_step: dict[int, list[int]] = {}
+    for i, (s, _, _) in enumerate(arrivals):
+        by_step.setdefault(s, []).append(i)
+    completed, now, step = [], 0.0, 0
+    while step < max_steps:
+        now = step * TICK_S
+        for i in by_step.get(step, []):
+            router.submit(reqs[i], now=now)
+        if step in scale_events:
+            router.scale_to(scale_events[step], now=now)
+        completed.extend(router.step(now))
+        step += 1
+        if step > max(by_step, default=0) and router.pending == 0 \
+                and len(completed) == len(reqs):
+            break
+    # conservation: every request completed exactly once
+    rids = [r.rid for r in completed]
+    assert sorted(rids) == sorted(reqs), (
+        f"lost={set(reqs) - set(rids)} dup="
+        f"{ {r for r in rids if rids.count(r) > 1} }")
+    for r in completed:
+        assert r.t_done is not None and r.t_submit is not None
+        assert r.t_done >= r.t_submit
+        assert len(r.tokens_out) == reqs[r.rid].gen_len
+    return router, completed, now
+
+
+# ------------------------------------------------------------ deterministic
+
+
+def test_least_loaded_routing_spreads_requests():
+    router = make_router(n_replicas=2)
+    cfg = TINY_CFGS["dense"]
+    for i in range(4):
+        router.submit(Request(rid=i,
+                              prompt=np.full(6, 3 + i, np.int32),
+                              gen_len=3), now=0.0)
+    # 2 replicas × 2 slots: least-loaded routing alternates replicas
+    depths = [e.scheduler.depth for e in router.engines]
+    assert depths == [2, 2]
+
+
+def test_conservation_fixed_burst():
+    arrivals = [(0, 6, 3)] * 7 + [(3, 8, 4)] * 5
+    router, completed, _ = run_sequence(arrivals, {})
+    assert len(completed) == 12
+
+
+def test_conservation_with_mid_run_scaling():
+    arrivals = [(i, 5 + (i % 4), 2 + (i % 3)) for i in range(14)]
+    router, completed, _ = run_sequence(
+        arrivals, {2: 3, 6: 1, 9: 2}, n_replicas=1)
+    assert len(completed) == 14
+    assert {r.replica_id for r in completed} != {0}    # scaling actually ran
+
+
+def test_throughput_equals_tokens_over_wall_time():
+    arrivals = [(0, 6, 4)] * 6 + [(2, 6, 4)] * 6
+    router, completed, now = run_sequence(arrivals, {1: 2})
+    m = router.metrics()
+    tokens = sum(len(r.tokens_out) for r in completed)
+    assert m["completed_tokens"] == tokens
+    wall = now - min(r.t_submit for r in completed)
+    assert m["throughput_tok_s"] == pytest.approx(tokens / wall, rel=1e-6)
+
+
+def test_reports_feed_metrics_collector():
+    from repro.core.monitoring.collector import MetricsCollector
+    arrivals = [(0, 6, 3)] * 6
+    router, completed, _ = run_sequence(arrivals, {0: 2})
+    collector = MetricsCollector()
+    for rep in router.reports(tick=0):
+        collector.submit(rep)
+    rec = collector.aggregate(0, n_replicas=router.replica_count,
+                              max_replicas=4)
+    assert rec["throughput"] == len(completed)
+    assert rec["latency_p95"] >= rec["latency_p50"] > 0
+
+
+def test_scale_to_respects_bounds():
+    router = make_router(n_replicas=1, max_replicas=3)
+    assert router.scale_to(100) == 3
+    assert router.scale_to(0) == 1
+    assert router.scale_to(-5) == 1
+
+
+def test_draining_replica_finishes_in_flight_work():
+    router = make_router(n_replicas=2)
+    cfg = TINY_CFGS["dense"]
+    reqs = [Request(rid=i, prompt=np.full(6, 4, np.int32), gen_len=6)
+            for i in range(4)]
+    for r in reqs:
+        router.submit(r, now=0.0)
+    router.step(0.0)                       # all four admitted (2×2 slots)
+    router.scale_to(1, now=0.0)
+    completed, now = [], 0.0
+    while len(completed) < 4 and now < 100:
+        now += TICK_S
+        completed.extend(router.step(now))
+    assert sorted(r.rid for r in completed) == [0, 1, 2, 3]
+    assert len(router.engines) == 1        # drained replica parked
+
+
+# ------------------------------------------------------------- property
+
+
+if HAVE_HYPOTHESIS:
+    arrival_strategy = st.lists(
+        st.tuples(st.integers(0, 12),          # arrival step
+                  st.integers(1, 10),          # prompt_len
+                  st.integers(1, 6)),          # gen_len
+        min_size=1, max_size=16)
+    scaling_strategy = st.dictionaries(
+        st.integers(0, 12), st.integers(1, 4), max_size=4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(arrivals=arrival_strategy, scale_events=scaling_strategy)
+    def test_property_no_request_lost_or_duplicated(arrivals, scale_events):
+        run_sequence(arrivals, scale_events)
+
+    @settings(max_examples=8, deadline=None)
+    @given(arrivals=arrival_strategy)
+    def test_property_throughput_accounting(arrivals):
+        router, completed, now = run_sequence(arrivals, {})
+        m = router.metrics()
+        tokens = sum(len(r.tokens_out) for r in completed)
+        assert m["completed_tokens"] == tokens
+        wall = max(now - min(r.t_submit for r in completed), 1e-9)
+        assert m["throughput_tok_s"] == pytest.approx(tokens / wall,
+                                                      rel=1e-6)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_no_request_lost_or_duplicated():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_throughput_accounting():
+        pass

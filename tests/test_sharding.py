@@ -11,6 +11,7 @@ from pathlib import Path
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # collection must degrade to skips, not errors
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 

@@ -6,6 +6,7 @@ from pathlib import Path
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # collection must degrade to skips, not errors
 from hypothesis import given, settings, strategies as st
 
 from repro.models import SHAPES
