@@ -6,13 +6,21 @@ when traffic peaks, so its user-experienced tail is far worse than its
 calm-hour average.  Error (timeout) rates are reported alongside — dropped
 requests don't even appear in a latency histogram.
 
-Two layers:
+Three layers:
   * run()        — the queueing-model fleet simulation (paper-scale, fast);
   * run_engine() — the SAME experiment on the real CPU data plane: a
     ReplicaRouter over actual ServingEngines, autoscaled by the planner vs
     pinned at one replica, under an identical calm→spike→calm profile.
     (`python -m benchmarks.serving_latency --engine`)
+  * run_kernel_ablation() — the decode data path itself: one staggered
+    continuous-batching run per kernel (`ref` = jnp scatter + masked sdpa,
+    `pallas` = fused vector-index split-K kernel + ring-scatter write,
+    interpret mode on CPU), recording per-tick decode wall time and
+    asserting the token streams are identical.
+    (`python -m benchmarks.serving_latency --kernel both --smoke` writes
+    BENCH_decode.json — the CI perf-trajectory artifact)
 """
+import json
 import time
 
 import numpy as np
@@ -94,10 +102,102 @@ def run_engine(seed: int = 0, ticks: int = ENGINE_TICKS):
     }
 
 
+# ---------------------------------------------------------------------------
+# decode-kernel ablation (pallas vs jnp reference data path)
+# ---------------------------------------------------------------------------
+
+KERNEL_SCALES = {
+    # n_requests, prompt_len, gen_len, slots, max_seq
+    "smoke": dict(n_requests=4, prompt_len=6, gen_len=5, slots=2, max_seq=24),
+    "full": dict(n_requests=16, prompt_len=12, gen_len=16, slots=4,
+                 max_seq=64),
+}
+
+
+def _kernel_run(use_pallas: bool, *, n_requests, prompt_len, gen_len, slots,
+                max_seq, seed: int = 0):
+    """One staggered continuous-batching run; returns (per-tick wall times,
+    token streams by rid)."""
+    from repro.configs import get_smoke_config
+    from repro.serving import ServingEngine
+    from repro.serving.scheduler import Request
+
+    cfg = get_smoke_config("qwen2.5-3b", use_pallas=use_pallas)
+    eng = ServingEngine(cfg, slots=slots, max_seq=max_seq,
+                        prefill_chunk=max(prompt_len // 2, 2))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, prompt=rng.integers(
+                3, cfg.vocab, size=prompt_len).astype(np.int32),
+                gen_len=gen_len) for i in range(n_requests)]
+    done, tick_s, now, step = [], [], 0.0, 0
+    while len(done) < n_requests and step < 10_000:
+        if step % 2 == 0 and step // 2 < len(reqs):
+            eng.submit(reqs[step // 2], now=now)   # staggered admissions
+        now += 1.0
+        t0 = time.perf_counter()
+        done.extend(eng.step(now=now))
+        tick_s.append(time.perf_counter() - t0)
+        step += 1
+    assert len(done) == n_requests, f"stalled at {len(done)}/{n_requests}"
+    return tick_s, {r.rid: list(r.tokens_out) for r in done}
+
+
+def run_kernel_ablation(kernel: str = "both", smoke: bool = True,
+                        seed: int = 0):
+    """Per-kernel decode-path measurement + cross-path token equivalence."""
+    scale = KERNEL_SCALES["smoke" if smoke else "full"]
+    variants = {"ref": False, "pallas": True}
+    if kernel != "both":
+        variants = {kernel: variants[kernel]}
+    out, streams = {}, {}
+    for name, use_pallas in variants.items():
+        ticks, toks = _kernel_run(use_pallas, seed=seed, **scale)
+        warm = ticks[1:] if len(ticks) > 1 else ticks   # tick 0 pays the jit
+        n_tokens = sum(len(t) for t in toks.values())
+        out[name] = {
+            "ticks": len(ticks),
+            "mean_tick_ms": float(np.mean(warm)) * 1e3,
+            "p95_tick_ms": float(np.percentile(warm, 95)) * 1e3,
+            "tokens": n_tokens,
+            # rate over warm ticks only — at smoke scale tick 0's compile
+            # time would otherwise dominate the trajectory record
+            "tok_per_s": n_tokens / max(sum(warm), 1e-9),
+        }
+        streams[name] = toks
+    match = (len(streams) < 2
+             or streams["ref"] == streams["pallas"])
+    per = ", ".join(f"{k} {v['mean_tick_ms']:.1f}ms/tick"
+                    for k, v in out.items())
+    note = ("pallas runs INTERPRETED on CPU (correctness trajectory; "
+            "compiled speed needs a TPU)")
+    return {
+        "name": "decode_kernel_ablation",
+        "derived": f"{per}; token streams match: {match} — {note}",
+        "tokens_match": bool(match),
+        "detail": {"kernels": out, "scale": scale, "seed": seed},
+    }
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", action="store_true",
                     help="run the real-engine closed loop (CPU smoke)")
+    ap.add_argument("--kernel", choices=["pallas", "ref", "both"],
+                    default=None,
+                    help="decode data-path ablation: fused Pallas vector-"
+                         "index kernel vs jnp reference")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest ablation scale (CI artifact)")
+    ap.add_argument("--out", default="BENCH_decode.json",
+                    help="where --kernel writes its JSON record")
     args = ap.parse_args()
-    print((run_engine() if args.engine else run())["derived"])
+    if args.kernel:
+        res = run_kernel_ablation(args.kernel, smoke=args.smoke)
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if not res["tokens_match"]:
+            raise SystemExit("kernel ablation: token streams diverged")
+    else:
+        print((run_engine() if args.engine else run())["derived"])

@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 CI entrypoint: install dev deps, run the full suite, then the
-# closed-loop serving smoke (examples/serve_autoscale.py --smoke).
+# Tier-1 CI entrypoint: install dev deps, run the Pallas kernel-equivalence
+# suites first (the `kernels` marker — fast signal when a kernel change
+# breaks oracle parity), then the rest of the suite, record the decode-kernel
+# ablation (BENCH_decode.json, the perf-trajectory artifact the workflow
+# uploads), then the closed-loop serving smoke.
 # Mirrors .github/workflows/ci.yml so the same command works locally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -8,5 +11,7 @@ cd "$(dirname "$0")/.."
 python -m pip install --quiet -r requirements-dev.txt
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q
+python -m pytest -x -q -m kernels
+python -m pytest -x -q -m "not kernels"
+python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.json
 python examples/serve_autoscale.py --smoke

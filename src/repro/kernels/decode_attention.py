@@ -12,9 +12,20 @@ The GQA q-head group (G = H/KV heads sharing one KV head) forms the q tile —
 (G, hd) — so the score matmul is (G, hd) × (hd, bk): MXU-shaped when G ≥ 8,
 and still a single VREG broadcast otherwise.
 
-Layouts: q (B, KV, G, hd); caches (B, KV, Smax, hd); `index` arrives as a
-(1, 1) int32 array read from VMEM (slots > index are masked — ring-buffer
-validity, see models/attention.py).
+Layouts (vector-index contract)::
+
+    q        (B, KV, G, hd)   one query token per batch row
+    k/v      (B, KV, Smax, hd) ring-buffer caches
+    index    scalar or (B,)   per-row absolute position (scalar broadcasts)
+    out      (B, KV, G, hd)
+
+``index`` is scalar-prefetched (SMEM) so each grid row ``b`` reads its own
+position before the K/V pipeline issues: row ``b`` masks slots against its own
+validity horizon ``slot <= index[b]`` (ring-buffer validity — once a row has
+wrapped, ``index >= Smax`` and every slot is live), and the K/V index map
+clamps dead blocks to the row's last live block, so the sequential pipeline
+re-visits a resident tile instead of streaming dead cache from HBM — a short
+row in a continuous batch only pays for its own live KV blocks.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ NEG = -1e30
 
 def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
                    *, scale: float, bk: int, nk: int):
+    b = pl.program_id(0)
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -38,12 +50,12 @@ def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    index = idx_ref[0, 0]
+    index = idx_ref[b]
     G = q_ref.shape[2]
     slot = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
     ok = slot <= index
 
-    # skip blocks entirely past the valid region
+    # skip blocks entirely past this row's valid region
     @pl.when(ki * bk <= index)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
@@ -72,31 +84,79 @@ def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention_bkgd(q, k_cache, v_cache, index, *, block_k: int = 512,
                           interpret: bool = False):
-    """q: (B, KV, G, hd); caches: (B, KV, Smax, hd); index: scalar int32."""
+    """q: (B, KV, G, hd); caches: (B, KV, Smax, hd); index: scalar or (B,)
+    int32 — each batch row is masked against its own position."""
     B, KV, G, hd = q.shape
     Smax = k_cache.shape[2]
     bk = min(block_k, Smax)
     assert Smax % bk == 0, (Smax, bk)
     nk = Smax // bk
-    grid = (B, KV, nk)
-    idx = jnp.asarray(index, jnp.int32).reshape(1, 1)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+
+    def kv_map(b, h, ki, idx_ref):
+        # dead blocks re-map to the row's last live block: the sequential
+        # pipeline sees an unchanged block index and skips the HBM fetch
+        last = jnp.minimum(idx_ref[b] // bk, nk - 1)
+        return (b, h, jnp.minimum(ki, last), 0)
 
     kernel = functools.partial(_decode_kernel, scale=hd ** -0.5, bk=bk, nk=nk)
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nk),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, ki: (0, 0)),
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki: (b, h, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, i: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, hd), jnp.float32),
             pltpu.VMEM((G, 128), jnp.float32),
             pltpu.VMEM((G, 128), jnp.float32),
         ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
     )(idx, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# per-row ring-buffer K/V write
+# ---------------------------------------------------------------------------
+
+
+def _ring_update_kernel(slot_ref, new_ref, cache_ref, out_ref):
+    del slot_ref, cache_ref      # routing happens in the out index map
+    out_ref[...] = new_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_ring_update_bs(cache, new, slot, *, interpret: bool = False):
+    """Scatter ``new[b]`` into ``cache[b, slot[b]]`` in place.
+
+    cache: (B, Smax, KV, hd) (model layout); new: (B, KV, hd); slot: (B,)
+    int32 ring slots.  The slot vector is scalar-prefetched and consumed by
+    the output index map, so grid step ``b`` touches exactly one (KV, hd)
+    cache row; ``input_output_aliases`` makes every untouched row free —
+    the donation-friendly form of the jnp ``.at[rows, slot].set`` scatter.
+    """
+    B, Smax, KV, hd = cache.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 1, KV, hd), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, KV, hd), lambda b, s: (b, s[b], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, KV, hd), lambda b, s: (b, s[b], 0, 0)),
+    )
+    return pl.pallas_call(
+        _ring_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={2: 0},     # cache operand aliases the output
+        interpret=interpret,
+    )(jnp.asarray(slot, jnp.int32), new[:, None], cache)

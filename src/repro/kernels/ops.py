@@ -13,7 +13,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
-from repro.kernels.decode_attention import decode_attention_bkgd
+from repro.kernels.decode_attention import (
+    cache_ring_update_bs,
+    decode_attention_bkgd,
+)
 from repro.kernels.ssm_scan import ssm_scan_ssd
 
 
@@ -40,7 +43,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
 
 def decode_attention(q, k_cache, v_cache, index, *, block_k: int = 512,
                      interpret=None):
-    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd) → (B, 1, H, hd)."""
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd) → (B, 1, H, hd).
+
+    ``index`` is a scalar or a (B,) per-row position vector — both dispatch
+    to the same split-K kernel (the scalar broadcasts); only a ragged Smax
+    (not divisible by any block) falls back to the jnp reference."""
     interpret = _interpret_default() if interpret is None else interpret
     B, _, H, hd = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
@@ -54,6 +61,14 @@ def decode_attention(q, k_cache, v_cache, index, *, block_k: int = 512,
     out = decode_attention_bkgd(qt, kt, vt, index, block_k=bk,
                                 interpret=interpret)
     return out.reshape(B, 1, H, hd)
+
+
+def cache_ring_update(cache, new, slot, *, interpret=None):
+    """Scatter ``new[b]`` into ``cache[b, slot[b]]`` — the fused per-row
+    ring-buffer K/V write.  cache: (B, Smax, KV, hd); new: (B, KV, hd);
+    slot: (B,) int32 (already reduced mod Smax)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return cache_ring_update_bs(cache, new, slot, interpret=interpret)
 
 
 def ssm_scan(x, dt, A, B, C, *, chunk: int = 128, interpret=None):

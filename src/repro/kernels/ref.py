@@ -35,19 +35,32 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
 
 
 def decode_attention_ref(q, k_cache, v_cache, index):
-    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); slots > index masked."""
+    """q: (B, 1, H, hd); caches: (B, Smax, KV, hd); slots > index masked.
+
+    ``index`` is a scalar or a (B,) vector — with a vector, every batch row
+    is masked against its own validity horizon (continuous batching)."""
     B, _, H, hd = q.shape
     Smax, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     qg = q.reshape(B, 1, KV, G, hd)
     scores = jnp.einsum("bskgh,btkh->bkgst", qg, k_cache,
                         preferred_element_type=jnp.float32) * (hd ** -0.5)
-    ok = jnp.arange(Smax)[None, :] <= jnp.asarray(index, jnp.int32)
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    ok = jnp.arange(Smax)[None, :] <= idx[:, None]             # (B, Smax)
     scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def cache_ring_update_ref(cache, new, slot):
+    """cache: (B, Smax, KV, hd); new: (B, KV, hd); slot: (B,) — the jnp
+    scatter the Pallas per-row ring write must reproduce exactly."""
+    B = cache.shape[0]
+    rows = jnp.arange(B)
+    return cache.at[rows, jnp.asarray(slot, jnp.int32)].set(
+        new.astype(cache.dtype))
 
 
 def ssm_scan_ref(x, dt, A, B, C):

@@ -259,12 +259,16 @@ class Attention:
     # permutation-invariant over keys) and the only mask is slot validity.
 
     @staticmethod
-    def decode(params, x, cfg, cache, index, *, angles=None, cross_kv=None):
+    def decode(params, x, cfg, cache, index, *, angles=None, cross_kv=None,
+               cross_len=None):
         """x: (B, 1, d_in); cache: {"k","v"}: (B, Smax, KV, hd); index: the
         absolute position being written — scalar int32, or a (B,) vector when
         each batch row sits at its own position (continuous batching: the
         serving engine's slots are admitted at different times, so their ring
-        slots and validity horizons differ per row).  Returns (y, new_cache)."""
+        slots and validity horizons differ per row).  cross_len: optional
+        scalar or (B,) encoder length for the cross_kv branch — key positions
+        >= cross_len are masked, so a max_seq-sized cross-K/V pool can hold
+        shorter encodings per slot.  Returns (y, new_cache)."""
         B = x.shape[0]
         index = jnp.asarray(index, jnp.int32)
         if cross_kv is not None:
@@ -272,7 +276,16 @@ class Attention:
             q = q.reshape(B, 1, cfg.n_heads, cfg.hd)
             if angles is not None:
                 q = apply_rope(q, angles)
-            out = sdpa_ref(q, cross_kv[0], cross_kv[1], None)
+            bias = None
+            if cross_len is not None:
+                Se = cross_kv[0].shape[1]
+                cl = jnp.asarray(cross_len, jnp.int32)
+                cl = cl.reshape(-1, 1, 1) if cl.ndim else cl[None, None, None]
+                k_pos = jnp.arange(Se, dtype=jnp.int32)[None, None, :]
+                bias = jnp.broadcast_to(
+                    jnp.where(k_pos < cl, 0.0, NEG_INF).astype(jnp.float32),
+                    (B, 1, Se))
+            out = sdpa_ref(q, cross_kv[0], cross_kv[1], bias)
             y = Linear.apply(params["wo"], out.reshape(B, 1, -1), dtype=cfg.cdtype)
             return y, cache
         q, k, v = Attention.qkv(params, x, x, cfg)
@@ -288,15 +301,21 @@ class Attention:
             # per-row positions: scatter each row's K/V into its own ring
             # slot, mask each row against its own validity horizon
             slot = jax.lax.rem(index, Smax)
-            rows = jnp.arange(B)
-            k_cache = cache["k"].at[rows, slot].set(
-                k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[rows, slot].set(
-                v[:, 0].astype(cache["v"].dtype))
-            slots = jnp.arange(Smax, dtype=jnp.int32)
-            bias = jnp.where(slots[None, None, :] <= index[:, None, None],
-                             0.0, NEG_INF).astype(jnp.float32)
-            out = sdpa_ref(q, k_cache, v_cache, bias)
+            if cfg.use_pallas:
+                from repro.kernels import ops as kops
+                k_cache = kops.cache_ring_update(cache["k"], k[:, 0], slot)
+                v_cache = kops.cache_ring_update(cache["v"], v[:, 0], slot)
+                out = kops.decode_attention(q, k_cache, v_cache, index)
+            else:
+                rows = jnp.arange(B)
+                k_cache = cache["k"].at[rows, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                v_cache = cache["v"].at[rows, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
+                slots = jnp.arange(Smax, dtype=jnp.int32)
+                bias = jnp.where(slots[None, None, :] <= index[:, None, None],
+                                 0.0, NEG_INF).astype(jnp.float32)
+                out = sdpa_ref(q, k_cache, v_cache, bias)
             new_cache = {"k": k_cache, "v": v_cache}
         else:
             slot = jax.lax.rem(index, Smax)

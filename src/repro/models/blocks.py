@@ -243,15 +243,19 @@ class CrossDecoderBlock:
         return x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
 
     @staticmethod
-    def decode(params, x, cfg, state, index, *, angles=None):
-        """state = {"self": kv-cache, "cross": precomputed (k, v)}."""
+    def decode(params, x, cfg, state, index, *, angles=None, cross_len=None):
+        """state = {"self": kv-cache, "cross": precomputed (k, v)}.
+        cross_len: optional scalar or (B,) encoder length — cross-K/V
+        positions >= cross_len are masked (a max_seq-sized cross pool can
+        hold per-slot encoder lengths)."""
         h = LayerNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
         h, self_cache = Attention.decode(params["self_attn"], h, cfg,
                                          state["self"], index, angles=angles)
         x = x + h
         h = LayerNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
         h, _ = Attention.decode(params["cross_attn"], h, cfg, None, index,
-                                cross_kv=(state["cross"]["k"], state["cross"]["v"]))
+                                cross_kv=(state["cross"]["k"], state["cross"]["v"]),
+                                cross_len=cross_len)
         x = x + h
         h = LayerNorm.apply(params["ln3"], x, eps=cfg.norm_eps)
         x = x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)

@@ -292,6 +292,8 @@ class LM:
             ce_ax = ("layers", "batch", "enc_seq", "kv_heads", None)
             spec["cross"] = {"k": (ce_shape, cfg.cdtype, ce_ax),
                              "v": (ce_shape, cfg.cdtype, ce_ax)}
+            # per-row encoder length: cross K/V past it are masked at decode
+            spec["cross_len"] = ((batch,), jnp.int32, ("batch",))
         elif cfg.hybrid is not None:
             G, A = _hybrid_groups(cfg), cfg.hybrid.attn_every
             ss = SSMBlock.state_shape(cfg, batch)
@@ -583,6 +585,7 @@ class LM:
             cross_kv = jax.tree.map(lambda *xs: jnp.stack(xs), *[o[1] for o in outs])
         cache = {**cache, "self": self_kv, "cross": cross_kv}
         cache["index"] = jnp.asarray(Sd, jnp.int32)
+        cache["cross_len"] = jnp.full((B,), Se, jnp.int32)
         h = LayerNorm.apply(params["ln_f"], h, eps=cfg.norm_eps)
         return LM._logits(params, h[:, -1:], cfg), cache
 
@@ -598,10 +601,13 @@ class LM:
         angles = _angles(cfg, B, 1, start=index)
 
         if cfg.enc_dec:
+            cross_len = cache.get("cross_len")
+
             def body(x, xs):
                 lp, st = xs
                 y, st2 = CrossDecoderBlock.decode(lp, x, cfg, st, index,
-                                                  angles=angles)
+                                                  angles=angles,
+                                                  cross_len=cross_len)
                 return y, st2
             h, new_state = LM._decode_scan(
                 body, h, params["dec_blocks"],

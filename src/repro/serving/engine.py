@@ -113,11 +113,16 @@ class ServingEngine:
                  prefill_chunk: int | None = None,
                  core: EngineCore | None = None, replica_id: int = 0):
         if cfg.enc_dec:
-            # prefill stores cross K/V at encoder length, but the pool spec
-            # is max_seq-sized; slot merging needs length-masked cross
-            # attention (the seed engine had the same latent mismatch).
+            # The model layer now length-masks cross attention (Attention.
+            # decode cross_len), so a max_seq-sized cross pool CAN hold
+            # shorter per-slot encodings; what is still missing is the
+            # engine side: admitting "frames" inputs through admit()/tick()
+            # and padding prefill's encoder-length cross K/V into the pool
+            # spec before write_slot.
             raise NotImplementedError(
-                "enc-dec families are not slot-servable yet")
+                "enc-dec families are not slot-servable yet: the engine "
+                "does not admit frames nor pad cross K/V to the pool spec "
+                "(the model-side cross_len mask already exists)")
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq

@@ -15,6 +15,8 @@ from repro.kernels import ops, ref
 
 jax.config.update("jax_enable_x64", False)
 
+pytestmark = pytest.mark.kernels
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -216,3 +216,53 @@ def test_param_count_analytic_close_to_actual(family_cfg):
     actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     est = cfg.n_params()
     assert abs(est - actual) / actual < 0.15, (name, est, actual)
+
+
+# ------------------------------------------------- length-masked cross-attn
+
+
+def test_cross_attention_length_mask_matches_unpadded():
+    """Decoding against a padded cross-K/V pool with cross_len must equal
+    decoding against the unpadded encoder K/V — per row, with different
+    encoder lengths in one batch (the enc-dec slot-serving prerequisite)."""
+    from repro.models.attention import Attention
+    cfg = TINY_CFGS["audio"]
+    key = jax.random.PRNGKey(13)
+    params, _ = Attention.init(key, cfg)
+    Bsz, Se_max = 2, 12
+    lens = [12, 7]                          # per-row encoder lengths
+    x = jax.random.normal(jax.random.fold_in(key, 1), (Bsz, 1, cfg.d_model))
+    k = jax.random.normal(jax.random.fold_in(key, 2),
+                          (Bsz, Se_max, cfg.n_kv_heads, cfg.hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3),
+                          (Bsz, Se_max, cfg.n_kv_heads, cfg.hd))
+    # poison everything past each row's length: the mask must hide it
+    pos = jnp.arange(Se_max)[None, :, None, None]
+    live = pos < jnp.asarray(lens)[:, None, None, None]
+    k_pad = jnp.where(live, k, 1e3)
+    v_pad = jnp.where(live, v, -1e3)
+    out, _ = Attention.decode(params, x, cfg, None, 0,
+                              cross_kv=(k_pad, v_pad),
+                              cross_len=jnp.asarray(lens, jnp.int32))
+    for b, L in enumerate(lens):            # each row vs its own solo decode
+        solo, _ = Attention.decode(params, x[b:b + 1], cfg, None, 0,
+                                   cross_kv=(k[b:b + 1, :L], v[b:b + 1, :L]))
+        np.testing.assert_allclose(out[b], solo[0], atol=1e-5, rtol=1e-5)
+
+
+def test_encdec_decode_invariant_to_cross_padding():
+    """LM.decode must ignore cross-K/V rows beyond cache["cross_len"]: a
+    pool-sized (padded) cross cache decodes exactly like the tight one."""
+    cfg = TINY_CFGS["audio"]
+    key = jax.random.PRNGKey(14)
+    params, _ = LM.init(key, cfg)
+    lp, cache = LM.prefill(params, inputs_for(cfg, key), cfg, max_seq=S + 4)
+    tok = jnp.argmax(lp[:, 0], -1).astype(jnp.int32)[:, None]
+    ld, _ = LM.decode(params, tok, cfg, cache)
+    pad = [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)]      # (L, B, Se, KV, hd)
+    cache_pad = dict(cache)
+    cache_pad["cross"] = {
+        n: jnp.pad(leaf, pad, constant_values=1e3)
+        for n, leaf in cache["cross"].items()}
+    ld_pad, _ = LM.decode(params, tok, cfg, cache_pad)
+    np.testing.assert_allclose(ld_pad, ld, atol=1e-5, rtol=1e-5)
