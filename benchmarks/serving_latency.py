@@ -61,44 +61,95 @@ ENGINE_TICKS = 12
 ENGINE_SLO_MS = 2000.0
 
 
-def _closed_loop(autoscale: bool, *, seed: int = 0, ticks: int = ENGINE_TICKS):
+def _closed_loop(autoscale: bool, *, seed: int = 0, ticks: int = ENGINE_TICKS,
+                 topology: str = "inproc", max_replicas: int | None = None):
     """One calm→spike→calm run on the real data plane — the SAME driver as
     examples/serve_autoscale.py (repro/serving/closed_loop.py); returns
-    (traffic-weighted p95 ms, completed, mean slot utilization, backlog)."""
+    (traffic-weighted p95 ms, completed, mean slot utilization, backlog,
+    transport_ms)."""
+    import dataclasses
+
     from repro.configs import get_smoke_config
-    from repro.serving.closed_loop import run_closed_loop
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
 
     cfg = get_smoke_config("qwen2.5-3b")
+    lc = LoopConfig(topology=topology)
+    if max_replicas is not None:
+        lc = dataclasses.replace(lc, max_replicas=max_replicas)
     router, logs = run_closed_loop(cfg, autoscale=autoscale, ticks=ticks,
-                                   seed=seed)
+                                   seed=seed, lc=lc)
     tw_num = sum(t.latency_p95_ms * t.arrivals for t in logs)
     tw_den = sum(t.arrivals for t in logs)
     m = router.metrics()
+    router.close()
     backlog = tw_den - m["completed"]      # stuck requests never even reach
     return tw_num / max(tw_den, 1), m["completed"], m["slot_utilization"], \
-        backlog                            # the latency histogram
+        backlog, m["transport_ms"]         # the latency histogram
 
 
-def run_engine(seed: int = 0, ticks: int = ENGINE_TICKS):
+def run_engine(seed: int = 0, ticks: int = ENGINE_TICKS,
+               topology: str = "inproc"):
     """Static-1-replica vs closed-loop on the real engine."""
     from repro.serving.closed_loop import LoopConfig
     t0 = time.perf_counter()
-    p95_s, done_s, util_s, back_s = _closed_loop(False, seed=seed, ticks=ticks)
-    p95_a, done_a, util_a, back_a = _closed_loop(True, seed=seed, ticks=ticks)
+    p95_s, done_s, util_s, back_s, _ = _closed_loop(
+        False, seed=seed, ticks=ticks, topology=topology)
+    p95_a, done_a, util_a, back_a, _ = _closed_loop(
+        True, seed=seed, ticks=ticks, topology=topology)
     wall = time.perf_counter() - t0
     steps = 2 * ticks * LoopConfig().steps_per_tick
     return {
         "name": "serving_latency_engine",
         "us_per_call": wall * 1e6 / max(steps, 1),
-        "derived": (f"real-engine static vs closed-loop: completed "
-                    f"{done_s}->{done_a}, backlog {back_s}->{back_a}, "
+        "derived": (f"real-engine ({topology}) static vs closed-loop: "
+                    f"completed {done_s}->{done_a}, "
+                    f"backlog {back_s}->{back_a}, "
                     f"tw-p95 {p95_s:.0f}ms->{p95_a:.0f}ms (static p95 is "
                     f"survivor-biased by its backlog)"),
         "detail": {"static_ms": p95_s, "autoscaled_ms": p95_a,
                    "completed_static": done_s, "completed_auto": done_a,
                    "backlog_static": back_s, "backlog_auto": back_a,
                    "slot_util_static": util_s, "slot_util_auto": util_a,
-                   "slo_ms": ENGINE_SLO_MS},
+                   "topology": topology, "slo_ms": ENGINE_SLO_MS},
+    }
+
+
+# ---------------------------------------------------------------------------
+# replica-topology smoke (the replica-fabric trajectory artifact)
+# ---------------------------------------------------------------------------
+
+TOPOLOGY_SCALES = {
+    "smoke": dict(ticks=6, max_replicas=2),
+    "full": dict(ticks=ENGINE_TICKS, max_replicas=4),
+}
+
+
+def run_topology(topology: str, smoke: bool = True, seed: int = 0):
+    """One autoscaled closed-loop run on the requested replica backend,
+    recorded for the CI trajectory (BENCH_serving.json): wall time per
+    decode round, completions, backlog, and — for the proc topology — the
+    measured per-replica transport latency.  The same driver, the same
+    seed, the same arrival profile as --engine; only the replica fabric
+    changes underneath."""
+    from repro.serving.closed_loop import LoopConfig
+    scale = TOPOLOGY_SCALES["smoke" if smoke else "full"]
+    t0 = time.perf_counter()
+    p95, done, util, backlog, transport = _closed_loop(
+        True, seed=seed, ticks=scale["ticks"], topology=topology,
+        max_replicas=scale["max_replicas"])
+    wall = time.perf_counter() - t0
+    steps = scale["ticks"] * LoopConfig().steps_per_tick
+    return {
+        "name": "serving_topology",
+        "topology": topology,
+        "us_per_call": wall * 1e6 / max(steps, 1),
+        "derived": (f"{topology} closed loop: {done} completed, "
+                    f"backlog {backlog}, tw-p95 {p95:.0f}ms, "
+                    f"transport {transport:.2f}ms, wall {wall:.1f}s"),
+        "detail": {"completed": done, "backlog": backlog,
+                   "tw_p95_ms": p95, "slot_util": util,
+                   "transport_ms": transport, "wall_s": wall,
+                   "seed": seed, **scale},
     }
 
 
@@ -187,17 +238,30 @@ if __name__ == "__main__":
                     default=None,
                     help="decode data-path ablation: fused Pallas vector-"
                          "index kernel vs jnp reference")
+    ap.add_argument("--topology", choices=["inproc", "sharded", "proc"],
+                    default=None,
+                    help="replica-fabric smoke: the closed loop on one "
+                         "backend, recorded to --out (BENCH_serving.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest ablation scale (CI artifact)")
-    ap.add_argument("--out", default="BENCH_decode.json",
-                    help="where --kernel writes its JSON record")
+    ap.add_argument("--out", default=None,
+                    help="where --kernel / --topology write their JSON "
+                         "record (defaults: BENCH_decode.json / "
+                         "BENCH_serving.json)")
     args = ap.parse_args()
     if args.kernel:
         res = run_kernel_ablation(args.kernel, smoke=args.smoke)
-        with open(args.out, "w") as f:
+        with open(args.out or "BENCH_decode.json", "w") as f:
             json.dump(res, f, indent=2, sort_keys=True)
         print(res["derived"])
         if not res["tokens_match"]:
             raise SystemExit("kernel ablation: token streams diverged")
+    elif args.topology:
+        res = run_topology(args.topology, smoke=args.smoke)
+        with open(args.out or "BENCH_serving.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if res["detail"]["completed"] == 0:
+            raise SystemExit("topology smoke: nothing completed")
     else:
         print((run_engine() if args.engine else run())["derived"])

@@ -18,10 +18,12 @@ scaler never changed the replica count (CI smoke relies on this).
 Run:  PYTHONPATH=src python examples/serve_autoscale.py --smoke
 """
 import argparse
+import dataclasses
 import sys
 
 from repro.configs import get_config, get_smoke_config
-from repro.serving.closed_loop import run_closed_loop
+from repro.serving.closed_loop import LoopConfig, run_closed_loop
+from repro.serving.router import TOPOLOGIES
 
 
 def main(argv=None):
@@ -31,13 +33,18 @@ def main(argv=None):
                     help="reduced config (CPU-fast); required for CI")
     ap.add_argument("--ticks", type=int, default=14)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--topology", choices=TOPOLOGIES, default="inproc",
+                    help="replica backend: in-process engines, one engine "
+                         "sharded over the local device mesh, or worker "
+                         "subprocesses behind the socket transport")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     print(f"engine: {cfg.name} {cfg.n_params() / 1e6:.1f}M params, "
-          f"router starts at 1 replica")
+          f"router starts at 1 {args.topology} replica")
+    lc = dataclasses.replace(LoopConfig(), topology=args.topology)
     router, logs = run_closed_loop(cfg, autoscale=True, ticks=args.ticks,
-                                   seed=args.seed)
+                                   seed=args.seed, lc=lc)
     for t in logs:
         util = " ".join(f"r{rid}={u:.2f}" for rid, u in t.replica_util)
         flag = " [ANOMALY]" if t.anomaly else ""
@@ -48,10 +55,14 @@ def main(argv=None):
               f"-> {t.replicas} replicas ({t.reason}){flag}")
 
     m = router.metrics()
+    router.close()
+    transport = (f", transport={m['transport_ms']:.2f}ms"
+                 if m["transport_ms"] else "")
     print(f"\nfleet totals: {m['completed']} requests, "
           f"{m['completed_tokens']} tokens, p50={m['latency_p50_ms']:.0f}ms "
           f"p95={m['latency_p95_ms']:.0f}ms, "
-          f"throughput={m['throughput_tok_s']:.1f} tok/s (virtual)")
+          f"throughput={m['throughput_tok_s']:.1f} tok/s (virtual)"
+          f"{transport}")
     trajectory = [1] + [t.replicas for t in logs]
     if len(set(trajectory)) == 1:
         print("FAIL: the scaler never changed the replica count")

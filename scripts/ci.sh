@@ -2,8 +2,9 @@
 # Tier-1 CI entrypoint: install dev deps, run the Pallas kernel-equivalence
 # suites first (the `kernels` marker — fast signal when a kernel change
 # breaks oracle parity), then the rest of the suite, record the decode-kernel
-# ablation (BENCH_decode.json, the perf-trajectory artifact the workflow
-# uploads), then the closed-loop serving smoke.
+# ablation (BENCH_decode.json) and the replica-fabric smoke on the
+# multi-process topology (BENCH_serving.json) — both perf-trajectory
+# artifacts the workflow uploads — then the closed-loop serving smoke.
 # Mirrors .github/workflows/ci.yml so the same command works locally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,4 +15,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -m kernels
 python -m pytest -x -q -m "not kernels"
 python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.json
+python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving.json
 python examples/serve_autoscale.py --smoke

@@ -27,37 +27,61 @@ class ReplicaReport:
     ici_util: float
     mem_frac: float
     queue_depth: int
+    # round-trip cost of reaching this replica (0 for in-process ones) —
+    # the control plane's view of how remote the replica is.  Streamed
+    # reports carry it so the scaler/selector can budget for it.
+    transport_ms: float = 0.0
 
 
 class MetricsCollector:
-    def __init__(self, *, window: int = 512, straggler_factor: float = 1.8):
+    def __init__(self, *, window: int = 512, straggler_factor: float = 1.8,
+                 max_staleness: int = 8):
         self.window = window
         self.straggler_factor = straggler_factor
+        # a replica silent for more than this many ticks leaves the fleet
+        # aggregate entirely: decayed-toward-zero ghosts (retired replicas'
+        # tombstones) must not keep diluting unweighted channels like
+        # transport_ms / queue_depth for the rest of the run
+        self.max_staleness = max_staleness
         self.reports: dict[int, list[ReplicaReport]] = defaultdict(list)
         self.fleet_records: list[dict] = []
         self._lat_ewma: dict[int, float] = {}
+        self._errored: dict[int, int] = {}
 
     def submit(self, report: ReplicaReport):
         buf = self.reports[report.replica_id]
         buf.append(report)
         if len(buf) > self.window:
             del buf[:-self.window]
+        # a report carrying errors marks the replica unhealthy until a clean
+        # report arrives — this is how a crashed remote replica surfaces as a
+        # straggler instead of silently vanishing from the fleet view
+        self._errored[report.replica_id] = report.n_errors
         if report.latency_ms_samples:
             m = float(np.mean(report.latency_ms_samples))
             prev = self._lat_ewma.get(report.replica_id, m)
             self._lat_ewma[report.replica_id] = 0.8 * prev + 0.2 * m
+        elif report.n_requests == 0:
+            # an idle window (parked / evacuated / tombstoned replica) ends
+            # the replica's latency evidence: without this, a parked
+            # straggler's stale high EWMA would keep it flagged forever,
+            # skew the fleet median, and re-condemn it the moment a
+            # scale-up revives it
+            self._lat_ewma.pop(report.replica_id, None)
 
     def aggregate(self, tick: int, *, n_replicas: int,
                   max_replicas: int) -> dict:
         """Fleet-level record for this tick (the DNN's input record)."""
         lat, reqs, errs = [], 0, 0
         util = {"flop_util": [], "hbm_util": [], "ici_util": [], "mem_frac": []}
-        qd = []
+        qd, transport = [], []
         for rid, buf in self.reports.items():
             if not buf:
                 continue
             r = buf[-1]
             stale = tick - r.tick
+            if stale > self.max_staleness:
+                continue              # long-gone replica: age out entirely
             w = 0.5 ** stale          # decay stale replicas
             lat.extend(r.latency_ms_samples)
             reqs += r.n_requests
@@ -65,6 +89,7 @@ class MetricsCollector:
             for k in util:
                 util[k].append(getattr(r, k) * w)
             qd.append(r.queue_depth)
+            transport.append(r.transport_ms)
         lat_arr = np.asarray(lat) if lat else np.zeros(1)
         rec = {
             "tick": tick,
@@ -75,6 +100,7 @@ class MetricsCollector:
             "error_rate": errs / max(reqs, 1),
             "rps": float(reqs),
             "queue_depth": float(np.mean(qd)) if qd else 0.0,
+            "transport_ms": float(np.mean(transport)) if transport else 0.0,
             "replicas_frac": n_replicas / max(max_replicas, 1),
             **{k: float(np.mean(v)) if v else 0.0 for k, v in util.items()},
         }
@@ -84,12 +110,16 @@ class MetricsCollector:
         return rec
 
     def stragglers(self) -> list[int]:
-        """Replicas whose latency EWMA exceeds straggler_factor × median."""
-        if len(self._lat_ewma) < 3:
-            return []
-        med = float(np.median(list(self._lat_ewma.values())))
-        return [rid for rid, v in self._lat_ewma.items()
-                if v > self.straggler_factor * med]
+        """Replicas whose latency EWMA exceeds straggler_factor × median,
+        plus any replica whose latest report carried errors (a crashed
+        remote replica reports n_errors > 0 via its parent-side stub — it
+        must show up here even in a fleet too small for the median test)."""
+        out = [rid for rid, e in self._errored.items() if e > 0]
+        if len(self._lat_ewma) >= 3:
+            med = float(np.median(list(self._lat_ewma.values())))
+            out.extend(rid for rid, v in self._lat_ewma.items()
+                       if v > self.straggler_factor * med and rid not in out)
+        return out
 
     def window_values(self, key: str, n: int = 32) -> np.ndarray:
         return np.asarray([r.get(key, 0.0) for r in self.fleet_records[-n:]])

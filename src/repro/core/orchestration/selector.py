@@ -25,15 +25,24 @@ class DeploymentContext:
     spare_capacity_frac: float       # free fleet fraction right now
     cost_sensitivity: float          # 0 = perf-first, 1 = cost-first
     is_critical: bool                # user-facing production traffic?
+    # per-replica transport latency (ms) from the replica fabric's streamed
+    # reports — how remote the fleet is.  0 for an in-process fleet.
+    transport_ms: float = 0.0
 
 
 class DecisionTreeSelector:
-    """Fig. 7: size gate → criticality gate → capacity gate → cost gate."""
+    """Fig. 7: size gate → criticality gate → capacity gate → cost gate,
+    extended with a transport gate: when reaching a replica already costs a
+    material slice of the SLO, strategies that double cross-fleet traffic
+    (shadow mirroring, blue/green full-fleet flips) are off the table —
+    in-place rolling/canary deploys touch each remote replica once."""
 
     def select(self, ctx: DeploymentContext) -> str:
         if not ctx.is_critical and ctx.traffic_rps < 10:
             # internal / low-traffic: speed over safety
             return "all_at_once"
+        if ctx.transport_ms > 0.1 * ctx.slo_ms:
+            return "canary_10" if ctx.is_critical else "rolling"
         if ctx.model_params_b >= 40:
             # huge models: capacity for blue/green rarely exists
             if ctx.spare_capacity_frac >= 0.10:

@@ -38,6 +38,11 @@ class ScalingConstraints:
     target_util: tuple[float, float] = (0.55, 0.85)
     cooldown_ticks: int = 3         # min ticks between scale-downs
     cost_per_replica: float = 1.0
+    # replica-fabric transport latency below this fraction of the SLO is
+    # ignored (deadband): loopback-socket noise must not flip a knife-edge
+    # feasibility test, but a genuinely remote fleet's round-trip cost
+    # tightens the latency budget the optimizer plans against.
+    transport_deadband_frac: float = 0.02
 
 
 @dataclasses.dataclass
@@ -58,14 +63,20 @@ class ScalingOptimizer:
 
     def optimize(self, *, current_load: dict, predicted_load: float,
                  efficiency: float, constraints: ScalingConstraints,
-                 current_replicas: int) -> ScalingDecision:
+                 current_replicas: int,
+                 transport_ms: float = 0.0) -> ScalingDecision:
+        """``transport_ms`` is the replica fabric's round-trip cost (from
+        the streamed ReplicaReports): it is pure overhead the compute model
+        can't see, so it comes off the SLO budget before the feasibility
+        test."""
         c = constraints
         lo = max(c.min_replicas, current_replicas - c.max_step)
         hi = min(c.max_replicas, current_replicas + c.max_step)
+        budget_ms = c.slo_ms - max(transport_ms, 0.0)
         best = None
         for r in range(lo, hi + 1):
             lat, util = self.perf_model(r, predicted_load)
-            feasible = lat <= c.slo_ms and util <= c.target_util[1]
+            feasible = lat <= budget_ms and util <= c.target_util[1]
             cost = r * c.cost_per_replica
             key = (not feasible, cost, lat)
             if best is None or key < best[0]:
@@ -124,6 +135,13 @@ class DynamicScaler:
         current_load = self.analyze_current_load(metrics)
         predicted_load = self.predict_future_load(metrics)
         resource_efficiency = self.calculate_efficiency(current_load, metrics)
+        # per-replica transport latency, streamed in via the collector's
+        # fleet record; sub-deadband values (loopback noise) are dropped so
+        # in-process and local-socket fleets plan identically
+        transport_ms = float(metrics.get("transport_ms", 0.0))
+        if transport_ms < constraints.transport_deadband_frac \
+                * constraints.slo_ms:
+            transport_ms = 0.0
 
         decision = self.optimizer.optimize(
             current_load=current_load,
@@ -131,6 +149,7 @@ class DynamicScaler:
             efficiency=resource_efficiency,
             constraints=constraints,
             current_replicas=current_replicas,
+            transport_ms=transport_ms,
         )
         # scale-down damping: up fast, down slow.  A down decision must be
         # (a) SUSTAINED — the optimizer proposed a lower target for

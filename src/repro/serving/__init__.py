@@ -6,25 +6,42 @@ Layout:
   slots.py      — generic KV slot pool over any family's cache pytree
   engine.py     — single-replica engine: chunked prefill streamed through the
                   batched decode tick, per-slot ring positions
-  router.py     — N engines, least-loaded routing, scale up/down mid-run,
-                  ReplicaReport stream for core/monitoring
+  replica.py    — the Replica protocol (submit/step/report/scale hooks) and
+                  its three backends: InProcessReplica, ShardedReplica (one
+                  engine data-parallel over a device mesh), ProcessReplica
+                  (engine in a worker subprocess over the socket transport)
+  transport.py  — length-prefixed JSON framing + Request/ReplicaReport/
+                  ModelConfig codecs (the wire contract)
+  worker.py     — the subprocess side of ProcessReplica
+  router.py     — N replicas behind the protocol: least-loaded routing,
+                  scale up/down mid-run (evacuate + requeue), straggler
+                  eviction, ReplicaReport stream for core/monitoring
   workload.py   — synthetic request generation (shares sim.WorkloadSpec)
   closed_loop.py— the full control loop (router + collector + allocator),
                   shared by examples/serve_autoscale.py and the serving
-                  latency benchmark's --engine mode
+                  latency benchmark's --engine mode, topology-agnostic
 
 The `core/` control plane (scaler + allocator) drives ReplicaRouter.scale_to;
 examples/serve_autoscale.py closes the loop end to end on CPU.
 """
 from repro.serving.engine import EngineCore, ServingEngine
-from repro.serving.router import ReplicaRouter
+from repro.serving.replica import (
+    InProcessReplica,
+    ProcessReplica,
+    Replica,
+    ShardedReplica,
+)
+from repro.serving.router import ReplicaRouter, TOPOLOGIES
 from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import FCFSScheduler, Request
 from repro.serving.slots import SlotPool, write_slot
+from repro.serving.transport import Connection, TransportError
 from repro.serving.workload import poisson_arrival_times, synthetic_requests
 
 __all__ = [
-    "EngineCore", "ServingEngine", "ReplicaRouter",
+    "EngineCore", "ServingEngine", "ReplicaRouter", "TOPOLOGIES",
+    "Replica", "InProcessReplica", "ShardedReplica", "ProcessReplica",
+    "Connection", "TransportError",
     "SamplingParams", "sample_token",
     "FCFSScheduler", "Request",
     "SlotPool", "write_slot",

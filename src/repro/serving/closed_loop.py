@@ -39,6 +39,7 @@ class LoopConfig:
     slo_ms: float = 2000.0
     calm_rps: float = 1.2
     spike_rps: float = 7.0
+    topology: str = "inproc"     # inproc | sharded | proc (replica.py)
 
 
 @dataclasses.dataclass
@@ -66,11 +67,16 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     seed: int = 0, lc: LoopConfig = LoopConfig(),
                     spec: WorkloadSpec = WorkloadSpec(prompt_len=16,
                                                       gen_len=8),
-                    profile=default_profile):
+                    profile=default_profile, sink: list | None = None):
     """→ (router, [TickLog]).  ``autoscale=False`` pins one replica (the
-    static baseline)."""
-    router = ReplicaRouter.shared_core(
-        cfg, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
+    static baseline).  ``lc.topology`` picks the replica backend — the loop
+    is transport-agnostic, so inproc / sharded / proc runs on the same seed
+    produce the same token streams and the same scaling trajectory.
+    ``sink``, when given, accumulates every completed Request (the
+    cross-topology equivalence tests compare these).  Callers running the
+    proc topology should ``router.close()`` when done (worker teardown)."""
+    router = ReplicaRouter.from_topology(
+        cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas)
     rng = np.random.default_rng(seed)
@@ -115,7 +121,10 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             while arrivals and arrivals[0][0] <= now:
                 t_arr, r = arrivals.pop(0)
                 router.submit(r, now=t_arr)
-            served += len(router.step(now))
+            done = router.step(now)
+            served += len(done)
+            if sink is not None:
+                sink.extend(done)
 
         reports = router.reports(tick)
         for rep in reports:

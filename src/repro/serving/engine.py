@@ -112,17 +112,6 @@ class ServingEngine:
     def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
                  prefill_chunk: int | None = None,
                  core: EngineCore | None = None, replica_id: int = 0):
-        if cfg.enc_dec:
-            # The model layer now length-masks cross attention (Attention.
-            # decode cross_len), so a max_seq-sized cross pool CAN hold
-            # shorter per-slot encodings; what is still missing is the
-            # engine side: admitting "frames" inputs through admit()/tick()
-            # and padding prefill's encoder-length cross K/V into the pool
-            # spec before write_slot.
-            raise NotImplementedError(
-                "enc-dec families are not slot-servable yet: the engine "
-                "does not admit frames nor pad cross K/V to the pool spec "
-                "(the model-side cross_len mask already exists)")
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -157,12 +146,13 @@ class ServingEngine:
         """Enqueue one request.  Validation happens HERE, not at admission:
         a malformed request must bounce back to the submitter, not abort a
         batch step mid-tick with other requests in flight."""
-        self._validate(np.asarray(request.prompt).reshape(-1))
+        self._validate(np.asarray(request.prompt).reshape(-1),
+                       frames=request.frames)
         if request.t_submit is None:
             request.t_submit = now
         self.scheduler.submit(request)
 
-    def _validate(self, prompt: np.ndarray):
+    def _validate(self, prompt: np.ndarray, frames=None):
         P = len(prompt)
         if P < 1:
             raise ValueError("empty prompt")
@@ -172,6 +162,16 @@ class ServingEngine:
                              f"({self.max_seq}) with room to generate")
         if self.cfg.family == "vlm" and P <= self.cfg.n_vision_patches:
             raise ValueError("vlm prompt must extend past the patch prefix")
+        if self.cfg.enc_dec:
+            if frames is None:
+                raise ValueError("enc-dec request needs encoder frames")
+            frames = np.asarray(frames)
+            if frames.ndim != 2 or frames.shape[1] != self.cfg.d_model:
+                raise ValueError(f"frames must be (S_enc, d_model="
+                                 f"{self.cfg.d_model}), got {frames.shape}")
+            if frames.shape[0] < 1 or frames.shape[0] > self.max_seq:
+                raise ValueError(f"encoder length ({frames.shape[0]}) must "
+                                 f"fit the cross pool (1..{self.max_seq})")
 
     @property
     def idle(self) -> bool:
@@ -213,14 +213,20 @@ class ServingEngine:
     # ------------------------------------------------------------- slot API
 
     def admit(self, slot: int, prompt: np.ndarray, gen_len: int,
-              request: Request | None = None):
+              request: Request | None = None, frames=None):
         """Prefill one slot: one-shot over the first chunk, the remainder of
-        the prompt streams through tick() (PREFILL phase)."""
+        the prompt streams through tick() (PREFILL phase).  enc-dec families
+        pass ``frames`` (or carry them on the request): the encoder runs
+        whole in the one-shot portion — cross K/V cover every frame and the
+        decoder prompt tail can still stream through the decode tick."""
         if self.active[slot]:
             raise ValueError(f"slot {slot} is still active")
+        if frames is None and request is not None:
+            frames = request.frames
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         P = len(prompt)
-        self._validate(prompt)      # defense; submit() already rejected
+        # defense; submit() already rejected malformed requests
+        self._validate(prompt, frames=frames)
         if not self.cfg.attn_free and self.cfg.sliding_window is None:
             # full-attention ring wrap would overwrite live context
             gen_len = min(gen_len, self.max_seq - P)
@@ -230,6 +236,9 @@ class ServingEngine:
             inputs["patches"] = jnp.zeros(
                 (1, self.cfg.n_vision_patches, self.cfg.d_model),
                 self.cfg.cdtype)
+        if self.cfg.enc_dec:
+            inputs["frames"] = jnp.asarray(np.asarray(frames)[None],
+                                           self.cfg.cdtype)
         logits, cache1 = self.prefill(self.params, inputs)
         self.pool.write(cache1, slot, index=c)
         self.pos[slot] = c
@@ -297,6 +306,41 @@ class ServingEngine:
         self._prompt[slot] = None
         self._fed[slot] = 0
         self.slot_owner.pop(slot, None)
+
+    def preempt_slot(self, slot: int) -> Request | None:
+        """Evict an in-flight request from its slot, rewound for requeue.
+        The slot's cache rows are garbage after this, which is safe: an
+        inactive slot's decode output is ignored and the next admission
+        overwrites the rows."""
+        req = self.slot_owner.get(slot)
+        self.release_slot(slot)
+        if isinstance(req, Request):
+            req.reset_generation()
+            return req
+        return None
+
+    def evacuate(self) -> list[Request]:
+        """Empty the whole replica for an immediate park/retire: queued
+        requests plus every in-flight one (preempted, rewound).  Nothing is
+        left behind — the caller requeues the returned requests elsewhere."""
+        out = self.scheduler.drain()
+        for slot in np.nonzero(self.active)[0]:
+            req = self.preempt_slot(int(slot))
+            if req is not None:
+                out.append(req)
+        return out
+
+    def lifetime(self) -> dict:
+        """Lifetime accumulators for fleet-level metrics — ONE definition,
+        shared by the in-process replica wrapper and the subprocess worker,
+        so the two transports cannot drift apart field-by-field."""
+        return {
+            "latencies_ms": [float(v) for v in self.stats.latencies_ms],
+            "total_tokens": int(self.stats.total_tokens),
+            "total_completed": int(self.stats.total_completed),
+            "slot_utilization": float(self.stats.slot_utilization),
+            "queue_depth": int(self.scheduler.depth),
+        }
 
     # ------------------------------------------------------------- compat
 

@@ -1,0 +1,588 @@
+"""The Replica protocol: the router's only view of a serving engine.
+
+The control plane assumes replicas spread across heterogeneous environments
+whose operational metrics stream back into it — so the replica boundary must
+be a *message protocol* (submit / step / report / scale hooks), never a
+Python object reference.  ReplicaRouter is written purely against this
+surface; everything engine-shaped lives behind one of three backends:
+
+  InProcessReplica — today's ServingEngine wrapped 1:1 (zero transport).
+  ShardedReplica   — ONE engine spanning a local device mesh: the decode
+                     tick runs under ``repro.sharding.shard_map`` with the
+                     slot/batch axis sharded over the mesh's "data" axis, so
+                     a single replica's S slots are served by N devices.
+                     Prefill stays replicated (batch-1); only the per-tick
+                     batched decode is sharded — that is the hot path.
+  ProcessReplica   — the engine lives in a worker subprocess and is driven
+                     over the length-prefixed JSON transport
+                     (serving/transport.py + serving/worker.py).  Reports
+                     stream back as wire messages and are materialized into
+                     the same ReplicaReport the collector already consumes;
+                     the parent-side stub measures per-call transport
+                     latency (EWMA) and stamps it on every report.
+
+Protocol semantics the router relies on:
+
+* ``step(now)`` returns the *caller's* completed Request objects (a remote
+  backend merges wire results back into the originals), and never hangs —
+  a dead peer flips ``failed`` and returns [].
+* ``evacuate()`` empties the replica NOW: queued requests plus in-flight
+  ones preempted and rewound (Request.reset_generation) — the router
+  requeues them through surviving replicas' schedulers, so a downscale
+  never strands a mid-generation request.
+* ``report(tick)`` must keep flowing after park/evacuate (an explicit empty
+  window zeroes the collector's last-report replay) and after failure (an
+  ``n_errors > 0`` report is how a crash surfaces as a collector straggler).
+* ``lost_requests()`` recovers the submitter-side copies of everything that
+  was inside a failed replica.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Protocol, runtime_checkable
+
+from repro.core.monitoring.collector import ReplicaReport
+from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.scheduler import Request
+from repro.serving.transport import (
+    Connection,
+    TransportError,
+    apply_request,
+    encode_config,
+    encode_request,
+)
+
+
+@runtime_checkable
+class Replica(Protocol):
+    """What the router is allowed to know about a replica."""
+
+    replica_id: int
+
+    def submit(self, request: Request, now: float = 0.0) -> None: ...
+    def step(self, now: float | None = None) -> list[Request]: ...
+    # split-phase step: the router begins the round on EVERY replica before
+    # collecting ANY result, so remote replicas decode concurrently (one
+    # outstanding request per connection) instead of serializing the fleet's
+    # decode round.  step(now) ≡ begin_step(now); finish_step().
+    def begin_step(self, now: float | None = None) -> None: ...
+    def finish_step(self) -> list[Request]: ...
+    def report(self, tick: int) -> ReplicaReport: ...
+    def lifetime(self) -> dict: ...
+    def evacuate(self) -> list[Request]: ...
+    def resume(self) -> None: ...
+    def lost_requests(self) -> list[Request]: ...
+    def close(self) -> None: ...
+
+    @property
+    def load(self) -> float: ...
+    @property
+    def idle(self) -> bool: ...
+    @property
+    def queue_depth(self) -> int: ...
+    @property
+    def pending(self) -> int: ...
+    @property
+    def draining(self) -> bool: ...
+    @property
+    def failed(self) -> bool: ...
+    @property
+    def transport_ms(self) -> float: ...
+
+
+def _report_from_window(replica_id: int, tick: int, w: dict, *,
+                        n_errors: int = 0,
+                        transport_ms: float = 0.0) -> ReplicaReport:
+    return ReplicaReport(
+        replica_id=replica_id, tick=tick,
+        latency_ms_samples=w["latency_ms_samples"],
+        n_requests=w["n_requests"], n_errors=n_errors,
+        flop_util=w["slot_util"],
+        hbm_util=w["slot_util"],          # CPU engine: slot occupancy
+        ici_util=0.0,                     # stands in for chip signals
+        mem_frac=w["slot_util"],
+        queue_depth=w["queue_depth"],
+        transport_ms=transport_ms)
+
+
+_EMPTY_WINDOW = {"latency_ms_samples": [], "n_requests": 0, "n_tokens": 0,
+                 "slot_util": 0.0, "queue_depth": 0}
+
+
+def empty_report(replica_id: int, tick: int) -> ReplicaReport:
+    """A clean idle-window report — the router's tombstone for retired
+    replicas reuses the one report-shape definition instead of a by-hand
+    field list."""
+    return _report_from_window(replica_id, tick, dict(_EMPTY_WINDOW))
+
+
+# ---------------------------------------------------------------------------
+# in-process backend
+# ---------------------------------------------------------------------------
+
+
+class InProcessReplica:
+    """The protocol over a same-process ServingEngine (zero transport)."""
+
+    kind = "inproc"
+
+    def __init__(self, engine: ServingEngine):
+        self.engine = engine
+        self.failed = False
+        self._step_done: list[Request] = []
+
+    @classmethod
+    def build(cls, cfg, *, slots: int, max_seq: int, seed: int = 0,
+              prefill_chunk: int | None = None,
+              core: EngineCore | None = None,
+              replica_id: int = 0) -> "InProcessReplica":
+        return cls(ServingEngine(cfg, slots=slots, max_seq=max_seq,
+                                 seed=seed, prefill_chunk=prefill_chunk,
+                                 core=core, replica_id=replica_id))
+
+    # ------------------------------------------------------------- protocol
+
+    @property
+    def replica_id(self) -> int:
+        return self.engine.replica_id
+
+    def submit(self, request: Request, now: float = 0.0):
+        self.engine.submit(request, now=now)
+
+    def step(self, now: float | None = None) -> list[Request]:
+        return self.engine.step(now=now)
+
+    def begin_step(self, now: float | None = None):
+        # in-process: nothing to overlap with — run the round eagerly.
+        # EXTEND, don't replace: if the previous round's results were never
+        # collected (the driver's collection loop raised mid-way), they are
+        # still owed to the caller
+        self._step_done.extend(self.engine.step(now=now))
+
+    def finish_step(self) -> list[Request]:
+        out, self._step_done = self._step_done, []
+        return out
+
+    def report(self, tick: int) -> ReplicaReport:
+        return _report_from_window(self.replica_id, tick,
+                                   self.engine.stats.drain_window())
+
+    def lifetime(self) -> dict:
+        return self.engine.lifetime()
+
+    def evacuate(self) -> list[Request]:
+        self.engine.draining = True
+        return self.engine.evacuate()
+
+    def resume(self):
+        self.engine.draining = False
+
+    def lost_requests(self) -> list[Request]:
+        return []                      # an in-process replica cannot crash
+
+    def close(self):
+        pass
+
+    @property
+    def load(self) -> float:
+        return self.engine.load
+
+    @property
+    def idle(self) -> bool:
+        return self.engine.idle
+
+    @property
+    def queue_depth(self) -> int:
+        return self.engine.scheduler.depth
+
+    @property
+    def pending(self) -> int:
+        """Queued + in-flight — everything inside this replica."""
+        return self.engine.scheduler.depth + int(self.engine.active.sum())
+
+    @property
+    def draining(self) -> bool:
+        return self.engine.draining
+
+    @draining.setter
+    def draining(self, value: bool):
+        self.engine.draining = bool(value)
+
+    @property
+    def transport_ms(self) -> float:
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+# sharded backend: one replica spanning a local device mesh
+# ---------------------------------------------------------------------------
+
+
+def _axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                        for a in x)
+
+
+def make_sharded_decode(cfg, mesh, slots: int, max_seq: int):
+    """The engine decode step under shard_map: the slot/batch axis of the
+    tokens, the cache, and the logits is sharded over the mesh's "data"
+    axis; params are replicated.  The body is collective-free (decode is
+    purely batch-parallel), so each device serves slots/N rows of the same
+    replica.  Per-leaf specs come from the model's own cache_spec logical
+    axes — the same table the multi-host launcher shards by — with the
+    pool's two vectorized leaves (per-slot "index" positions, per-slot
+    "cross_len") pinned to the slot axis."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import LM
+    from repro.models.steps import cache_axes
+    from repro.sharding import shard_map
+
+    axes = cache_axes(cfg, slots, max_seq)
+
+    def to_spec(ax):
+        return P(*[("data" if a == "batch" else None) for a in ax])
+
+    cache_specs = jax.tree.map(to_spec, axes, is_leaf=_axes_leaf)
+    # SlotPool vectorizes these two over slots (cache_spec says scalar/batch)
+    cache_specs["index"] = P("data")
+    if "cross_len" in cache_specs:
+        cache_specs["cross_len"] = P("data")
+
+    def local_decode(params, tokens, cache):
+        return LM.decode(params, tokens, cfg, cache)
+
+    f = shard_map(local_decode, mesh=mesh,
+                  in_specs=(P(), P("data", None), cache_specs),
+                  out_specs=(P("data", None, None), cache_specs),
+                  check_vma=False)
+    return jax.jit(f, donate_argnums=(2,))
+
+
+class ShardedReplica(InProcessReplica):
+    """One engine data-parallel over a device mesh: S slots / N devices."""
+
+    kind = "sharded"
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, mesh=None,
+                 seed: int = 0, prefill_chunk: int | None = None,
+                 core: EngineCore | None = None, replica_id: int = 0,
+                 decode_fn=None):
+        if mesh is None:
+            import jax
+
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh((len(jax.devices()),), ("data",))
+        n_dev = int(mesh.devices.size)
+        if slots % n_dev != 0:
+            raise ValueError(f"slots ({slots}) must divide evenly over the "
+                             f"mesh ({n_dev} devices)")
+        engine = ServingEngine(cfg, slots=slots, max_seq=max_seq, seed=seed,
+                               prefill_chunk=prefill_chunk, core=core,
+                               replica_id=replica_id)
+        engine.decode = (decode_fn if decode_fn is not None
+                         else make_sharded_decode(cfg, mesh, slots, max_seq))
+        super().__init__(engine)
+        self.mesh = mesh
+
+
+# ---------------------------------------------------------------------------
+# multi-process backend: the engine behind a socket
+# ---------------------------------------------------------------------------
+
+
+class ProcessReplica:
+    """Parent-side stub driving a worker-subprocess engine over the framed
+    JSON transport.  The stub tracks every in-system request so (a) routing
+    load is computed locally without an RPC per submit, and (b) a worker
+    crash loses no submitter state — ``lost_requests()`` rewinds and
+    returns the originals for requeue."""
+
+    kind = "proc"
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
+                 prefill_chunk: int | None = None, replica_id: int = 0,
+                 rpc_timeout_s: float = 120.0,
+                 init_timeout_s: float = 600.0):
+        self.cfg = cfg
+        self.slots = slots
+        self.replica_id = replica_id
+        self.failed = False
+        self._draining = False
+        self.transport_ms = 0.0
+        self._requests: dict[int, Request] = {}   # rid → submitter's object
+        self._queue_depth = 0
+        self._active = 0
+        self._step_pending = False
+        self._stepped_once = False
+        self._late: list[Request] = []    # completions drained out-of-band
+        self._init_timeout_s = init_timeout_s
+        self._lifetime_cache = {
+            "latencies_ms": [], "total_tokens": 0, "total_completed": 0,
+            "slot_utilization": 0.0, "queue_depth": 0}
+        self._rpc_timeout_s = rpc_timeout_s
+
+        parent_sock, child_sock = socket.socketpair()
+        child_sock.set_inheritable(True)
+        env = os.environ.copy()
+        src_root = str(Path(__file__).resolve().parents[2])
+        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src_root)
+        self._proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.serving.worker",
+             str(child_sock.fileno())],
+            pass_fds=(child_sock.fileno(),), env=env, close_fds=True)
+        child_sock.close()
+        self._conn = Connection(parent_sock, timeout=rpc_timeout_s)
+        # handshake: the worker builds the identical engine from the wire
+        # (imports jax + jits lazily — give it a generous first deadline)
+        self._rpc({"op": "init", "cfg": encode_config(cfg), "slots": slots,
+                   "max_seq": max_seq, "seed": seed,
+                   "prefill_chunk": prefill_chunk,
+                   "replica_id": replica_id}, timeout=init_timeout_s)
+
+    # ------------------------------------------------------------- plumbing
+
+    # ops whose worker-side cost is negligible: their round trip IS the
+    # transport.  step/init RPCs contain real compute (jit, decode work) —
+    # folding those in would report model time as fabric overhead.
+    _TRANSPORT_OPS = frozenset({"ping", "report", "lifetime", "resume"})
+
+    def _rpc(self, msg: dict, *, timeout: float | None = None) -> dict:
+        if self.failed:
+            raise TransportError(f"replica {self.replica_id} is lost")
+        if self._step_pending:
+            # an unread step reply from an abandoned round: drain it first —
+            # otherwise THIS op's recv would read the stale step reply and
+            # every later RPC on the connection would be off by one
+            self._late.extend(self.finish_step())
+            if self.failed:
+                raise TransportError(f"replica {self.replica_id} is lost")
+        self._conn.sock.settimeout(timeout if timeout is not None
+                                   else self._rpc_timeout_s)
+        t0 = time.perf_counter()
+        try:
+            self._conn.send(msg)
+            reply = self._conn.recv()
+        except TransportError:
+            self._mark_failed()
+            raise
+        if msg["op"] in self._TRANSPORT_OPS:
+            dt_ms = (time.perf_counter() - t0) * 1e3
+            self.transport_ms = (dt_ms if self.transport_ms == 0.0
+                                 else 0.8 * self.transport_ms + 0.2 * dt_ms)
+        if "error" in reply:
+            if reply.get("etype") == "ValueError":
+                raise ValueError(reply["error"])
+            raise RuntimeError(
+                f"worker {self.replica_id}: {reply['error']}\n"
+                f"{reply.get('trace', '')}")
+        return reply
+
+    def _mark_failed(self):
+        self.failed = True
+        self._conn.close()
+        if self._proc.poll() is None:
+            self._proc.kill()
+        try:
+            self._proc.wait(timeout=10)
+        except subprocess.TimeoutExpired:
+            # un-reaped zombie; do not let the reap race replace the
+            # TransportError the caller's failover path is matching on
+            pass
+
+    # ------------------------------------------------------------- protocol
+
+    def submit(self, request: Request, now: float = 0.0):
+        self._rpc({"op": "submit", "request": encode_request(request),
+                   "now": now})
+        if request.t_submit is None:      # mirror the worker-side stamp
+            request.t_submit = now
+        self._requests[request.rid] = request
+
+    def step(self, now: float | None = None) -> list[Request]:
+        self.begin_step(now)
+        return self.finish_step()
+
+    def begin_step(self, now: float | None = None):
+        """Fire the step message without waiting for the reply — the router
+        begins the round on every replica first, so N workers decode
+        concurrently and the fleet's round costs max(worker time), not the
+        sum."""
+        if self._step_pending:
+            # an unread reply from an abandoned round (the driver caught an
+            # error mid-collection): drain it — dropping it would desync the
+            # strict request/reply stream, and its completions are real
+            self._late.extend(self.finish_step())
+        if self.failed:
+            return
+        # jax.jit is lazy: the worker's prefill/decode COMPILE inside its
+        # first step, not inside init — the first round gets the init
+        # deadline, every later round the (much tighter) RPC one
+        self._conn.sock.settimeout(self._rpc_timeout_s if self._stepped_once
+                                   else self._init_timeout_s)
+        try:
+            self._conn.send({"op": "step", "now": now})
+            self._step_pending = True
+        except TransportError:
+            self._mark_failed()
+
+    def finish_step(self) -> list[Request]:
+        out, self._late = self._late, []
+        if not self._step_pending:
+            return out
+        self._step_pending = False
+        try:
+            reply = self._conn.recv()
+        except TransportError:
+            self._mark_failed()
+            return out
+        if "error" in reply:           # engine bug, not a transport failure
+            raise RuntimeError(
+                f"worker {self.replica_id}: {reply['error']}\n"
+                f"{reply.get('trace', '')}")
+        self._stepped_once = True
+        self._queue_depth = int(reply["queue_depth"])
+        self._active = int(reply["active"])
+        fresh = []
+        for d in reply["completed"]:
+            orig = self._requests.pop(int(d["rid"]), None)
+            if orig is not None:
+                fresh.append(apply_request(orig, d))
+            # an untracked rid cannot reach a submitter anyway (nothing was
+            # recorded parent-side) — completions are slim records, so there
+            # is no request to reconstruct; drop it
+        self._mirror_lifetime(fresh, reply)   # ONLY this reply's — drained
+        return out + fresh                    # _late ones were mirrored then
+
+    def _mirror_lifetime(self, completed: list[Request], reply: dict):
+        """Keep a parent-side running copy of the worker's lifetime stats —
+        every completion flows through this stub, so the mirror equals the
+        worker's own accumulators.  A crash must not erase served work from
+        fleet metrics; the authoritative 'lifetime' RPC simply replaces the
+        mirror when the worker is reachable."""
+        lc = self._lifetime_cache
+        for r in completed:
+            lc["total_completed"] += 1
+            lc["total_tokens"] += len(r.tokens_out)
+            if r.latency_s is not None:
+                lc["latencies_ms"].append(r.latency_s * 1e3)
+        if "slot_utilization" in reply:
+            lc["slot_utilization"] = float(reply["slot_utilization"])
+        lc["queue_depth"] = self._queue_depth
+
+    def report(self, tick: int) -> ReplicaReport:
+        if not self.failed:
+            try:
+                w = self._rpc({"op": "report"})["window"]
+                return _report_from_window(self.replica_id, tick, w,
+                                           transport_ms=self.transport_ms)
+            except TransportError:
+                pass
+        # the crash report: no samples, one error — the collector marks the
+        # replica a straggler off this instead of replaying its last window
+        return _report_from_window(
+            self.replica_id, tick, dict(_EMPTY_WINDOW,
+                                        queue_depth=len(self._requests)),
+            n_errors=1, transport_ms=self.transport_ms)
+
+    def lifetime(self) -> dict:
+        if not self.failed:
+            try:
+                self._lifetime_cache = self._rpc({"op": "lifetime"})["lifetime"]
+            except TransportError:
+                pass
+        return dict(self._lifetime_cache)
+
+    def evacuate(self) -> list[Request]:
+        self._draining = True
+        if self.failed:
+            return self.lost_requests()
+        try:
+            reply = self._rpc({"op": "evacuate"})
+        except TransportError:
+            return self.lost_requests()
+        out = []
+        for rid in reply["rids"]:
+            orig = self._requests.pop(int(rid), None)
+            if orig is None:
+                continue
+            orig.reset_generation()
+            out.append(orig)
+        return out
+
+    def resume(self):
+        self._draining = False
+        if not self.failed:
+            try:
+                self._rpc({"op": "resume"})
+            except TransportError:
+                pass
+
+    def lost_requests(self) -> list[Request]:
+        out = []
+        for req in self._requests.values():
+            req.reset_generation()
+            out.append(req)
+        self._requests.clear()
+        return out
+
+    def close(self):
+        if not self.failed:
+            try:
+                self._conn.sock.settimeout(5.0)
+                self._conn.send({"op": "shutdown"})
+                self._conn.recv()
+            except (TransportError, OSError):
+                pass
+        self._conn.close()
+        if self._proc.poll() is None:
+            self._proc.terminate()
+            try:
+                self._proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self._proc.kill()
+                self._proc.wait(timeout=10)
+
+    def __del__(self):
+        try:
+            if self._proc.poll() is None:
+                self._proc.kill()
+        except Exception:
+            pass
+
+    # ---------------------------------------------------------- properties
+
+    @property
+    def load(self) -> float:
+        """In-system work over slot capacity.  len(_requests) is exactly the
+        engine's (active + queued) at every quiescent point — submissions
+        and completions both pass through this stub synchronously — so
+        routing behaves bit-identically to the in-process backend."""
+        return len(self._requests) / max(self.slots, 1)
+
+    @property
+    def idle(self) -> bool:
+        return not self._requests
+
+    @property
+    def queue_depth(self) -> int:
+        return max(len(self._requests) - self._active, 0)
+
+    @property
+    def pending(self) -> int:
+        return len(self._requests)
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    @draining.setter
+    def draining(self, value: bool):
+        self._draining = bool(value)

@@ -1,54 +1,137 @@
-"""ReplicaRouter: N engines behind least-loaded routing, scalable mid-run.
+"""ReplicaRouter: N replicas behind least-loaded routing, scalable mid-run.
 
-The router is the surface the control plane drives: `scale_to(n)` is the
-actuator for DynamicScaler / PredictiveAllocator decisions, and `reports()`
-emits the per-replica ReplicaReport stream that core/monitoring's
-MetricsCollector consumes (p50/p95 latency, throughput, slot utilization,
-queue depth).
+The router is written purely against the Replica protocol
+(serving/replica.py) — it never touches an engine, a scheduler, or a slot
+array.  Whether a replica is an in-process object, one engine sharded over a
+device mesh, or a worker subprocess on the far side of a socket is a
+factory decision (``from_topology``); the routing, scaling, drain/park, and
+straggler-eviction logic below is transport-agnostic.
+
+The router is the surface the control plane drives: ``scale_to(n)`` is the
+actuator for DynamicScaler / PredictiveAllocator decisions, and
+``reports()`` emits the per-replica ReplicaReport stream that
+core/monitoring's MetricsCollector consumes (p50/p95 latency, throughput,
+slot utilization, queue depth, transport latency).
 
 Scaling semantics:
-* up   — revive a draining replica if one exists (warm), else unpark a
-         previously retired engine, else build a new one via the factory
-         (engines share one EngineCore, so this is cheap: no re-init/re-jit).
-* down — mark the newest replicas "draining": they admit nothing new, their
-         queued (not yet admitted) requests are immediately re-routed to the
-         survivors, and the replica is retired to the warm pool once its
-         in-flight slots finish.  No request is ever lost or duplicated.
+* up   — unpark a previously retired replica (warm: its process / compile /
+         weights are live), else build a new one via the factory.
+* down — victims are EVACUATED: queued requests AND in-flight ones
+         (preempted, rewound) are requeued through the survivors'
+         schedulers, and the victim parks immediately.  No request is ever
+         stranded on a parked replica, lost, or duplicated; a preempted
+         request restarts generation on a survivor (its RNG reseeds per
+         (seed, rid), so the replayed stream is identical to a fresh run).
+
+Failure semantics: a replica whose transport dies mid-step is reaped on the
+next ``step`` — its lost requests are rewound and requeued, a replacement
+is built to restore the actuated replica count, and its final ``n_errors``
+report has already marked it a straggler in the collector.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.monitoring.collector import ReplicaReport
-from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.engine import EngineCore
+from repro.serving.replica import (
+    InProcessReplica, Replica, ServingEngine, empty_report,
+)
 from repro.serving.scheduler import Request
+from repro.serving.transport import TransportError
+
+TOPOLOGIES = ("inproc", "sharded", "proc")
+
+
+def _coerce(obj) -> Replica:
+    """Legacy factories return bare ServingEngines — wrap them."""
+    return InProcessReplica(obj) if isinstance(obj, ServingEngine) else obj
 
 
 class ReplicaRouter:
-    def __init__(self, engine_factory, *, n_replicas: int = 1,
+    def __init__(self, replica_factory, *, n_replicas: int = 1,
                  max_replicas: int = 8):
-        """engine_factory(replica_id) -> ServingEngine."""
-        self._factory = engine_factory
+        """replica_factory(replica_id) -> Replica (or a bare ServingEngine,
+        which is wrapped in-process for backward compatibility)."""
+        self._factory = replica_factory
         self.max_replicas = max_replicas
-        self.engines: list[ServingEngine] = []
-        self._parked: list[ServingEngine] = []
+        self.replicas: list[Replica] = []
+        self._parked: list[Replica] = []
+        self._retired: list[Replica] = []     # failed, kept for accounting
+        # retirement reports still owed, (phase, replica): phase 0 → the
+        # crash report goes out next reports() round, phase 1 → the clean
+        # tombstone does.  One structure, drained in one place.
+        self._dying: list[tuple[int, Replica]] = []
+        self._undelivered: list[Request] = []  # survived a mid-step raise
         self._next_replica_id = 0
+        self._target = max(n_replicas, 1)
         self._t0: float | None = None
         self._last_now = 0.0
-        for _ in range(max(n_replicas, 1)):
+        for _ in range(self._target):
             self._add_replica()
 
     @classmethod
     def shared_core(cls, cfg, *, slots: int, max_seq: int, seed: int = 0,
                     prefill_chunk: int | None = None, n_replicas: int = 1,
                     max_replicas: int = 8) -> "ReplicaRouter":
-        """Router whose replicas share one EngineCore (params + compiles)."""
-        core = EngineCore(cfg, max_seq, seed=seed)
+        """In-process router whose replicas share one EngineCore (params +
+        compiles)."""
+        return cls.from_topology(cfg, "inproc", slots=slots, max_seq=max_seq,
+                                 seed=seed, prefill_chunk=prefill_chunk,
+                                 n_replicas=n_replicas,
+                                 max_replicas=max_replicas)
 
-        def factory(replica_id: int) -> ServingEngine:
-            return ServingEngine(cfg, slots=slots, max_seq=max_seq,
-                                 prefill_chunk=prefill_chunk, core=core,
-                                 replica_id=replica_id)
+    @classmethod
+    def from_topology(cls, cfg, topology: str, *, slots: int, max_seq: int,
+                      seed: int = 0, prefill_chunk: int | None = None,
+                      n_replicas: int = 1, max_replicas: int = 8,
+                      mesh=None) -> "ReplicaRouter":
+        """Build the fleet for one of the three replica topologies.
+
+        inproc  — replicas share one EngineCore (no re-init / re-jit).
+        sharded — each replica spans the local device mesh (slot axis
+                  sharded); replicas share the core AND one sharded decode
+                  compile.
+        proc    — each replica is a worker subprocess; workers re-derive
+                  identical params from the shared seed, so token streams
+                  match the in-process topology bit-for-bit.
+        """
+        if topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {topology!r} "
+                             f"(expected one of {TOPOLOGIES})")
+        if topology == "proc":
+            from repro.serving.replica import ProcessReplica
+
+            def factory(replica_id: int):
+                return ProcessReplica(cfg, slots=slots, max_seq=max_seq,
+                                      seed=seed, prefill_chunk=prefill_chunk,
+                                      replica_id=replica_id)
+        elif topology == "sharded":
+            from repro.serving.replica import (
+                ShardedReplica, make_sharded_decode,
+            )
+            if mesh is None:
+                import jax
+
+                from repro.launch.mesh import make_mesh
+                mesh = make_mesh((len(jax.devices()),), ("data",))
+            core = EngineCore(cfg, max_seq, seed=seed)
+            decode_fn = make_sharded_decode(cfg, mesh, slots, max_seq)
+
+            def factory(replica_id: int):
+                return ShardedReplica(cfg, slots=slots, max_seq=max_seq,
+                                      mesh=mesh, seed=seed,
+                                      prefill_chunk=prefill_chunk, core=core,
+                                      replica_id=replica_id,
+                                      decode_fn=decode_fn)
+        else:
+            core = EngineCore(cfg, max_seq, seed=seed)
+
+            def factory(replica_id: int):
+                return InProcessReplica.build(
+                    cfg, slots=slots, max_seq=max_seq,
+                    prefill_chunk=prefill_chunk, core=core,
+                    replica_id=replica_id)
 
         return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas)
 
@@ -56,102 +139,185 @@ class ReplicaRouter:
 
     def _add_replica(self):
         if self._parked:
-            eng = self._parked.pop()
-            eng.draining = False
+            rep = self._parked.pop()
+            rep.resume()
         else:
-            eng = self._factory(self._next_replica_id)
+            rep = _coerce(self._factory(self._next_replica_id))
             self._next_replica_id += 1
-        self.engines.append(eng)
+        self.replicas.append(rep)
 
     @property
-    def serving_engines(self) -> list[ServingEngine]:
-        return [e for e in self.engines if not e.draining]
+    def serving_replicas(self) -> list[Replica]:
+        return [r for r in self.replicas if not r.draining and not r.failed]
 
     @property
     def replica_count(self) -> int:
-        return len(self.serving_engines)
+        return len(self.serving_replicas)
 
     def scale_to(self, n: int, now: float = 0.0) -> int:
         """Actuate a control-plane decision; returns the realized count."""
         n = max(1, min(int(n), self.max_replicas))
-        for eng in self.engines:                 # revive drains first (warm)
-            if self.replica_count >= n:
-                break
-            if eng.draining:
-                eng.draining = False
+        self._target = n
         while self.replica_count < n:
             self._add_replica()
         extra = self.replica_count - n
         if extra > 0:
-            victims = sorted(self.serving_engines,
-                             key=lambda e: -e.replica_id)[:extra]
-            for eng in victims:
-                eng.draining = True
-            for eng in victims:                  # hand backlog to survivors
-                for req in eng.scheduler.drain():
-                    self.submit(req, now=now)
+            victims = sorted(self.serving_replicas,
+                             key=lambda r: -r.replica_id)[:extra]
+            displaced: list[Request] = []
+            for rep in victims:
+                # queued AND in-flight leave with the replica, which parks
+                # immediately — nothing is stranded behind a parked replica
+                displaced.extend(rep.evacuate())
+                self.replicas.remove(rep)
+                self._parked.append(rep)
+            for req in displaced:          # requeue through the survivors
+                self.submit(req, now=now)
         return self.replica_count
+
+    def evict(self, replica_id: int, now: float = 0.0, *,
+              replace: bool = True) -> bool:
+        """Remove one replica (straggler eviction / failure reaping): its
+        requests are requeued through the survivors and — when ``replace``
+        — a fresh replica restores the actuated count."""
+        rep = next((r for r in self.replicas if r.replica_id == replica_id),
+                   None)
+        if rep is None:
+            return False
+        displaced = rep.evacuate()
+        displaced.extend(rep.lost_requests())
+        self.replicas.remove(rep)
+        # replacement first, THEN park the victim — otherwise _add_replica
+        # would unpark the very straggler being evicted
+        if replace and self.replica_count < self._target:
+            self._add_replica()
+        if rep.failed:
+            rep.close()
+            self._retired.append(rep)
+            self._dying.append((0, rep))   # crash report, then tombstone
+        else:
+            self._parked.append(rep)
+        for req in displaced:
+            self.submit(req, now=now)
+        return True
+
+    def evict_stragglers(self, straggler_ids, now: float = 0.0) -> list[int]:
+        """Control-plane hook: evict every flagged replica (the collector's
+        ``stragglers()`` feed), replacing each to hold the actuated count."""
+        evicted = []
+        for rid in list(straggler_ids):
+            if self.evict(rid, now=now):
+                evicted.append(rid)
+        return evicted
 
     # ------------------------------------------------------------- requests
 
     def submit(self, request: Request, now: float = 0.0):
+        """Least-loaded routing.  A replica whose transport died between
+        steps only reveals itself when an RPC touches it — the submit that
+        discovers the corpse reroutes to the next survivor instead of
+        crashing the driver (the dead replica is excluded the moment its
+        stub flips ``failed``, and the next step() reaps it properly)."""
         if request.t_submit is None:
             request.t_submit = now
         if self._t0 is None or request.t_submit < self._t0:
             self._t0 = request.t_submit
-        eng = min(self.serving_engines,
-                  key=lambda e: (e.load, e.replica_id))
-        eng.submit(request, now=now)
+        while True:
+            candidates = self.serving_replicas
+            if not candidates:
+                # every live replica is a corpse (single-replica fleet whose
+                # worker died between steps): reap them NOW — eviction
+                # builds the replacements step() would have built
+                failed = [r for r in self.replicas if r.failed]
+                if not failed:
+                    raise RuntimeError("no live replicas to route to")
+                for rep in failed:
+                    self.evict(rep.replica_id, now=now)
+                continue
+            rep = min(candidates, key=lambda r: (r.load, r.replica_id))
+            try:
+                rep.submit(request, now=now)
+                return
+            except TransportError:
+                continue               # rep is now failed → excluded above
 
     def step(self, now: float = 0.0) -> list[Request]:
-        """One tick across every replica (including draining ones, which
-        still finish their in-flight slots)."""
-        completed: list[Request] = []
-        for eng in list(self.engines):
-            completed.extend(eng.step(now))
-        for eng in [e for e in self.engines if e.draining and e.idle]:
-            if len(self.engines) > 1:
-                self.engines.remove(eng)
-                self._parked.append(eng)
+        """One tick across every live replica, split-phase: the round BEGINS
+        on every replica before any result is collected, so remote workers
+        decode concurrently (the round costs the slowest worker, not the
+        sum).  Replicas whose transport died are reaped afterwards: lost
+        requests rewound and requeued, replacements built to restore the
+        actuated count."""
+        live = list(self.replicas)
+        for rep in live:
+            rep.begin_step(now)
+        # completions already collected must survive a later replica's
+        # finish_step raising (their stubs have handed them over — they are
+        # not recoverable anywhere else): stash and redeliver next step
+        completed, self._undelivered = self._undelivered, []
+        try:
+            for rep in live:
+                completed.extend(rep.finish_step())
+        except Exception:
+            self._undelivered = completed
+            raise
+        for rep in [r for r in self.replicas if r.failed]:
+            self.evict(rep.replica_id, now=now)
         self._last_now = max(self._last_now, now)
         return completed
 
     @property
     def pending(self) -> int:
         """Requests somewhere in the system (queued or in a slot)."""
-        return sum(e.scheduler.depth + int(e.active.sum())
-                   for e in self.engines)
+        return sum(r.pending for r in self.replicas)
 
     # ------------------------------------------------------------- metrics
 
     def reports(self, tick: int) -> list[ReplicaReport]:
         """Per-replica reports for MetricsCollector.submit (drains each
-        engine's metric window).  Parked replicas keep reporting (empty
+        replica's metric window).  Parked replicas keep reporting (empty
         windows): the collector re-counts each replica's LAST report every
         aggregate, so going silent would replay a parked replica's final
-        spike window forever — an explicit empty report zeroes it out."""
-        out = []
-        for eng in self.engines + self._parked:
-            w = eng.stats.drain_window()
-            out.append(ReplicaReport(
-                replica_id=eng.replica_id, tick=tick,
-                latency_ms_samples=w["latency_ms_samples"],
-                n_requests=w["n_requests"], n_errors=0,
-                flop_util=w["slot_util"],
-                hbm_util=w["slot_util"],          # CPU engine: slot occupancy
-                ici_util=0.0,                     # stands in for chip signals
-                mem_frac=w["slot_util"],
-                queue_depth=w["queue_depth"]))
+        spike window forever — an explicit empty report zeroes it out.
+
+        A retired (failed, closed) replica sends exactly TWO more reports:
+        first its crash report (n_errors > 0 — this is what puts the crash
+        on the collector's straggler list and in the fleet error rate; the
+        reap happened inside step(), so without this the control plane
+        would never see the failure at all), then one clean tombstone — a
+        final n_errors report left in place would replay forever, keeping a
+        long-dead replica flagged.
+
+        A PARKED replica whose worker died (discovered by this very report
+        poll) joins the same retirement flow here — nothing else ever
+        touches parked replicas, so this is the only place the corpse can
+        be noticed."""
+        out = [rep.report(tick) for rep in self.replicas]
+        dying_now, self._dying = self._dying, []
+        for rep in list(self._parked):
+            out.append(rep.report(tick))    # the poll that detects death
+            if rep.failed:                  # that report WAS its crash one:
+                self._parked.remove(rep)    # tombstone next round, never
+                rep.close()                 # the same one
+                self._retired.append(rep)
+                self._dying.append((1, rep))
+        for phase, rep in dying_now:        # one owed report per round
+            if phase == 0:                  # crash report (parent-side stub)
+                out.append(rep.report(tick))
+                self._dying.append((1, rep))
+            else:                           # clean-up for the crash report
+                out.append(empty_report(rep.replica_id, tick))
         return out
 
     def metrics(self) -> dict:
-        """Fleet-level aggregates over engine lifetimes (parked replicas
-        keep their history — work they served must not vanish on drain)."""
-        ever = self.engines + self._parked
-        lats = [l for e in ever for l in e.stats.latencies_ms]
+        """Fleet-level aggregates over replica lifetimes (parked and failed
+        replicas keep their history — work they served must not vanish)."""
+        ever = [r.lifetime() for r in
+                self.replicas + self._parked + self._retired]
+        lats = [l for lt in ever for l in lt["latencies_ms"]]
         lat = np.asarray(lats) if lats else np.zeros(1)
-        tokens = sum(e.stats.total_tokens for e in ever)
-        completed = sum(e.stats.total_completed for e in ever)
+        tokens = sum(lt["total_tokens"] for lt in ever)
+        completed = sum(lt["total_completed"] for lt in ever)
         wall = max(self._last_now - (self._t0 or 0.0), 1e-9)
         return {
             "latency_p50_ms": float(np.percentile(lat, 50)),
@@ -160,7 +326,17 @@ class ReplicaRouter:
             "completed": completed,
             "completed_tokens": tokens,
             "slot_utilization": float(np.mean(
-                [e.stats.slot_utilization for e in ever])),
-            "queue_depth": sum(e.scheduler.depth for e in self.engines),
+                [lt["slot_utilization"] for lt in ever])),
+            "queue_depth": sum(r.queue_depth for r in self.replicas),
+            "transport_ms": float(np.mean(
+                [r.transport_ms for r in self.replicas])) if self.replicas
+            else 0.0,
             "replicas": self.replica_count,
         }
+
+    def close(self):
+        """Release every replica (terminates proc-topology workers)."""
+        for rep in self.replicas + self._parked:
+            rep.close()
+        self.replicas.clear()
+        self._parked.clear()

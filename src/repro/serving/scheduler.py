@@ -24,6 +24,8 @@ class Request:
     prompt: np.ndarray
     gen_len: int
     sampling: SamplingParams = SamplingParams()
+    # enc-dec families: precomputed encoder frames, (S_enc, d_model) float.
+    frames: Optional[np.ndarray] = None
     t_submit: Optional[float] = None
     t_admit: Optional[float] = None
     t_first_token: Optional[float] = None
@@ -41,6 +43,19 @@ class Request:
         tok = sample_token(logits, self.sampling, self._rng)
         self.tokens_out.append(tok)
         return tok
+
+    def reset_generation(self):
+        """Rewind to the not-yet-admitted state (preemption / replica loss).
+        t_submit survives — the requeue penalty is real user-visible latency
+        and must stay in the accounting; everything generated on the lost
+        replica is discarded so the replay is bit-identical to a fresh run
+        (the sampling RNG reseeds from (seed, rid) on first use)."""
+        self.tokens_out = []
+        self._rng = None
+        self.t_admit = None
+        self.t_first_token = None
+        self.t_done = None
+        self.replica_id = None
 
     @property
     def latency_s(self) -> Optional[float]:

@@ -29,9 +29,16 @@ def write_slot(pool, one, slot: int):
     """Merge one batch-1 cache leaf into the pool leaf at ``slot``.
 
     Identical shapes (a 1-slot pool) are a whole-pool overwrite — the seed's
-    axis scan found no differing axis and silently dropped the write."""
+    axis scan found no differing axis and silently dropped the write.
+
+    A single-request leaf SHORTER than the pool on a non-batch axis is
+    zero-padded up to the pool size before the write: enc-dec prefill emits
+    encoder-length cross K/V, (L, 1, S_enc, KV, hd), while the pool spec is
+    max_seq-sized — the pad rows sit past ``cross_len`` and are masked at
+    decode, so padding with zeros is exact."""
     if pool.ndim == 0:          # defensive: scalar leaf — keep the max
         return jnp.maximum(pool, one)
+    one = _pad_to_pool(pool, one)
     if pool.shape == one.shape:
         return one.astype(pool.dtype)
     for ax in range(pool.ndim):
@@ -40,6 +47,25 @@ def write_slot(pool, one, slot: int):
             idx[ax] = slice(slot, slot + 1)
             return pool.at[tuple(idx)].set(one.astype(pool.dtype))
     return pool
+
+
+def _pad_to_pool(pool, one):
+    """Zero-pad ``one`` up to the pool's size on every non-batch axis (the
+    batch axis is the one where one==1 and the pool differs)."""
+    if pool.ndim != one.ndim:
+        return one
+    batch_ax = next((ax for ax in range(pool.ndim)
+                     if one.shape[ax] == 1 and pool.shape[ax] != 1), None)
+    pad = []
+    for ax in range(pool.ndim):
+        short = pool.shape[ax] - one.shape[ax]
+        if ax == batch_ax or short <= 0:
+            pad.append((0, 0))
+        else:
+            pad.append((0, short))
+    if any(p != (0, 0) for p in pad):
+        one = jnp.pad(one, pad)
+    return one
 
 
 class SlotPool:

@@ -1,0 +1,110 @@
+"""Replica worker: a ServingEngine driven over the socket transport.
+
+``python -m repro.serving.worker <fd>`` serves one engine on an inherited
+socketpair fd (ProcessReplica spawns it with ``pass_fds``).  The loop is a
+strict request/reply RPC: every message is answered exactly once, in order,
+so the parent can measure transport latency per call and a missing reply
+always means the worker is gone (never "still thinking about an older
+message").
+
+Ops mirror the Replica protocol 1:1 (see serving/replica.py):
+
+  init      — build the engine from an encoded ModelConfig (the handshake)
+  submit    — enqueue one request (validation errors bounce back typed)
+  step      — one scheduling round; replies completed requests + queue state
+  report    — drain the metric window for one ReplicaReport
+  lifetime  — lifetime accumulators for fleet-level metrics
+  evacuate  — preempt + return every queued/in-flight request (downscale)
+  resume    — clear the draining flag (warm revive)
+  shutdown  — clean exit
+
+Engine exceptions are caught per-message and replied as
+``{"error": ..., "etype": ...}`` — a bad request must not kill the worker
+that other requests are mid-generation on.
+"""
+from __future__ import annotations
+
+import socket
+import sys
+import traceback
+
+from repro.serving.transport import (
+    Connection,
+    TransportError,
+    decode_config,
+    decode_request,
+    encode_completion,
+)
+
+
+def handle(engine, msg: dict):
+    """One op → reply dict (engine may be None before init)."""
+    op = msg["op"]
+    if op == "ping":
+        return {"ok": True}
+    if op == "init":
+        from repro.serving.engine import ServingEngine
+        cfg = decode_config(msg["cfg"])
+        engine = ServingEngine(cfg, slots=int(msg["slots"]),
+                               max_seq=int(msg["max_seq"]),
+                               seed=int(msg.get("seed", 0)),
+                               prefill_chunk=msg.get("prefill_chunk"),
+                               replica_id=int(msg.get("replica_id", 0)))
+        return {"ok": True, "engine": engine}
+    if engine is None:
+        raise RuntimeError(f"op {op!r} before init")
+    if op == "submit":
+        engine.submit(decode_request(msg["request"]), now=msg.get("now", 0.0))
+        return {"ok": True}
+    if op == "step":
+        completed = engine.step(now=msg.get("now"))
+        return {"completed": [encode_completion(r) for r in completed],
+                "queue_depth": engine.scheduler.depth,
+                "active": int(engine.active.sum()),
+                # one float so the parent's lifetime mirror (crash-proof
+                # fleet accounting) tracks occupancy too, not just counts
+                "slot_utilization": float(engine.stats.slot_utilization)}
+    if op == "report":
+        return {"window": engine.stats.drain_window()}
+    if op == "lifetime":
+        return {"lifetime": engine.lifetime()}
+    if op == "evacuate":
+        # rids only: the parent rewinds its own originals — the rewound
+        # request state is derivable, so shipping it back would be waste
+        engine.draining = True
+        return {"rids": [r.rid for r in engine.evacuate()]}
+    if op == "resume":
+        engine.draining = False
+        return {"ok": True}
+    raise RuntimeError(f"unknown op {op!r}")
+
+
+def serve(conn: Connection) -> int:
+    engine = None
+    while True:
+        try:
+            msg = conn.recv()
+        except TransportError:
+            return 0                      # parent went away: clean exit
+        if msg.get("op") == "shutdown":
+            conn.send({"ok": True})
+            return 0
+        try:
+            reply = handle(engine, msg)
+            engine = reply.pop("engine", engine)
+        except Exception as e:            # typed bounce, worker stays up
+            reply = {"error": f"{e}",
+                     "etype": type(e).__name__,
+                     "trace": traceback.format_exc(limit=8)}
+        conn.send(reply)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    fd = int(argv[0])
+    sock = socket.socket(fileno=fd)
+    return serve(Connection(sock))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,584 @@
+"""The transport-decoupled replica fabric, end to end.
+
+* Protocol conformance: the router drives InProcess / Sharded / Process
+  replicas through the same surface; legacy bare-engine factories still work.
+* Cross-topology equivalence (the PR's acceptance bar): run_closed_loop on
+  the SAME seed produces identical token streams and identical scaling
+  decisions on the inproc, sharded (1-device mesh), and proc topologies;
+  ShardedReplica matches InProcessReplica token streams AND decode logits on
+  a ≥2-device mesh (subprocess re-exec with
+  --xla_force_host_platform_device_count).
+* Failure semantics: a ProcessReplica whose worker dies mid-run is reaped by
+  the router — lost requests rewound + requeued, a replacement restores the
+  actuated count, every request still completes exactly once.
+* Straggler eviction: the collector's straggler feed actuates
+  router.evict_stragglers.
+"""
+import functools
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    InProcessReplica, ReplicaRouter, Request, ServingEngine, ShardedReplica,
+)
+from repro.serving.engine import EngineCore
+
+from conftest import TINY_CFGS
+
+MAX_SEQ = 24
+SLOTS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def shared_core() -> EngineCore:
+    return EngineCore(TINY_CFGS["dense"], MAX_SEQ, seed=0)
+
+
+def _requests(n, prompt_len=6, gen_len=4, seed=0):
+    cfg = TINY_CFGS["dense"]
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(
+                3, cfg.vocab, size=prompt_len).astype(np.int32),
+                gen_len=gen_len) for i in range(n)]
+
+
+def _run_replica(rep, reqs, *, stagger_after=2):
+    done, now = [], 0.0
+    for r in reqs[:2]:
+        rep.submit(r, now=0.0)
+    for _ in range(stagger_after):
+        now += 1.0
+        done.extend(rep.step(now))
+    for r in reqs[2:]:
+        rep.submit(r, now=now)
+    while len(done) < len(reqs) and now < 200:
+        now += 1.0
+        done.extend(rep.step(now))
+    return {r.rid: tuple(r.tokens_out) for r in done}
+
+
+# ------------------------------------------------------------- protocol
+
+
+def test_inprocess_replica_protocol_surface():
+    rep = InProcessReplica.build(TINY_CFGS["dense"], slots=SLOTS,
+                                 max_seq=MAX_SEQ, core=shared_core(),
+                                 replica_id=3)
+    reqs = _requests(3)
+    assert rep.idle and rep.load == 0.0 and rep.transport_ms == 0.0
+    for r in reqs:
+        rep.submit(r, now=0.0)
+    assert rep.pending == 3 and rep.load == 1.5
+    done = []
+    now = 0.0
+    while len(done) < 3 and now < 100:
+        now += 1.0
+        done.extend(rep.step(now))
+    assert rep.idle and not rep.failed
+    report = rep.report(tick=0)
+    assert report.replica_id == 3 and report.n_requests == 3
+    assert report.transport_ms == 0.0
+    lt = rep.lifetime()
+    assert lt["total_completed"] == 3
+    assert lt["total_tokens"] == sum(len(r.tokens_out) for r in done)
+    assert rep.lost_requests() == []
+
+
+def test_evacuate_returns_queued_and_preempted_rewound():
+    rep = InProcessReplica.build(TINY_CFGS["dense"], slots=SLOTS,
+                                 max_seq=MAX_SEQ, core=shared_core())
+    reqs = _requests(4, gen_len=6)
+    for r in reqs:
+        rep.submit(r, now=0.0)
+    rep.step(1.0)                          # 2 admitted, 2 queued
+    rep.step(2.0)                          # a token or two generated
+    out = rep.evacuate()
+    assert sorted(r.rid for r in out) == [0, 1, 2, 3]
+    assert rep.idle and rep.draining
+    for r in out:                          # rewound: ready for requeue
+        assert r.tokens_out == [] and r.t_admit is None
+        assert r.t_submit == 0.0           # submit time survives (latency!)
+    rep.resume()
+    assert not rep.draining
+
+
+def test_router_accepts_legacy_bare_engine_factory():
+    def factory(replica_id):
+        return ServingEngine(TINY_CFGS["dense"], slots=SLOTS,
+                             max_seq=MAX_SEQ, core=shared_core(),
+                             replica_id=replica_id)
+
+    router = ReplicaRouter(factory, n_replicas=2)
+    assert all(isinstance(r, InProcessReplica) for r in router.replicas)
+    reqs = _requests(3)
+    for r in reqs:
+        router.submit(r, now=0.0)
+    done, now = [], 0.0
+    while len(done) < 3 and now < 100:
+        now += 1.0
+        done.extend(router.step(now))
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+
+
+def test_from_topology_rejects_unknown():
+    with pytest.raises(ValueError):
+        ReplicaRouter.from_topology(TINY_CFGS["dense"], "carrier-pigeon",
+                                    slots=SLOTS, max_seq=MAX_SEQ)
+
+
+def test_sharded_replica_requires_divisible_slots():
+    with pytest.raises(ValueError):
+        ShardedReplica(TINY_CFGS["dense"], slots=3, max_seq=MAX_SEQ,
+                       mesh=_mesh_1d(2))
+
+
+def _mesh_1d(n):
+    import jax
+
+    from repro.launch.mesh import make_mesh
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices")
+    return make_mesh((n,), ("data",))
+
+
+def test_sharded_replica_matches_inproc_on_single_device_mesh():
+    """The shard_map decode path itself (specs, donation, per-leaf slot-axis
+    mapping) on a 1-device mesh — cheap coverage that runs everywhere; the
+    multi-device equivalence runs in the subprocess test below."""
+    reqs = _requests(3, seed=5)
+    want = _run_replica(InProcessReplica.build(
+        TINY_CFGS["dense"], slots=SLOTS, max_seq=MAX_SEQ, core=shared_core()),
+        _requests(3, seed=5))
+    got = _run_replica(ShardedReplica(
+        TINY_CFGS["dense"], slots=SLOTS, max_seq=MAX_SEQ, mesh=_mesh_1d(1),
+        core=shared_core()), reqs)
+    assert got == want
+
+
+def test_evict_stragglers_replaces_and_requeues():
+    router = ReplicaRouter.shared_core(TINY_CFGS["dense"], slots=SLOTS,
+                                       max_seq=MAX_SEQ, n_replicas=3,
+                                       max_replicas=4)
+    reqs = _requests(6, gen_len=5)
+    for r in reqs:
+        router.submit(r, now=0.0)
+    router.step(1.0)
+    victim = router.replicas[1].replica_id
+    evicted = router.evict_stragglers([victim, 999], now=1.0)
+    assert evicted == [victim]             # unknown ids are ignored
+    assert router.replica_count == 3       # replacement restored the count
+    assert victim not in [r.replica_id for r in router.replicas]
+    done, now = [], 1.0
+    while len(done) < 6 and now < 100:
+        now += 1.0
+        done.extend(router.step(now))
+    assert sorted(r.rid for r in done) == list(range(6))
+
+
+def test_reaped_replica_reports_crash_then_one_clean_tombstone():
+    """A retired (failed) replica sends exactly TWO more reports: its crash
+    report (the reap happened inside step(), so this is the only way the
+    collector ever sees the failure), then ONE clean tombstone — the
+    collector replays each replica's last report every aggregate, so
+    leaving the n_errors report in place would keep a long-dead replica on
+    the straggler list forever."""
+    router = ReplicaRouter.shared_core(TINY_CFGS["dense"], slots=SLOTS,
+                                       max_seq=MAX_SEQ, n_replicas=2,
+                                       max_replicas=3)
+    dead = router.replicas[1]
+    dead.failed = True                     # simulate a lost transport
+    router.step(1.0)                       # reaped + replaced
+    assert dead.replica_id not in [r.replica_id for r in router.replicas]
+    assert router.replica_count == 2
+    obit = [r for r in router.reports(0) if r.replica_id == dead.replica_id]
+    assert len(obit) == 1                  # round 1: the final word
+    tomb = [r for r in router.reports(1) if r.replica_id == dead.replica_id]
+    assert len(tomb) == 1 and tomb[0].n_errors == 0
+    assert not tomb[0].latency_ms_samples  # round 2: clean tombstone
+    # later report rounds no longer mention the dead replica
+    assert all(r.replica_id != dead.replica_id for r in router.reports(2))
+
+
+def test_step_preserves_collected_completions_when_a_replica_raises():
+    """Completions collected before a later replica's finish_step raises
+    are not recoverable anywhere else (their stubs handed them over) — the
+    router must stash and redeliver them on the next step, not drop them."""
+    router = ReplicaRouter.shared_core(TINY_CFGS["dense"], slots=SLOTS,
+                                       max_seq=MAX_SEQ, n_replicas=2,
+                                       max_replicas=2)
+    r0, r1 = _requests(2, prompt_len=5, gen_len=1)
+    router.submit(r0, now=0.0)             # → replica 0
+    router.submit(r1, now=0.0)             # → replica 1
+    bad = router.replicas[1]
+    real_finish = bad.finish_step
+    bad.finish_step = lambda: (_ for _ in ()).throw(
+        RuntimeError("engine bug bounce"))
+    with pytest.raises(RuntimeError):
+        router.step(1.0)                   # replica 0 completed r0 already
+    bad.finish_step = real_finish
+    done = []
+    now = 1.0
+    while len(done) < 2 and now < 50:
+        now += 1.0
+        done.extend(router.step(now))
+    assert sorted(r.rid for r in done) == [0, 1]   # r0 redelivered
+
+
+@pytest.mark.slow
+def test_rpc_drains_pending_step_reply_before_other_ops():
+    """A non-step RPC issued while a step reply is still unread (abandoned
+    round) must drain the stale reply first — otherwise every later RPC on
+    the connection reads the previous op's reply."""
+    from repro.serving.replica import ProcessReplica
+
+    cfg = TINY_CFGS["dense"]
+    rep = ProcessReplica(cfg, slots=SLOTS, max_seq=16, prefill_chunk=4,
+                         replica_id=4)
+    try:
+        reqs = _requests(2, prompt_len=5, gen_len=2)
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        rep.begin_step(1.0)                # round in flight, reply unread
+        report = rep.report(tick=0)        # must drain, then see a window
+        assert report.replica_id == 4 and report.n_errors == 0
+        done = rep.finish_step()           # drained completions, if any
+        now = 1.0
+        while len(done) < 2 and now < 50:
+            now += 1.0
+            done.extend(rep.step(now))
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(len(r.tokens_out) == 2 for r in done)
+        assert rep.lifetime()["total_completed"] == 2
+    finally:
+        rep.close()
+
+
+def test_dead_parked_replica_is_retired_via_reports():
+    """Nothing steps a parked replica — the report poll is the only place
+    its death can be noticed.  reports() must retire the corpse through the
+    same crash-report-then-tombstone flow as a live-list failure, and a
+    later scale-up must build a fresh replica, not revive the corpse."""
+    router = ReplicaRouter.shared_core(TINY_CFGS["dense"], slots=SLOTS,
+                                       max_seq=MAX_SEQ, n_replicas=2,
+                                       max_replicas=2)
+    router.scale_to(1)
+    parked = router._parked[0]
+    parked.failed = True                   # worker died while parked
+    polled = [r for r in router.reports(0)
+              if r.replica_id == parked.replica_id]
+    assert len(polled) == 1                # the poll that detected death
+    assert not router._parked
+    tomb = [r for r in router.reports(1)
+            if r.replica_id == parked.replica_id]
+    assert len(tomb) == 1 and tomb[0].n_errors == 0
+    assert all(r.replica_id != parked.replica_id
+               for r in router.reports(2))
+    router.scale_to(2)                     # revive demand → NEW replica
+    assert parked.replica_id not in [r.replica_id for r in router.replicas]
+    assert router.replica_count == 2
+
+
+def test_parked_straggler_ewma_cleared_by_idle_reports():
+    """A parked straggler keeps reporting empty windows — that must END its
+    latency evidence: otherwise its stale high EWMA keeps it flagged
+    forever, skews the fleet median, and re-condemns it on revival."""
+    from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+
+    def report(rid, tick, lat, n):
+        return ReplicaReport(replica_id=rid, tick=tick,
+                             latency_ms_samples=lat, n_requests=n,
+                             n_errors=0, flop_util=0.5, hbm_util=0.5,
+                             ici_util=0.0, mem_frac=0.5, queue_depth=0)
+
+    c = MetricsCollector(straggler_factor=1.5)
+    for rid in range(4):
+        lat = [400.0] * 8 if rid == 3 else [100.0] * 8
+        c.submit(report(rid, 0, lat, 8))
+    assert c.stragglers() == [3]
+    c.submit(report(3, 1, [], 0))          # evicted → parked → idle window
+    assert c.stragglers() == []
+    c.submit(report(3, 2, [105.0] * 8, 8))  # revived, healthy this time
+    assert c.stragglers() == []
+
+
+# ------------------------------------------- transport as a control feature
+
+
+def test_scaler_budgets_for_transport_latency():
+    """DynamicScaler receives per-replica transport latency via the fleet
+    record: above the deadband it comes off the SLO budget (→ more
+    replicas); below it (loopback noise) it changes nothing, so inproc and
+    local-socket fleets plan identically."""
+    from repro.core.allocation.forecaster import WorkloadForecaster
+    from repro.core.scaling.scaler import DynamicScaler, ScalingConstraints
+
+    def perf_model(replicas, rps):
+        lat = 400.0 / max(replicas, 1) * max(rps, 1.0)
+        return lat, min(rps / (4.0 * replicas), 1.0)
+
+    constraints = ScalingConstraints(min_replicas=1, max_replicas=8,
+                                     slo_ms=450.0, cooldown_ticks=0)
+
+    def decide(transport_ms):
+        fc = WorkloadForecaster()
+        for _ in range(8):
+            fc.update(1.0)
+        scaler = DynamicScaler(fc, perf_model)
+        metrics = {"rps": 1.0, "rps_window": [1.0],
+                   "transport_ms": transport_ms}
+        return scaler.compute_scaling_decision(
+            metrics, constraints, current_replicas=1).target_replicas
+
+    # perf model: 1 replica → 400ms.  Plain SLO 450ms: 1 replica is fine.
+    assert decide(0.0) == 1
+    # loopback noise (< 2% of SLO = 9ms): identical plan
+    assert decide(5.0) == decide(0.0)
+    # a genuinely remote fleet: 100ms off the budget → 400ms no longer fits
+    assert decide(100.0) == 2
+
+
+def test_selector_transport_gate():
+    from repro.core.orchestration.selector import (
+        DecisionTreeSelector, DeploymentContext,
+    )
+
+    tree = DecisionTreeSelector()
+    base = dict(model_params_b=7.0, traffic_rps=200.0, slo_ms=300.0,
+                error_budget=0.0005, spare_capacity_frac=0.6,
+                cost_sensitivity=0.2, is_critical=True)
+    local = tree.select(DeploymentContext(**base))
+    assert local == "shadow"               # unchanged default behavior
+    remote = tree.select(DeploymentContext(**base, transport_ms=60.0))
+    assert remote == "canary_10"           # no double-fleet mirroring
+
+
+def test_collector_aggregates_transport_ms():
+    from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+
+    def report(rid, tick, t_ms):
+        return ReplicaReport(replica_id=rid, tick=tick,
+                             latency_ms_samples=[], n_requests=0,
+                             n_errors=0, flop_util=0, hbm_util=0,
+                             ici_util=0, mem_frac=0, queue_depth=0,
+                             transport_ms=t_ms)
+
+    c = MetricsCollector()
+    c.submit(report(0, 0, 0.0))            # an in-process replica
+    c.submit(report(1, 0, 0.0))
+    rec0 = c.aggregate(0, n_replicas=2, max_replicas=4)
+    assert rec0["transport_ms"] == 0.0
+    c.submit(report(0, 1, 2.0))            # the fleet went remote
+    c.submit(report(1, 1, 6.0))
+    rec1 = c.aggregate(1, n_replicas=2, max_replicas=4)
+    assert rec1["transport_ms"] == pytest.approx(4.0)
+
+
+# ------------------------------------------------- multi-device sharding
+
+_SHARDED_SUBPROC = r"""
+import numpy as np
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.models.config import ModelConfig
+from repro.serving import InProcessReplica, Request, ShardedReplica
+from repro.launch.mesh import make_mesh
+
+cfg = ModelConfig(name="tiny-dense", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, qkv_bias=True,
+                  param_dtype="float32", dtype="float32")
+MAX_SEQ, SLOTS = 24, 2
+
+def requests(seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(3, cfg.vocab, size=8
+                    ).astype(np.int32), gen_len=5) for i in range(3)]
+
+inproc = InProcessReplica.build(cfg, slots=SLOTS, max_seq=MAX_SEQ,
+                                prefill_chunk=4)
+sharded = ShardedReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         mesh=make_mesh((2,), ("data",)))
+
+# 1) logits parity on one staggered decode tick (the sharded kernel itself)
+for rep in (inproc, sharded):
+    reqs = requests()
+    rep.submit(reqs[0], now=0.0)
+    rep.step(1.0)                          # slot 0 one tick ahead
+    rep.submit(reqs[1], now=1.0)
+    rep.step(2.0)
+import jax.numpy as jnp
+# decode donates its cache argument: hand each call a copy so the engines'
+# live pools survive for the token-stream run below
+li, _ = inproc.engine.core.decode(inproc.engine.params, inproc.engine.tokens,
+                                  jax.tree.map(jnp.copy,
+                                               inproc.engine.pool.cache))
+ls, _ = sharded.engine.decode(sharded.engine.params, sharded.engine.tokens,
+                              jax.tree.map(jnp.copy,
+                                           sharded.engine.pool.cache))
+np.testing.assert_allclose(np.asarray(li, np.float32),
+                           np.asarray(ls, np.float32), atol=1e-5, rtol=1e-5)
+
+# 2) full token-stream parity, staggered admission
+def run(rep, reqs):
+    done, now = [], 2.0
+    rep.submit(reqs[2], now=now)
+    while len(done) < 3 and now < 200:
+        now += 1.0
+        done.extend(rep.step(now))
+    return {r.rid: r.tokens_out for r in done}
+
+a, b = run(inproc, requests()), run(sharded, requests())
+assert a == b, (a, b)
+print("SHARDED_EQ_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_replica_matches_inproc_on_two_device_mesh():
+    """Acceptance: ShardedReplica (slot axis sharded over a 2-device mesh
+    via repro.sharding.shard_map) matches InProcessReplica decode logits and
+    token streams.  Re-execs python with the host-platform device-count
+    override — the main test process must keep its single default device."""
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARDED_EQ_OK" in out.stdout
+
+
+# ------------------------------------------------- cross-topology closed loop
+
+
+@pytest.mark.slow
+def test_closed_loop_identical_across_topologies():
+    """Acceptance: run_closed_loop on the same seed produces identical token
+    streams AND identical scaling decisions on the inproc, sharded, and proc
+    topologies — the control plane cannot tell the fabrics apart."""
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    cfg = TINY_CFGS["dense"]
+    results = {}
+    for topology in ("inproc", "sharded", "proc"):
+        lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                        steps_per_tick=6, topology=topology)
+        sink = []
+        router, logs = run_closed_loop(cfg, autoscale=True, ticks=8, seed=0,
+                                       lc=lc, sink=sink)
+        results[topology] = {
+            "decisions": [(t.replicas, t.reason) for t in logs],
+            "served": [t.served for t in logs],
+            "streams": {r.rid: tuple(r.tokens_out) for r in sink},
+        }
+        router.close()
+    assert results["inproc"] == results["sharded"] == results["proc"]
+    assert results["inproc"]["streams"]          # the loop actually served
+
+
+@pytest.mark.slow
+def test_submit_reroutes_around_silently_dead_replica():
+    """A worker that dies BETWEEN steps is invisible until an RPC touches
+    it.  The submit that discovers the corpse must reroute to a survivor —
+    not crash the driver, not lose the request."""
+    cfg = TINY_CFGS["dense"]
+    router = ReplicaRouter.from_topology(cfg, "proc", slots=SLOTS,
+                                         max_seq=16, prefill_chunk=4,
+                                         n_replicas=2, max_replicas=2)
+    try:
+        dead = router.replicas[1]
+        dead._proc.kill()
+        dead._proc.wait(timeout=30)
+        reqs = _requests(4, prompt_len=5, gen_len=3)
+        for r in reqs:                     # second submit routes to the
+            router.submit(r, now=0.0)      # corpse and must fail over
+        assert dead.failed
+        done, now = [], 0.0
+        while len(done) < 4 and now < 100:
+            now += 1.0
+            done.extend(router.step(now))
+        assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    finally:
+        router.close()
+
+
+@pytest.mark.slow
+def test_single_replica_fleet_self_heals_on_submit():
+    """The hardest failover case: a ONE-replica proc fleet whose worker
+    dies between steps.  The submit that discovers the corpse finds no
+    survivors — it must reap the corpse and build the replacement right
+    there (step()'s reap path hasn't run yet), then route to it."""
+    cfg = TINY_CFGS["dense"]
+    router = ReplicaRouter.from_topology(cfg, "proc", slots=SLOTS,
+                                         max_seq=16, prefill_chunk=4,
+                                         n_replicas=1, max_replicas=2)
+    try:
+        dead = router.replicas[0]
+        dead._proc.kill()
+        dead._proc.wait(timeout=30)
+        [req] = _requests(1, prompt_len=5, gen_len=3)
+        router.submit(req, now=0.0)        # discovers, reaps, replaces
+        assert router.replica_count == 1
+        assert router.replicas[0] is not dead
+        done, now = [], 0.0
+        while not done and now < 100:
+            now += 1.0
+            done.extend(router.step(now))
+        assert [r.rid for r in done] == [0]
+        assert len(done[0].tokens_out) == 3
+    finally:
+        router.close()
+
+
+@pytest.mark.slow
+def test_router_reaps_failed_process_replica_mid_run():
+    """Kill one proc-topology worker mid-run: the router's next step reaps
+    it (no hang), rewinds + requeues its lost requests, builds a replacement
+    to hold the actuated count, and every request completes exactly once."""
+    from repro.serving.replica import ProcessReplica
+
+    cfg = TINY_CFGS["dense"]
+    router = ReplicaRouter.from_topology(cfg, "proc", slots=SLOTS,
+                                         max_seq=16, prefill_chunk=4,
+                                         n_replicas=2, max_replicas=3)
+    try:
+        reqs = _requests(6, prompt_len=5, gen_len=6)
+        for r in reqs:
+            router.submit(r, now=0.0)
+        done, now = [], 0.0
+        while len(done) < 2 and now < 100:   # victim serves real work first
+            now += 1.0
+            done.extend(router.step(now))
+        victim = router.replicas[1]
+        assert isinstance(victim, ProcessReplica)
+        victim._proc.kill()
+        victim._proc.wait(timeout=30)
+        while len(done) < 6 and now < 200:
+            now += 1.0
+            done.extend(router.step(now))
+        assert sorted(r.rid for r in done) == list(range(6))
+        assert all(len(r.tokens_out) == 6 for r in done)
+        assert router.replica_count == 2   # replacement spawned
+        # crash-proof accounting: the victim's pre-crash completions stay in
+        # fleet metrics via the parent-side lifetime mirror
+        assert router.metrics()["completed"] == 6
+        assert victim.replica_id not in [r.replica_id
+                                         for r in router.replicas]
+        # the crash is VISIBLE to the control plane: the next report round
+        # carries the victim's n_errors report, which the collector turns
+        # into a straggler flag; the round after that clears it
+        from repro.core.monitoring.collector import MetricsCollector
+        collector = MetricsCollector()
+        for rep in router.reports(0):
+            collector.submit(rep)
+        assert victim.replica_id in collector.stragglers()
+        for rep in router.reports(1):
+            collector.submit(rep)
+        assert victim.replica_id not in collector.stragglers()
+    finally:
+        router.close()

@@ -172,8 +172,10 @@ def test_engine_streamed_prefill_matches_one_shot(family):
 
 @pytest.mark.parametrize("family", FIVE_FAMILIES + ["ssm2"])
 def test_write_slot_axis_detection_per_family(family):
-    # (audio/enc-dec is excluded: prefill cross K/V is encoder-length while
-    # the pool spec is max_seq-sized — ServingEngine refuses it explicitly)
+    # (audio/enc-dec is covered by the dedicated enc-dec tests below: its
+    # prefill cross K/V is encoder-length and write_slot zero-pads it up to
+    # the max_seq-sized pool spec, so the exact-row comparison here — pool
+    # row == one-cache row — would not hold leaf-for-leaf)
     cfg = TINY_CFGS[family]
     params = core_for(family, False).params
     rng = np.random.default_rng(0)
@@ -314,15 +316,104 @@ def test_pallas_vector_decode_tick_matches_jnp_cache():
         np.asarray(engines[True].pool.index), np.asarray(engines[False].pool.index))
 
 
-# ------------------------------------------------------------- enc-dec gap
+# ------------------------------------------------------------- enc-dec
 
 
-@pytest.mark.xfail(raises=NotImplementedError, strict=True,
-                   reason="enc-dec slot serving: the model-side cross_len "
-                          "mask landed, but the engine still needs to admit "
-                          "frames and pad cross K/V to the pool spec")
-def test_enc_dec_slot_serving_gap():
-    ServingEngine(TINY_CFGS["audio"], slots=2, max_seq=MAX_SEQ)
+def _audio_request(rid, enc_len, *, prompt_len=6, gen_len=4, seed=0):
+    cfg = TINY_CFGS["audio"]
+    rng = np.random.default_rng((seed, rid))
+    return Request(
+        rid=rid,
+        prompt=rng.integers(3, cfg.vocab, size=prompt_len).astype(np.int32),
+        gen_len=gen_len,
+        frames=rng.standard_normal((enc_len, cfg.d_model)).astype(np.float32))
+
+
+def test_enc_dec_slot_serving():
+    """The PR-2 gap, closed: the engine admits ``frames`` and the slot pool
+    zero-pads prefill's encoder-length cross K/V up to the max_seq-sized
+    pool spec (the pad rows sit past cross_len and are masked at decode).
+    Two requests with DIFFERENT encoder lengths, staggered so their ring
+    positions and cross lengths differ every tick, must each produce
+    exactly the tokens they produce alone."""
+    solo = {}
+    for rid, enc_len in ((0, 5), (1, 9)):
+        eng = make_engine("audio", slots=2, prefill_chunk=4)
+        eng.submit(_audio_request(rid, enc_len), now=0.0)
+        [done] = run_to_completion(eng, 1)
+        solo[rid] = done.tokens_out
+
+    eng = make_engine("audio", slots=2, prefill_chunk=4)
+    eng.submit(_audio_request(0, 5), now=0.0)
+    now = 0.0
+    for _ in range(2):                     # request 0 is 2 tokens deep
+        now += 1.0
+        eng.step(now=now)
+    eng.submit(_audio_request(1, 9), now=now)
+    done = run_to_completion(eng, 2)
+    assert {r.rid: r.tokens_out for r in done} == solo
+
+
+def test_enc_dec_slot_serving_seamless_m4t_smoke():
+    """The same staggered mixed-encoder-length check on the repo's actual
+    seamless-m4t smoke config (tied embeddings, LayerNorm family path)."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("seamless-m4t-medium")
+    eng_solo = ServingEngine(cfg, slots=2, max_seq=MAX_SEQ, prefill_chunk=4)
+    rng = np.random.default_rng(3)
+
+    def req(rid, enc_len):
+        r = np.random.default_rng((3, rid))
+        return Request(rid=rid,
+                       prompt=r.integers(3, cfg.vocab, size=6
+                                         ).astype(np.int32),
+                       gen_len=4,
+                       frames=r.standard_normal(
+                           (enc_len, cfg.d_model)).astype(np.float32))
+
+    eng_solo.submit(req(1, 9), now=0.0)
+    [solo] = run_to_completion(eng_solo, 1)
+
+    eng = ServingEngine(cfg, slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+                        core=eng_solo.core)
+    eng.submit(req(0, 5), now=0.0)
+    now = 0.0
+    for _ in range(2):
+        now += 1.0
+        eng.step(now=now)
+    eng.submit(req(1, 9), now=now)
+    done = run_to_completion(eng, 2)
+    by_rid = {r.rid: r.tokens_out for r in done}
+    assert by_rid[1] == solo.tokens_out
+    assert all(len(t) == 4 for t in by_rid.values())
+
+
+def test_enc_dec_streamed_prefill_matches_one_shot():
+    """The decoder-prompt tail streams through the decode tick (cross K/V
+    are already pooled from admission's one-shot encoder pass) — chunked
+    and whole-prompt admission must emit identical tokens."""
+    one = make_engine("audio", slots=1, prefill_chunk=None)
+    one.submit(_audio_request(0, 7, prompt_len=10), now=0.0)
+    [done_one] = run_to_completion(one, 1)
+    chunked = make_engine("audio", slots=1, prefill_chunk=3)
+    chunked.submit(_audio_request(0, 7, prompt_len=10), now=0.0)
+    [done_chk] = run_to_completion(chunked, 1)
+    assert done_one.tokens_out == done_chk.tokens_out
+
+
+def test_enc_dec_submit_rejects_missing_or_oversized_frames():
+    eng = make_engine("audio", slots=1)
+    cfg = TINY_CFGS["audio"]
+    req = _audio_request(0, 5)
+    req.frames = None
+    with pytest.raises(ValueError):
+        eng.submit(req, now=0.0)
+    with pytest.raises(ValueError):        # encoder must fit the cross pool
+        eng.submit(_audio_request(1, MAX_SEQ + 1), now=0.0)
+    with pytest.raises(ValueError):        # d_model mismatch
+        bad = _audio_request(2, 5)
+        bad.frames = np.zeros((5, cfg.d_model + 1), np.float32)
+        eng.submit(bad, now=0.0)
 
 
 # ------------------------------------------------------------- sampling

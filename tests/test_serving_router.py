@@ -96,7 +96,7 @@ def test_least_loaded_routing_spreads_requests():
                               prompt=np.full(6, 3 + i, np.int32),
                               gen_len=3), now=0.0)
     # 2 replicas × 2 slots: least-loaded routing alternates replicas
-    depths = [e.scheduler.depth for e in router.engines]
+    depths = [r.queue_depth for r in router.replicas]
     assert depths == [2, 2]
 
 
@@ -144,21 +144,34 @@ def test_scale_to_respects_bounds():
     assert router.scale_to(-5) == 1
 
 
-def test_draining_replica_finishes_in_flight_work():
+def test_downscale_requeues_in_flight_requests():
+    """Regression: a mid-generation downscale must REQUEUE the victim's
+    in-flight requests through the survivors' schedulers — previously they
+    stayed behind on the draining replica (stranded until it finished).
+    The victim parks immediately; every request still completes exactly
+    once, with its full token budget, on a surviving replica."""
     router = make_router(n_replicas=2)
-    cfg = TINY_CFGS["dense"]
     reqs = [Request(rid=i, prompt=np.full(6, 4, np.int32), gen_len=6)
             for i in range(4)]
     for r in reqs:
         router.submit(r, now=0.0)
     router.step(0.0)                       # all four admitted (2×2 slots)
+    for _ in range(2):                     # …and 2 tokens into generation
+        router.step(0.0)
+    victim_rids = {r.rid for r in reqs if r.replica_id == 1}
+    assert victim_rids                     # some work really was in flight
     router.scale_to(1, now=0.0)
+    assert len(router.replicas) == 1       # victim parked IMMEDIATELY
+    # the preempted requests are back in the survivor's system, not stranded
+    assert router.pending == 4
     completed, now = [], 0.0
     while len(completed) < 4 and now < 100:
         now += TICK_S
         completed.extend(router.step(now))
     assert sorted(r.rid for r in completed) == [0, 1, 2, 3]
-    assert len(router.engines) == 1        # drained replica parked
+    for r in completed:
+        assert len(r.tokens_out) == 6      # full budget despite preemption
+        assert r.replica_id == 0           # finished on the survivor
 
 
 # ------------------------------------------------------------- property

@@ -1,0 +1,183 @@
+"""The replica-fabric wire contract: framed JSON round-trips (including the
+non-finite metric values real windows produce), partial-frame reads (kernel
+buffers split frames arbitrarily), typed codecs for Request / ReplicaReport /
+ModelConfig, and the failure path — a dead ProcessReplica worker must surface
+as a collector straggler, never as a hang.
+"""
+import math
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request
+from repro.serving.transport import (
+    Connection,
+    TransportError,
+    decode_config,
+    decode_report,
+    decode_request,
+    encode_config,
+    encode_report,
+    encode_request,
+    pack_frame,
+)
+
+from conftest import TINY_CFGS
+
+
+# ------------------------------------------------------------------- codecs
+
+
+def test_replica_report_round_trip_with_nan_and_inf():
+    rep = ReplicaReport(
+        replica_id=3, tick=7,
+        latency_ms_samples=[1.5, float("nan"), float("inf"), -float("inf")],
+        n_requests=4, n_errors=1, flop_util=float("nan"), hbm_util=0.25,
+        ici_util=0.0, mem_frac=1.0, queue_depth=2, transport_ms=0.125)
+    got = decode_report(encode_report(rep))
+    assert got.replica_id == 3 and got.tick == 7
+    assert got.latency_ms_samples[0] == 1.5
+    assert math.isnan(got.latency_ms_samples[1])
+    assert got.latency_ms_samples[2] == float("inf")
+    assert got.latency_ms_samples[3] == -float("inf")
+    assert math.isnan(got.flop_util)
+    assert got.transport_ms == 0.125 and got.n_errors == 1
+
+
+def test_replica_report_decoder_ignores_unknown_fields():
+    d = encode_report(ReplicaReport(
+        replica_id=0, tick=0, latency_ms_samples=[], n_requests=0,
+        n_errors=0, flop_util=0, hbm_util=0, ici_util=0, mem_frac=0,
+        queue_depth=0))
+    d["added_in_a_future_version"] = 42       # wire compat: skew tolerated
+    assert decode_report(d).replica_id == 0
+
+
+def test_request_round_trip_including_frames_and_sampling():
+    rng = np.random.default_rng(0)
+    req = Request(rid=11, prompt=np.arange(3, 9, dtype=np.int32), gen_len=5,
+                  sampling=SamplingParams(temperature=0.7, top_k=4, seed=9),
+                  frames=rng.standard_normal((6, 32)).astype(np.float32))
+    req.t_submit = 1.25
+    req.tokens_out = [4, 5]
+    got = decode_request(encode_request(req))
+    np.testing.assert_array_equal(got.prompt, req.prompt)
+    np.testing.assert_allclose(got.frames, req.frames)
+    assert got.sampling == req.sampling
+    assert got.gen_len == 5 and got.t_submit == 1.25
+    assert got.tokens_out == [4, 5]
+    # no frames → stays None (dense families never grow a frames key)
+    lean = decode_request(encode_request(Request(
+        rid=0, prompt=np.arange(3, 6, dtype=np.int32), gen_len=1)))
+    assert lean.frames is None
+
+
+@pytest.mark.parametrize("family", sorted(TINY_CFGS))
+def test_model_config_round_trip_per_family(family):
+    cfg = TINY_CFGS[family]
+    assert decode_config(encode_config(cfg)) == cfg
+
+
+# ------------------------------------------------------------------ framing
+
+
+def _sock_pair():
+    a, b = socket.socketpair()
+    return Connection(a, timeout=10.0), Connection(b, timeout=10.0)
+
+
+def test_framing_round_trip_and_back_to_back_messages():
+    a, b = _sock_pair()
+    a.send({"x": 1})
+    a.send({"y": [1.5, None, "z"]})       # two frames queued in one buffer
+    assert b.recv() == {"x": 1}
+    assert b.recv() == {"y": [1.5, None, "z"]}
+    a.close(), b.close()
+
+
+def test_partial_frame_reads_reassemble():
+    """A frame delivered in arbitrary byte-sized pieces (header split
+    included) must reassemble into one message."""
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    payload = {"op": "step", "data": list(range(64)), "v": float("nan")}
+    raw = pack_frame(payload)
+    cuts = [0, 1, 3, 4, 9, len(raw) // 2, len(raw) - 1, len(raw)]
+
+    def dribble():
+        for lo, hi in zip(cuts, cuts[1:]):
+            a_sock.sendall(raw[lo:hi])
+
+    t = threading.Thread(target=dribble)
+    t.start()
+    got = b.recv()
+    t.join()
+    assert got["op"] == "step" and got["data"] == list(range(64))
+    assert math.isnan(got["v"])
+    a_sock.close(), b.close()
+
+
+def test_eof_raises_transport_error_not_hang():
+    a, b = _sock_pair()
+    a.close()
+    with pytest.raises(TransportError):
+        b.recv()
+    b.close()
+
+
+def test_mid_frame_eof_raises_transport_error():
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    raw = pack_frame({"op": "step"})
+    a_sock.sendall(raw[:len(raw) - 3])    # die mid-payload
+    a_sock.close()
+    with pytest.raises(TransportError):
+        b.recv()
+    b.close()
+
+
+# ------------------------------------------------------- crash → straggler
+
+
+@pytest.mark.slow
+def test_process_replica_crash_surfaces_as_straggler():
+    """Kill the worker mid-run: the next step() must return (not hang) with
+    the replica marked failed, its report must carry n_errors > 0, the
+    collector must list it as a straggler, and the submitter-side requests
+    must be recoverable (rewound) for requeue."""
+    from repro.serving.replica import ProcessReplica
+
+    cfg = TINY_CFGS["dense"]
+    rep = ProcessReplica(cfg, slots=1, max_seq=16, prefill_chunk=4,
+                         replica_id=7, rpc_timeout_s=60.0)
+    try:
+        req = Request(rid=1, prompt=np.arange(3, 8, dtype=np.int32),
+                      gen_len=8)
+        rep.submit(req, now=0.0)
+        rep.step(1.0)                       # mid-generation
+        rep._proc.kill()
+        rep._proc.wait(timeout=30)
+        out = rep.step(2.0)                 # EOF → failed, never a hang
+        assert out == [] and rep.failed
+        report = rep.report(tick=5)
+        assert report.n_errors > 0 and report.replica_id == 7
+
+        collector = MetricsCollector()
+        collector.submit(report)
+        assert 7 in collector.stragglers()
+        # a healthy replica's clean report does NOT mark it
+        collector.submit(ReplicaReport(
+            replica_id=8, tick=5, latency_ms_samples=[1.0], n_requests=1,
+            n_errors=0, flop_util=0.5, hbm_util=0.5, ici_util=0.0,
+            mem_frac=0.5, queue_depth=0))
+        assert collector.stragglers() == [7]
+
+        lost = rep.lost_requests()
+        assert [r.rid for r in lost] == [1]
+        assert lost[0].tokens_out == [] and lost[0].t_admit is None
+    finally:
+        rep.close()
