@@ -84,7 +84,7 @@ def _closed_loop(autoscale: bool, *, seed: int = 0, ticks: int = ENGINE_TICKS,
     router.close()
     backlog = tw_den - m["completed"]      # stuck requests never even reach
     return tw_num / max(tw_den, 1), m["completed"], m["slot_utilization"], \
-        backlog, m["transport_ms"]         # the latency histogram
+        backlog, m["transport_ms"], m["rpc_count"]  # the latency histogram
 
 
 def run_engine(seed: int = 0, ticks: int = ENGINE_TICKS,
@@ -92,9 +92,9 @@ def run_engine(seed: int = 0, ticks: int = ENGINE_TICKS,
     """Static-1-replica vs closed-loop on the real engine."""
     from repro.serving.closed_loop import LoopConfig
     t0 = time.perf_counter()
-    p95_s, done_s, util_s, back_s, _ = _closed_loop(
+    p95_s, done_s, util_s, back_s, *_ = _closed_loop(
         False, seed=seed, ticks=ticks, topology=topology)
-    p95_a, done_a, util_a, back_a, _ = _closed_loop(
+    p95_a, done_a, util_a, back_a, *_ = _closed_loop(
         True, seed=seed, ticks=ticks, topology=topology)
     wall = time.perf_counter() - t0
     steps = 2 * ticks * LoopConfig().steps_per_tick
@@ -127,14 +127,14 @@ TOPOLOGY_SCALES = {
 def run_topology(topology: str, smoke: bool = True, seed: int = 0):
     """One autoscaled closed-loop run on the requested replica backend,
     recorded for the CI trajectory (BENCH_serving.json): wall time per
-    decode round, completions, backlog, and — for the proc topology — the
-    measured per-replica transport latency.  The same driver, the same
-    seed, the same arrival profile as --engine; only the replica fabric
-    changes underneath."""
+    decode round, completions, backlog, and — for the proc/tcp topologies —
+    the measured per-replica transport latency and total RPC count.  The
+    same driver, the same seed, the same arrival profile as --engine; only
+    the replica fabric changes underneath."""
     from repro.serving.closed_loop import LoopConfig
     scale = TOPOLOGY_SCALES["smoke" if smoke else "full"]
     t0 = time.perf_counter()
-    p95, done, util, backlog, transport = _closed_loop(
+    p95, done, util, backlog, transport, rpcs = _closed_loop(
         True, seed=seed, ticks=scale["ticks"], topology=topology,
         max_replicas=scale["max_replicas"])
     wall = time.perf_counter() - t0
@@ -145,11 +145,77 @@ def run_topology(topology: str, smoke: bool = True, seed: int = 0):
         "us_per_call": wall * 1e6 / max(steps, 1),
         "derived": (f"{topology} closed loop: {done} completed, "
                     f"backlog {backlog}, tw-p95 {p95:.0f}ms, "
-                    f"transport {transport:.2f}ms, wall {wall:.1f}s"),
+                    f"transport {transport:.2f}ms, {rpcs} RPCs, "
+                    f"wall {wall:.1f}s"),
         "detail": {"completed": done, "backlog": backlog,
                    "tw_p95_ms": p95, "slot_util": util,
-                   "transport_ms": transport, "wall_s": wall,
-                   "seed": seed, **scale},
+                   "transport_ms": transport, "rpc_count": rpcs,
+                   "wall_s": wall, "seed": seed, **scale},
+    }
+
+
+# ---------------------------------------------------------------------------
+# submit batching: RPCs per decode round, before vs after
+# ---------------------------------------------------------------------------
+
+
+def run_rpc_batching(topology: str = "tcp", batch: int = 4, rounds: int = 4,
+                     seed: int = 0):
+    """The transport term the batched step protocol removes: drive ONE
+    remote replica through `rounds` bursts of `batch` submits each, with
+    per-request submit RPCs (before) vs submits folded into the step
+    message (after).  The decode schedule is identical in both modes —
+    only the message count changes — so rpc_per_round is the clean
+    before/after and the ≥2× acceptance bar lives here."""
+    from repro.configs import get_smoke_config
+    from repro.serving.replica import ProcessReplica, TcpReplica
+    from repro.serving.scheduler import Request
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    klass = {"proc": ProcessReplica, "tcp": TcpReplica}[topology]
+    out = {}
+    for label, batched in (("unbatched", False), ("batched", True)):
+        rep = klass(cfg, slots=batch, max_seq=24, prefill_chunk=4,
+                    batch_submits=batched)
+        rng = np.random.default_rng(seed)
+
+        def req(rid, now):
+            r = Request(rid=rid, prompt=rng.integers(
+                3, cfg.vocab, size=4).astype(np.int32), gen_len=2)
+            rep.submit(r, now=now)
+
+        now = 0.0
+        req(10_000, now)                 # warm the jit outside the window
+        while rep.pending:
+            now += 1.0
+            rep.step(now)
+        rpc0, t0, steps, rid = rep.rpc_count, time.perf_counter(), 0, 0
+        for _ in range(rounds):
+            for _ in range(batch):
+                req(rid, now)
+                rid += 1
+            while rep.pending:
+                now += 1.0
+                rep.step(now)
+                steps += 1
+        rpcs = rep.rpc_count - rpc0
+        wall = time.perf_counter() - t0
+        rep.lifetime()                   # one transport-EWMA sample
+        out[label] = {"rpc_total": rpcs, "rpc_per_round": rpcs / rounds,
+                      "steps_per_round": steps / rounds,
+                      "transport_ms": rep.transport_ms, "wall_s": wall}
+        rep.close()
+    ratio = (out["unbatched"]["rpc_per_round"]
+             / max(out["batched"]["rpc_per_round"], 1e-9))
+    return {
+        "name": "rpc_batching",
+        "topology": topology, "batch": batch, "rounds": rounds,
+        "rpc_ratio": ratio,
+        "derived": (f"submit batching ({topology}, batch={batch}): "
+                    f"{out['unbatched']['rpc_per_round']:.1f} -> "
+                    f"{out['batched']['rpc_per_round']:.1f} RPCs/round "
+                    f"({ratio:.2f}x fewer)"),
+        "detail": out,
     }
 
 
@@ -238,10 +304,12 @@ if __name__ == "__main__":
                     default=None,
                     help="decode data-path ablation: fused Pallas vector-"
                          "index kernel vs jnp reference")
-    ap.add_argument("--topology", choices=["inproc", "sharded", "proc"],
+    ap.add_argument("--topology", choices=["inproc", "sharded", "proc",
+                                           "tcp"],
                     default=None,
                     help="replica-fabric smoke: the closed loop on one "
-                         "backend, recorded to --out (BENCH_serving.json)")
+                         "backend, recorded to --out (BENCH_serving.json); "
+                         "proc/tcp also record submit-batching RPC counts")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest ablation scale (CI artifact)")
     ap.add_argument("--out", default=None,
@@ -258,10 +326,16 @@ if __name__ == "__main__":
             raise SystemExit("kernel ablation: token streams diverged")
     elif args.topology:
         res = run_topology(args.topology, smoke=args.smoke)
+        print(res["derived"])
+        if args.topology in ("proc", "tcp"):
+            res["rpc_batching"] = run_rpc_batching(args.topology)
+            print(res["rpc_batching"]["derived"])
         with open(args.out or "BENCH_serving.json", "w") as f:
             json.dump(res, f, indent=2, sort_keys=True)
-        print(res["derived"])
         if res["detail"]["completed"] == 0:
             raise SystemExit("topology smoke: nothing completed")
+        if res.get("rpc_batching", {}).get("rpc_ratio", 99.0) < 2.0:
+            raise SystemExit("rpc batching: step-folded submits should cut "
+                             "RPCs/round by >=2x at batch >= 4")
     else:
         print((run_engine() if args.engine else run())["derived"])

@@ -35,19 +35,32 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--topology", choices=TOPOLOGIES, default="inproc",
                     help="replica backend: in-process engines, one engine "
-                         "sharded over the local device mesh, or worker "
-                         "subprocesses behind the socket transport")
+                         "sharded over the local device mesh, worker "
+                         "subprocesses behind the socket transport, or "
+                         "TCP workers the router dials")
+    ap.add_argument("--workers", default=None, metavar="HOST:PORT,...",
+                    help="tcp topology: comma-separated addresses of "
+                         "pre-started worker pods (python -m "
+                         "repro.serving.worker --listen host:port) to "
+                         "attach to; omitted, local TCP workers are "
+                         "spawned on kernel-picked ports")
     args = ap.parse_args(argv)
+    if args.workers and args.topology != "tcp":
+        ap.error("--workers only applies to --topology tcp")
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     print(f"engine: {cfg.name} {cfg.n_params() / 1e6:.1f}M params, "
           f"router starts at 1 {args.topology} replica")
-    lc = dataclasses.replace(LoopConfig(), topology=args.topology)
+    addrs = tuple(args.workers.split(",")) if args.workers else ()
+    lc = dataclasses.replace(LoopConfig(), topology=args.topology,
+                             addrs=addrs)
     router, logs = run_closed_loop(cfg, autoscale=True, ticks=args.ticks,
                                    seed=args.seed, lc=lc)
     for t in logs:
         util = " ".join(f"r{rid}={u:.2f}" for rid, u in t.replica_util)
         flag = " [ANOMALY]" if t.anomaly else ""
+        if t.evicted:
+            flag += f" [EVICTED r{','.join(map(str, t.evicted))}]"
         print(f"tick {t.tick:2d}: rps={t.rps_target:4.1f} "
               f"arrivals={t.arrivals:2d} served={t.served:2d} "
               f"p50={t.latency_p50_ms:6.0f}ms p95={t.latency_p95_ms:6.0f}ms "

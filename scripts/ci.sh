@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 CI entrypoint: install dev deps, run the Pallas kernel-equivalence
 # suites first (the `kernels` marker — fast signal when a kernel change
-# breaks oracle parity), then the rest of the suite, record the decode-kernel
-# ablation (BENCH_decode.json) and the replica-fabric smoke on the
-# multi-process topology (BENCH_serving.json) — both perf-trajectory
-# artifacts the workflow uploads — then the closed-loop serving smoke.
-# Mirrors .github/workflows/ci.yml so the same command works locally.
+# breaks oracle parity), then the main suite, then the chaos soak standalone
+# (the `chaos` marker: scripted kills + straggler evictions over a mixed
+# proc/TCP fleet).  Record the decode-kernel ablation (BENCH_decode.json)
+# and the replica-fabric smokes: TCP (2 local workers + the submit-batching
+# RPC before/after — BENCH_serving.json) and proc (BENCH_serving_proc.json)
+# — perf-trajectory artifacts the workflow uploads — then the closed-loop
+# serving smoke.  Mirrors .github/workflows/ci.yml so the same command
+# works locally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,7 +16,9 @@ python -m pip install --quiet -r requirements-dev.txt
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -m kernels
-python -m pytest -x -q -m "not kernels"
+python -m pytest -x -q -m "not kernels and not chaos"
+python -m pytest -x -q -m chaos
 python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.json
-python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving.json
+python -m benchmarks.serving_latency --topology tcp --smoke --out BENCH_serving.json
+python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving_proc.json
 python examples/serve_autoscale.py --smoke

@@ -92,6 +92,42 @@ class ScalingOptimizer:
                                predicted_latency_ms=lat, efficiency=efficiency)
 
 
+class EvictionPolicy:
+    """Closed-loop straggler eviction: flag → sustain → actuate.
+
+    The collector's ``stragglers()`` feed is noisy by design (one bad
+    window flags a replica), so the policy only proposes an eviction after
+    ``k_windows`` CONSECUTIVE flagged control windows — a replica that
+    recovers (or whose stale EWMA the collector prunes) resets its streak.
+    Per update at most ``fleet_size - min_fleet`` evictions are proposed:
+    the router replaces every evicted replica, but a one-replica fleet must
+    never be evicted at all (there is nowhere to drain to while the
+    replacement warms, and the "straggler" IS the fleet median)."""
+
+    def __init__(self, k_windows: int = 3, min_fleet: int = 1):
+        self.k_windows = max(int(k_windows), 1)
+        self.min_fleet = max(int(min_fleet), 1)
+        self._streak: dict[int, int] = {}
+
+    def update(self, flagged_ids, fleet_size: int) -> list[int]:
+        """One control window: advance streaks; → replica ids to evict."""
+        flagged = set(flagged_ids)
+        for rid in list(self._streak):
+            if rid not in flagged:
+                del self._streak[rid]      # recovered → streak resets
+        evict: list[int] = []
+        budget = max(int(fleet_size) - self.min_fleet, 0)
+        for rid in sorted(flagged):
+            self._streak[rid] = self._streak.get(rid, 0) + 1
+            if self._streak[rid] >= self.k_windows and len(evict) < budget:
+                evict.append(rid)
+                del self._streak[rid]      # actuated: the replacement
+        return evict                       # starts from a clean slate
+
+    def streak(self, replica_id: int) -> int:
+        return self._streak.get(replica_id, 0)
+
+
 class DynamicScaler:
     def __init__(self, forecaster, perf_model: PerfModel, *,
                  horizon_ticks: int = 3, down_sustain: int = 3):

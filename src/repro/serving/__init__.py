@@ -7,12 +7,18 @@ Layout:
   engine.py     — single-replica engine: chunked prefill streamed through the
                   batched decode tick, per-slot ring positions
   replica.py    — the Replica protocol (submit/step/report/scale hooks) and
-                  its three backends: InProcessReplica, ShardedReplica (one
+                  its four backends: InProcessReplica, ShardedReplica (one
                   engine data-parallel over a device mesh), ProcessReplica
-                  (engine in a worker subprocess over the socket transport)
-  transport.py  — length-prefixed JSON framing + Request/ReplicaReport/
-                  ModelConfig codecs (the wire contract)
-  worker.py     — the subprocess side of ProcessReplica
+                  (engine in a forked worker over a socketpair), TcpReplica
+                  (engine in a listening worker pod the router dials)
+  transport.py  — length-prefixed JSON framing, TCP Listener/dial endpoints
+                  + Request/ReplicaReport/ModelConfig codecs (the wire
+                  contract)
+  worker.py     — the far side of ProcessReplica/TcpReplica (inherited-fd
+                  or --listen host:port)
+  fleet.py      — launch_fleet: N local listening workers for demos/CI
+  chaos.py      — fault-injection harness (FaultyConnection, ChaosProxy)
+                  pinning that faults surface typed, never as hangs
   router.py     — N replicas behind the protocol: least-loaded routing,
                   scale up/down mid-run (evacuate + requeue), straggler
                   eviction, ReplicaReport stream for core/monitoring
@@ -25,23 +31,34 @@ The `core/` control plane (scaler + allocator) drives ReplicaRouter.scale_to;
 examples/serve_autoscale.py closes the loop end to end on CPU.
 """
 from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.fleet import Fleet, launch_fleet, spawn_worker
 from repro.serving.replica import (
     InProcessReplica,
     ProcessReplica,
     Replica,
     ShardedReplica,
+    SocketReplica,
+    TcpReplica,
 )
 from repro.serving.router import ReplicaRouter, TOPOLOGIES
 from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import FCFSScheduler, Request
 from repro.serving.slots import SlotPool, write_slot
-from repro.serving.transport import Connection, TransportError
+from repro.serving.transport import (
+    Connection,
+    Listener,
+    TransportError,
+    dial,
+    parse_addr,
+)
 from repro.serving.workload import poisson_arrival_times, synthetic_requests
 
 __all__ = [
     "EngineCore", "ServingEngine", "ReplicaRouter", "TOPOLOGIES",
     "Replica", "InProcessReplica", "ShardedReplica", "ProcessReplica",
-    "Connection", "TransportError",
+    "SocketReplica", "TcpReplica",
+    "Fleet", "launch_fleet", "spawn_worker",
+    "Connection", "Listener", "TransportError", "dial", "parse_addr",
     "SamplingParams", "sample_token",
     "FCFSScheduler", "Request",
     "SlotPool", "write_slot",

@@ -9,8 +9,12 @@ Each control tick: Poisson arrivals spread uniformly over the tick enter the
 router only once the virtual clock passes their arrival time (submitting
 early would let a request be served before it "arrived", biasing latency
 low); the router runs ``steps_per_tick`` decode rounds; per-replica reports
-feed the MetricsCollector; and — when ``autoscale`` — the
-PredictiveAllocator's decision is actuated via router.scale_to.
+feed the MetricsCollector; the EvictionPolicy turns the collector's
+straggler feed into actuated ``router.evict_stragglers`` calls (a replica
+flagged ``evict_after`` consecutive windows is evicted and replaced — the
+loop doesn't just *compute* the straggler feed, it closes it); and — when
+``autoscale`` — the PredictiveAllocator's decision is actuated via
+router.scale_to.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
 from repro.core.dnn.features import deploy_vector
 from repro.core.monitoring.anomaly import AnomalyDetector
 from repro.core.monitoring.collector import MetricsCollector
-from repro.core.scaling.scaler import ScalingConstraints
+from repro.core.scaling.scaler import EvictionPolicy, ScalingConstraints
 from repro.serving.router import ReplicaRouter
 from repro.serving.workload import synthetic_requests
 from repro.sim.serving import WorkloadSpec
@@ -39,7 +43,11 @@ class LoopConfig:
     slo_ms: float = 2000.0
     calm_rps: float = 1.2
     spike_rps: float = 7.0
-    topology: str = "inproc"     # inproc | sharded | proc (replica.py)
+    topology: str = "inproc"     # inproc | sharded | proc | tcp (replica.py)
+    addrs: tuple = ()            # tcp: pre-started worker pods to attach to
+    batch_submits: bool = True   # proc/tcp: submits ride the step RPC
+    evict_after: int = 3         # consecutive straggler windows → evict
+    #                              (0 disables loop-actuated eviction)
 
 
 @dataclasses.dataclass
@@ -55,6 +63,8 @@ class TickLog:
     replicas: int               # realized count after actuation
     reason: str
     anomaly: bool
+    evicted: list = dataclasses.field(default_factory=list)  # replica ids
+    #                             the eviction policy actuated this tick
 
 
 def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
@@ -70,16 +80,20 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     profile=default_profile, sink: list | None = None):
     """→ (router, [TickLog]).  ``autoscale=False`` pins one replica (the
     static baseline).  ``lc.topology`` picks the replica backend — the loop
-    is transport-agnostic, so inproc / sharded / proc runs on the same seed
-    produce the same token streams and the same scaling trajectory.
-    ``sink``, when given, accumulates every completed Request (the
-    cross-topology equivalence tests compare these).  Callers running the
-    proc topology should ``router.close()`` when done (worker teardown)."""
+    is transport-agnostic, so inproc / sharded / proc / tcp runs on the
+    same seed produce the same token streams and the same scaling
+    trajectory.  ``sink``, when given, accumulates every completed Request
+    (the cross-topology equivalence tests compare these).  Callers running
+    the proc/tcp topologies should ``router.close()`` when done (worker
+    teardown)."""
     router = ReplicaRouter.from_topology(
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
-        max_replicas=lc.max_replicas)
+        max_replicas=lc.max_replicas, addrs=list(lc.addrs),
+        batch_submits=lc.batch_submits)
     rng = np.random.default_rng(seed)
+    evictor = (EvictionPolicy(k_windows=lc.evict_after)
+               if lc.evict_after > 0 else None)
 
     # virtual-clock service time: streamed prompt tail + generation
     service_s = ((spec.prompt_len - lc.prefill_chunk) + spec.gen_len + 1) \
@@ -129,8 +143,17 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
         reports = router.reports(tick)
         for rep in reports:
             collector.submit(rep)
+        # close the straggler loop: flagged K consecutive windows → the
+        # replica is evicted and replaced (its work requeues through the
+        # survivors), BEFORE this tick's scaling decision sees the fleet
+        evicted: list[int] = []
+        if evictor is not None:
+            evicted = router.evict_stragglers(
+                evictor.update(collector.stragglers(),
+                               router.replica_count), now=now)
         rec = collector.aggregate(tick, n_replicas=router.replica_count,
                                   max_replicas=lc.max_replicas)
+        rec["evictions"] = float(len(evicted))   # visible to the DNN/selector
         rec["rps"] = float(n)
         rec["rps_window"] = [rec["rps"]]
         anomalies = anomaly.update(tick, {"rps": rec["rps"]})
@@ -149,5 +172,5 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             queue_depth=rec["queue_depth"],
             replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
             replicas=router.replica_count, reason=reason, anomaly=bool(
-                anomalies)))
+                anomalies), evicted=evicted))
     return router, logs

@@ -106,6 +106,35 @@ class EngineStats:
         return out
 
 
+def validate_request(cfg, max_seq: int, prompt: np.ndarray, frames=None):
+    """Shape/length validation for one request against (cfg, max_seq).
+
+    Module-level because TWO parties run it: the engine at submit (a
+    malformed request must bounce back typed, not abort a batch step
+    mid-tick), and a remote replica's parent-side stub — batched submits
+    ride the step RPC, so without a local check a bad request would only
+    surface a round later, on the wrong side of the wire."""
+    P = len(prompt)
+    if P < 1:
+        raise ValueError("empty prompt")
+    if (not cfg.attn_free and cfg.sliding_window is None
+            and P >= max_seq):
+        raise ValueError(f"prompt ({P}) must fit below max_seq "
+                         f"({max_seq}) with room to generate")
+    if cfg.family == "vlm" and P <= cfg.n_vision_patches:
+        raise ValueError("vlm prompt must extend past the patch prefix")
+    if cfg.enc_dec:
+        if frames is None:
+            raise ValueError("enc-dec request needs encoder frames")
+        frames = np.asarray(frames)
+        if frames.ndim != 2 or frames.shape[1] != cfg.d_model:
+            raise ValueError(f"frames must be (S_enc, d_model="
+                             f"{cfg.d_model}), got {frames.shape}")
+        if frames.shape[0] < 1 or frames.shape[0] > max_seq:
+            raise ValueError(f"encoder length ({frames.shape[0]}) must "
+                             f"fit the cross pool (1..{max_seq})")
+
+
 class ServingEngine:
     """One replica: S decode slots over one shared cache pytree."""
 
@@ -153,25 +182,7 @@ class ServingEngine:
         self.scheduler.submit(request)
 
     def _validate(self, prompt: np.ndarray, frames=None):
-        P = len(prompt)
-        if P < 1:
-            raise ValueError("empty prompt")
-        if (not self.cfg.attn_free and self.cfg.sliding_window is None
-                and P >= self.max_seq):
-            raise ValueError(f"prompt ({P}) must fit below max_seq "
-                             f"({self.max_seq}) with room to generate")
-        if self.cfg.family == "vlm" and P <= self.cfg.n_vision_patches:
-            raise ValueError("vlm prompt must extend past the patch prefix")
-        if self.cfg.enc_dec:
-            if frames is None:
-                raise ValueError("enc-dec request needs encoder frames")
-            frames = np.asarray(frames)
-            if frames.ndim != 2 or frames.shape[1] != self.cfg.d_model:
-                raise ValueError(f"frames must be (S_enc, d_model="
-                                 f"{self.cfg.d_model}), got {frames.shape}")
-            if frames.shape[0] < 1 or frames.shape[0] > self.max_seq:
-                raise ValueError(f"encoder length ({frames.shape[0]}) must "
-                                 f"fit the cross pool (1..{self.max_seq})")
+        validate_request(self.cfg, self.max_seq, prompt, frames=frames)
 
     @property
     def idle(self) -> bool:

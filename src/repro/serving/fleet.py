@@ -1,0 +1,119 @@
+"""Local TCP worker fleets: spawn N listening workers for demos and CI.
+
+In production a TcpReplica attaches to a worker pod somebody else scheduled
+(k8s, a launcher) — the router never forks it.  For demos, CI, and the
+cross-host tests, this module stands in for that scheduler: it spawns
+``python -m repro.serving.worker --listen host:0`` subprocesses, reads the
+kernel-picked port off each worker's banner line, and hands back dialable
+addresses.  A Fleet outlives any one router (a router detaching leaves the
+pod listening, unless the worker was started ``--once``), so the same
+two-terminal flow in the README works in one process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import select
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.serving.transport import TransportError
+
+BANNER = "WORKER_LISTENING"
+
+
+def worker_env() -> dict:
+    """The spawned worker must resolve ``repro`` exactly like this process
+    (the repo is run from a source tree, not an installed wheel)."""
+    env = os.environ.copy()
+    src_root = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src_root)
+    return env
+
+
+def spawn_worker(host: str = "127.0.0.1", port: int = 0, *,
+                 once: bool = True, start_timeout_s: float = 60.0,
+                 ) -> tuple[tuple[str, int], subprocess.Popen]:
+    """Spawn one listening TCP worker; → ((host, port), process).
+
+    The worker prints ``WORKER_LISTENING host:port`` after binding (port 0
+    → kernel-picked); we scan its stdout for the banner under a deadline so
+    a worker that dies at import surfaces as a TransportError with its exit
+    code, never a hang.  ``once`` ties the worker's lifetime to its first
+    connection (right for stub-owned workers); pass ``once=False`` for a
+    pod-like worker that keeps listening across router attach/detach."""
+    cmd = [sys.executable, "-m", "repro.serving.worker",
+           "--listen", f"{host}:{port}"]
+    if once:
+        cmd.append("--once")
+    proc = subprocess.Popen(cmd, env=worker_env(), stdout=subprocess.PIPE,
+                            text=True)
+    deadline = time.monotonic() + start_timeout_s
+    try:
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportError(
+                    f"worker did not report a listen address within "
+                    f"{start_timeout_s}s")
+            ready, _, _ = select.select([proc.stdout], [], [], remaining)
+            if not ready:
+                continue
+            line = proc.stdout.readline()
+            if not line:                   # EOF: the worker died at startup
+                raise TransportError(
+                    f"worker exited before listening "
+                    f"(rc={proc.wait(timeout=10)})")
+            if line.startswith(BANNER):
+                addr = line.split(None, 1)[1].strip()
+                h, _, p = addr.rpartition(":")
+                return (h, int(p)), proc
+    except Exception:
+        if proc.poll() is None:
+            proc.kill()
+        raise
+
+
+@dataclasses.dataclass
+class Fleet:
+    """N spawned workers: the addresses a router attaches to, plus the
+    process handles this stand-in scheduler owns."""
+
+    workers: list[tuple[tuple[str, int], subprocess.Popen]]
+
+    @property
+    def addrs(self) -> list[tuple[str, int]]:
+        return [addr for addr, _ in self.workers]
+
+    def close(self):
+        for _, proc in self.workers:
+            if proc.poll() is None:
+                proc.terminate()
+        for _, proc in self.workers:
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=10)
+
+    def __enter__(self) -> "Fleet":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def launch_fleet(n: int, *, host: str = "127.0.0.1") -> Fleet:
+    """Spawn ``n`` pod-like local TCP workers (``once=False`` — they keep
+    listening across router attach/detach) and return their addresses."""
+    workers = []
+    try:
+        for _ in range(n):
+            workers.append(spawn_worker(host, once=False))
+    except Exception:
+        Fleet(workers).close()
+        raise
+    return Fleet(workers)

@@ -20,6 +20,21 @@ surface; everything engine-shaped lives behind one of three backends:
                      the same ReplicaReport the collector already consumes;
                      the parent-side stub measures per-call transport
                      latency (EWMA) and stamps it on every report.
+  TcpReplica       — the same stub over a TCP connection: the worker is a
+                     remote pod (``python -m repro.serving.worker --listen
+                     host:port``) the router ATTACHES to rather than forks,
+                     with connect/handshake deadlines and keepalive.  When
+                     no address is given the stub spawns a local TCP worker
+                     (demos/CI) and owns its lifetime.
+
+Remote stubs share SocketReplica: a strict request/reply RPC stream where
+every message carries a sequence number the reply must echo — a duplicated,
+dropped, or reordered frame (fault injection, a broken proxy) surfaces as a
+typed TransportError desync instead of silently mismatched replies.  Per-
+tick submits are BATCHED into the step message (``batch_submits``, default
+on): a decode round already costs the slowest worker, so the per-request
+submit RPCs were the remaining transport term — one step RPC per round per
+replica replaces 1 + len(submits) messages.
 
 Protocol semantics the router relies on:
 
@@ -38,23 +53,26 @@ Protocol semantics the router relies on:
 """
 from __future__ import annotations
 
-import os
 import socket
 import subprocess
 import sys
 import time
-from pathlib import Path
 from typing import Protocol, runtime_checkable
 
+import numpy as np
+
 from repro.core.monitoring.collector import ReplicaReport
-from repro.serving.engine import EngineCore, ServingEngine
+from repro.serving.engine import EngineCore, ServingEngine, validate_request
+from repro.serving.fleet import spawn_worker, worker_env
 from repro.serving.scheduler import Request
 from repro.serving.transport import (
     Connection,
     TransportError,
     apply_request,
+    dial,
     encode_config,
     encode_request,
+    parse_addr,
 )
 
 
@@ -293,53 +311,66 @@ class ShardedReplica(InProcessReplica):
 
 
 # ---------------------------------------------------------------------------
-# multi-process backend: the engine behind a socket
+# remote backends: the engine behind a socket (subprocess pipe or TCP)
 # ---------------------------------------------------------------------------
 
 
-class ProcessReplica:
-    """Parent-side stub driving a worker-subprocess engine over the framed
-    JSON transport.  The stub tracks every in-system request so (a) routing
+class SocketReplica:
+    """Parent-side stub driving a remote engine over the framed JSON
+    transport.  The stub tracks every in-system request so (a) routing
     load is computed locally without an RPC per submit, and (b) a worker
     crash loses no submitter state — ``lost_requests()`` rewinds and
-    returns the originals for requeue."""
+    returns the originals for requeue.
 
-    kind = "proc"
+    The RPC stream is strict request/reply with per-message sequence
+    numbers: the reply must echo the request's ``seq``, so a duplicated or
+    dropped frame anywhere on the path surfaces as a TransportError desync
+    (→ the router reaps the replica) instead of every later reply landing
+    on the wrong call.  With ``batch_submits`` (default), submits buffer
+    parent-side and ride the next step message — one RPC per decode round
+    per replica; a malformed request still bounces at submit because the
+    stub runs the engine's own ``validate_request`` locally.
 
-    def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
-                 prefill_chunk: int | None = None, replica_id: int = 0,
+    Subclasses own transport establishment: ProcessReplica forks a worker
+    over a socketpair, TcpReplica dials a listening worker (and optionally
+    owns a locally-spawned one).  ``proc`` is the owned worker process, if
+    any — its exit is probed at submit so a silently-dead local worker
+    fails over immediately rather than a round later."""
+
+    kind = "socket"
+
+    def __init__(self, cfg, conn: Connection, *, slots: int, max_seq: int,
+                 seed: int = 0, prefill_chunk: int | None = None,
+                 replica_id: int = 0, proc: subprocess.Popen | None = None,
                  rpc_timeout_s: float = 120.0,
-                 init_timeout_s: float = 600.0):
+                 init_timeout_s: float = 600.0,
+                 batch_submits: bool = True):
         self.cfg = cfg
         self.slots = slots
+        self.max_seq = max_seq
         self.replica_id = replica_id
         self.failed = False
+        self._closed = False
+        self.batch_submits = batch_submits
         self._draining = False
         self.transport_ms = 0.0
+        self.rpc_count = 0                # frames sent (the batching metric)
+        self._seq = 0
         self._requests: dict[int, Request] = {}   # rid → submitter's object
+        self._outbox: list[dict] = []     # encoded submits awaiting a step
         self._queue_depth = 0
         self._active = 0
         self._step_pending = False
+        self._step_seq = -1
         self._stepped_once = False
         self._late: list[Request] = []    # completions drained out-of-band
+        self._rpc_timeout_s = rpc_timeout_s
         self._init_timeout_s = init_timeout_s
         self._lifetime_cache = {
             "latencies_ms": [], "total_tokens": 0, "total_completed": 0,
             "slot_utilization": 0.0, "queue_depth": 0}
-        self._rpc_timeout_s = rpc_timeout_s
-
-        parent_sock, child_sock = socket.socketpair()
-        child_sock.set_inheritable(True)
-        env = os.environ.copy()
-        src_root = str(Path(__file__).resolve().parents[2])
-        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
-                             if env.get("PYTHONPATH") else src_root)
-        self._proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.serving.worker",
-             str(child_sock.fileno())],
-            pass_fds=(child_sock.fileno(),), env=env, close_fds=True)
-        child_sock.close()
-        self._conn = Connection(parent_sock, timeout=rpc_timeout_s)
+        self._conn = conn
+        self._proc = proc
         # handshake: the worker builds the identical engine from the wire
         # (imports jax + jits lazily — give it a generous first deadline)
         self._rpc({"op": "init", "cfg": encode_config(cfg), "slots": slots,
@@ -354,7 +385,28 @@ class ProcessReplica:
     # folding those in would report model time as fabric overhead.
     _TRANSPORT_OPS = frozenset({"ping", "report", "lifetime", "resume"})
 
+    def _send(self, msg: dict) -> int:
+        """Stamp the next sequence number and put one frame on the wire."""
+        seq, self._seq = self._seq, self._seq + 1
+        msg["seq"] = seq
+        self.rpc_count += 1
+        self._conn.send(msg)
+        return seq
+
+    def _recv_reply(self, seq: int) -> dict:
+        reply = self._conn.recv()
+        if reply.get("seq") != seq:
+            raise TransportError(
+                f"replica {self.replica_id} protocol desync: expected reply "
+                f"seq {seq}, got {reply.get('seq')!r} (duplicated, dropped, "
+                f"or reordered frame)")
+        return reply
+
     def _rpc(self, msg: dict, *, timeout: float | None = None) -> dict:
+        if self._closed:
+            # a retired replica still answers lifetime() from its mirror —
+            # the raise must be typed, not an EBADF from the dead socket
+            raise TransportError(f"replica {self.replica_id} is closed")
         if self.failed:
             raise TransportError(f"replica {self.replica_id} is lost")
         if self._step_pending:
@@ -368,8 +420,8 @@ class ProcessReplica:
                                    else self._rpc_timeout_s)
         t0 = time.perf_counter()
         try:
-            self._conn.send(msg)
-            reply = self._conn.recv()
+            seq = self._send(msg)
+            reply = self._recv_reply(seq)
         except TransportError:
             self._mark_failed()
             raise
@@ -387,21 +439,42 @@ class ProcessReplica:
 
     def _mark_failed(self):
         self.failed = True
+        self._step_pending = False
         self._conn.close()
-        if self._proc.poll() is None:
-            self._proc.kill()
-        try:
-            self._proc.wait(timeout=10)
-        except subprocess.TimeoutExpired:
-            # un-reaped zombie; do not let the reap race replace the
-            # TransportError the caller's failover path is matching on
-            pass
+        if self._proc is not None:
+            if self._proc.poll() is None:
+                self._proc.kill()
+            try:
+                self._proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                # un-reaped zombie; do not let the reap race replace the
+                # TransportError the caller's failover path is matching on
+                pass
 
     # ------------------------------------------------------------- protocol
 
     def submit(self, request: Request, now: float = 0.0):
-        self._rpc({"op": "submit", "request": encode_request(request),
-                   "now": now})
+        if self.failed:
+            raise TransportError(f"replica {self.replica_id} is lost")
+        if self._proc is not None and self._proc.poll() is not None:
+            # owned worker died between steps: one cheap probe turns a
+            # doomed buffered submit into an immediate router failover
+            self._mark_failed()
+            raise TransportError(
+                f"replica {self.replica_id} worker exited "
+                f"(rc={self._proc.returncode})")
+        if self.batch_submits:
+            # the submit rides the NEXT step message (one RPC per round,
+            # not per request); the engine's own validation runs locally so
+            # a malformed request still bounces at the submit call
+            validate_request(self.cfg, self.max_seq,
+                             np.asarray(request.prompt).reshape(-1),
+                             frames=request.frames)
+            self._outbox.append({"request": encode_request(request),
+                                 "now": now})
+        else:
+            self._rpc({"op": "submit", "request": encode_request(request),
+                       "now": now})
         if request.t_submit is None:      # mirror the worker-side stamp
             request.t_submit = now
         self._requests[request.rid] = request
@@ -414,7 +487,7 @@ class ProcessReplica:
         """Fire the step message without waiting for the reply — the router
         begins the round on every replica first, so N workers decode
         concurrently and the fleet's round costs max(worker time), not the
-        sum."""
+        sum.  Buffered submits flush inside this one message."""
         if self._step_pending:
             # an unread reply from an abandoned round (the driver caught an
             # error mid-collection): drain it — dropping it would desync the
@@ -422,13 +495,16 @@ class ProcessReplica:
             self._late.extend(self.finish_step())
         if self.failed:
             return
+        msg: dict = {"op": "step", "now": now}
+        if self._outbox:
+            msg["submits"], self._outbox = self._outbox, []
         # jax.jit is lazy: the worker's prefill/decode COMPILE inside its
         # first step, not inside init — the first round gets the init
         # deadline, every later round the (much tighter) RPC one
         self._conn.sock.settimeout(self._rpc_timeout_s if self._stepped_once
                                    else self._init_timeout_s)
         try:
-            self._conn.send({"op": "step", "now": now})
+            self._step_seq = self._send(msg)
             self._step_pending = True
         except TransportError:
             self._mark_failed()
@@ -439,7 +515,7 @@ class ProcessReplica:
             return out
         self._step_pending = False
         try:
-            reply = self._conn.recv()
+            reply = self._recv_reply(self._step_seq)
         except TransportError:
             self._mark_failed()
             return out
@@ -459,7 +535,22 @@ class ProcessReplica:
             # recorded parent-side) — completions are slim records, so there
             # is no request to reconstruct; drop it
         self._mirror_lifetime(fresh, reply)   # ONLY this reply's — drained
-        return out + fresh                    # _late ones were mirrored then
+        errs = reply.get("submit_errors")     # _late ones were mirrored then
+        if errs:
+            # defense in depth: the stub validated these locally, so a
+            # worker-side rejection means the two sides disagree — drop the
+            # rejected requests from tracking (they are not on the worker)
+            # and surface the bug; completions already in hand are parked
+            # for redelivery, not lost
+            for e in errs:
+                orig = self._requests.pop(int(e["rid"]), None)
+                if orig is not None:
+                    orig.reset_generation()
+            self._late = out + fresh
+            raise RuntimeError(
+                f"worker {self.replica_id} rejected {len(errs)} batched "
+                f"submit(s): {errs}")
+        return out + fresh
 
     def _mirror_lifetime(self, completed: list[Request], reply: dict):
         """Keep a parent-side running copy of the worker's lifetime stats —
@@ -502,20 +593,28 @@ class ProcessReplica:
 
     def evacuate(self) -> list[Request]:
         self._draining = True
+        # buffered submits never reached the worker — recover them locally
+        # (the evacuate RPC can only return what the worker has)
+        local: list[Request] = []
+        outbox, self._outbox = self._outbox, []
+        for d in outbox:
+            orig = self._requests.pop(int(d["request"]["rid"]), None)
+            if orig is not None:
+                orig.reset_generation()
+                local.append(orig)
         if self.failed:
-            return self.lost_requests()
+            return local + self.lost_requests()
         try:
             reply = self._rpc({"op": "evacuate"})
         except TransportError:
-            return self.lost_requests()
-        out = []
+            return local + self.lost_requests()
         for rid in reply["rids"]:
             orig = self._requests.pop(int(rid), None)
             if orig is None:
                 continue
             orig.reset_generation()
-            out.append(orig)
-        return out
+            local.append(orig)
+        return local
 
     def resume(self):
         self._draining = False
@@ -526,6 +625,7 @@ class ProcessReplica:
                 pass
 
     def lost_requests(self) -> list[Request]:
+        self._outbox.clear()           # their originals are in _requests too
         out = []
         for req in self._requests.values():
             req.reset_generation()
@@ -534,15 +634,22 @@ class ProcessReplica:
         return out
 
     def close(self):
-        if not self.failed:
+        if self._closed:
+            return
+        self._closed = True
+        if not self.failed and self._proc is not None:
+            # the stub owns the worker's lifetime → ask it to exit.  An
+            # ATTACHED worker (proc is None) is somebody else's pod: just
+            # drop the connection — it returns to accept for the next
+            # router (a detach must not shut the pod down).
             try:
                 self._conn.sock.settimeout(5.0)
-                self._conn.send({"op": "shutdown"})
+                self._send({"op": "shutdown"})
                 self._conn.recv()
             except (TransportError, OSError):
                 pass
         self._conn.close()
-        if self._proc.poll() is None:
+        if self._proc is not None and self._proc.poll() is None:
             self._proc.terminate()
             try:
                 self._proc.wait(timeout=10)
@@ -552,8 +659,9 @@ class ProcessReplica:
 
     def __del__(self):
         try:
-            if self._proc.poll() is None:
-                self._proc.kill()
+            proc = getattr(self, "_proc", None)
+            if proc is not None and proc.poll() is None:
+                proc.kill()
         except Exception:
             pass
 
@@ -562,9 +670,9 @@ class ProcessReplica:
     @property
     def load(self) -> float:
         """In-system work over slot capacity.  len(_requests) is exactly the
-        engine's (active + queued) at every quiescent point — submissions
-        and completions both pass through this stub synchronously — so
-        routing behaves bit-identically to the in-process backend."""
+        engine's (active + queued + about-to-be-queued) at every quiescent
+        point — submissions and completions both pass through this stub —
+        so routing behaves bit-identically to the in-process backend."""
         return len(self._requests) / max(self.slots, 1)
 
     @property
@@ -586,3 +694,72 @@ class ProcessReplica:
     @draining.setter
     def draining(self, value: bool):
         self._draining = bool(value)
+
+
+class ProcessReplica(SocketReplica):
+    """SocketReplica over a forked worker subprocess (single-host): the
+    transport is an inherited socketpair, so there is no listen/dial step
+    and the worker's lifetime is owned by the stub."""
+
+    kind = "proc"
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
+                 prefill_chunk: int | None = None, replica_id: int = 0,
+                 rpc_timeout_s: float = 120.0,
+                 init_timeout_s: float = 600.0,
+                 batch_submits: bool = True):
+        parent_sock, child_sock = socket.socketpair()
+        child_sock.set_inheritable(True)
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.serving.worker",
+             str(child_sock.fileno())],
+            pass_fds=(child_sock.fileno(),), env=worker_env(), close_fds=True)
+        child_sock.close()
+        super().__init__(cfg, Connection(parent_sock, timeout=rpc_timeout_s),
+                         slots=slots, max_seq=max_seq, seed=seed,
+                         prefill_chunk=prefill_chunk, replica_id=replica_id,
+                         proc=proc, rpc_timeout_s=rpc_timeout_s,
+                         init_timeout_s=init_timeout_s,
+                         batch_submits=batch_submits)
+
+
+class TcpReplica(SocketReplica):
+    """SocketReplica over TCP: the worker is a listening pod the router
+    ATTACHES to (``addr``), possibly on another host — or, when no address
+    is given, a local worker spawned on a kernel-picked port (demos/CI;
+    the stub then owns the worker process).  Connect and init handshake
+    each get their own deadline; the socket carries keepalive so a
+    vanished peer surfaces as an error, never a wedged fleet."""
+
+    kind = "tcp"
+
+    def __init__(self, cfg, *, slots: int, max_seq: int,
+                 addr: str | tuple[str, int] | None = None, seed: int = 0,
+                 prefill_chunk: int | None = None, replica_id: int = 0,
+                 rpc_timeout_s: float = 120.0,
+                 init_timeout_s: float = 600.0,
+                 connect_timeout_s: float = 10.0,
+                 batch_submits: bool = True):
+        proc = None
+        if addr is None:
+            addr, proc = spawn_worker()
+        if isinstance(addr, str):
+            addr = parse_addr(addr)
+        self.addr = (addr[0], int(addr[1]))
+        try:
+            conn = dial(*self.addr, connect_timeout=connect_timeout_s,
+                        timeout=rpc_timeout_s)
+            super().__init__(cfg, conn, slots=slots, max_seq=max_seq,
+                             seed=seed, prefill_chunk=prefill_chunk,
+                             replica_id=replica_id, proc=proc,
+                             rpc_timeout_s=rpc_timeout_s,
+                             init_timeout_s=init_timeout_s,
+                             batch_submits=batch_submits)
+        except TransportError:
+            # dial or handshake died before the stub owned the worker's
+            # lifetime — do not leak a locally-spawned process
+            if proc is not None and proc.poll() is None:
+                proc.kill()
+            raise
+
+

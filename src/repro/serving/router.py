@@ -3,9 +3,10 @@
 The router is written purely against the Replica protocol
 (serving/replica.py) — it never touches an engine, a scheduler, or a slot
 array.  Whether a replica is an in-process object, one engine sharded over a
-device mesh, or a worker subprocess on the far side of a socket is a
-factory decision (``from_topology``); the routing, scaling, drain/park, and
-straggler-eviction logic below is transport-agnostic.
+device mesh, a worker subprocess on the far side of a socketpair, or a TCP
+pod on another host is a factory decision (``from_topology``); the routing,
+scaling, drain/park, and straggler-eviction logic below is
+transport-agnostic.
 
 The router is the surface the control plane drives: ``scale_to(n)`` is the
 actuator for DynamicScaler / PredictiveAllocator decisions, and
@@ -40,7 +41,7 @@ from repro.serving.replica import (
 from repro.serving.scheduler import Request
 from repro.serving.transport import TransportError
 
-TOPOLOGIES = ("inproc", "sharded", "proc")
+TOPOLOGIES = ("inproc", "sharded", "proc", "tcp")
 
 
 def _coerce(obj) -> Replica:
@@ -85,8 +86,9 @@ class ReplicaRouter:
     def from_topology(cls, cfg, topology: str, *, slots: int, max_seq: int,
                       seed: int = 0, prefill_chunk: int | None = None,
                       n_replicas: int = 1, max_replicas: int = 8,
-                      mesh=None) -> "ReplicaRouter":
-        """Build the fleet for one of the three replica topologies.
+                      mesh=None, addrs=None,
+                      batch_submits: bool = True) -> "ReplicaRouter":
+        """Build the fleet for one of the four replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
         sharded — each replica spans the local device mesh (slot axis
@@ -95,6 +97,14 @@ class ReplicaRouter:
         proc    — each replica is a worker subprocess; workers re-derive
                   identical params from the shared seed, so token streams
                   match the in-process topology bit-for-bit.
+        tcp     — each replica dials a listening TCP worker: ``addrs``
+                  lists pre-started pods to attach to (cross-host);
+                  replica ids past the list spawn local workers on
+                  kernel-picked ports, so scale-up keeps working in a demo
+                  without a pod scheduler.
+
+        ``batch_submits`` (proc/tcp) folds per-tick submits into the step
+        RPC — one message per round per replica instead of one per request.
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
@@ -105,7 +115,30 @@ class ReplicaRouter:
             def factory(replica_id: int):
                 return ProcessReplica(cfg, slots=slots, max_seq=max_seq,
                                       seed=seed, prefill_chunk=prefill_chunk,
-                                      replica_id=replica_id)
+                                      replica_id=replica_id,
+                                      batch_submits=batch_submits)
+        elif topology == "tcp":
+            import warnings
+
+            from repro.serving.replica import TcpReplica
+            addr_list = list(addrs or [])
+
+            def factory(replica_id: int):
+                addr = (addr_list[replica_id]
+                        if replica_id < len(addr_list) else None)
+                if addr is None and addr_list:
+                    # the operator gave an explicit pod list — a scale-up or
+                    # eviction replacement past it silently degrading to a
+                    # router-host worker would be invisible capacity drift
+                    warnings.warn(
+                        f"tcp replica {replica_id} exceeds the {len(addr_list)}"
+                        f"-pod attach list; spawning a LOCAL worker on the "
+                        f"router host", RuntimeWarning, stacklevel=2)
+                return TcpReplica(cfg, slots=slots, max_seq=max_seq,
+                                  addr=addr, seed=seed,
+                                  prefill_chunk=prefill_chunk,
+                                  replica_id=replica_id,
+                                  batch_submits=batch_submits)
         elif topology == "sharded":
             from repro.serving.replica import (
                 ShardedReplica, make_sharded_decode,
@@ -179,7 +212,14 @@ class ReplicaRouter:
               replace: bool = True) -> bool:
         """Remove one replica (straggler eviction / failure reaping): its
         requests are requeued through the survivors and — when ``replace``
-        — a fresh replica restores the actuated count."""
+        — a fresh replica restores the actuated count.
+
+        The victim RETIRES, it does not park: parking would hand the same
+        slow worker straight back to the next scale-up or eviction
+        replacement (``_add_replica`` pops parked replicas LIFO), churning
+        evict→revive forever.  Parking is for scale_to downscale (healthy
+        warm-revive candidates); an evicted replica was condemned for
+        cause."""
         rep = next((r for r in self.replicas if r.replica_id == replica_id),
                    None)
         if rep is None:
@@ -187,16 +227,19 @@ class ReplicaRouter:
         displaced = rep.evacuate()
         displaced.extend(rep.lost_requests())
         self.replicas.remove(rep)
-        # replacement first, THEN park the victim — otherwise _add_replica
-        # would unpark the very straggler being evicted
+        # replacement first, THEN retire the victim (the order matters for
+        # replica_count and keeps this path symmetric with scale_to's)
         if replace and self.replica_count < self._target:
             self._add_replica()
+        rep.close()
+        self._retired.append(rep)
         if rep.failed:
-            rep.close()
-            self._retired.append(rep)
             self._dying.append((0, rep))   # crash report, then tombstone
         else:
-            self._parked.append(rep)
+            # healthy straggler: one clean tombstone prunes its collector
+            # latency EWMA, so the retired id drops off the straggler feed
+            # instead of being re-flagged (and re-proposed) forever
+            self._dying.append((1, rep))
         for req in displaced:
             self.submit(req, now=now)
         return True
@@ -331,6 +374,10 @@ class ReplicaRouter:
             "transport_ms": float(np.mean(
                 [r.transport_ms for r in self.replicas])) if self.replicas
             else 0.0,
+            # frames this fleet put on the wire over its lifetime (0 for
+            # in-process fleets) — the submit-batching benchmark metric
+            "rpc_count": sum(getattr(r, "rpc_count", 0) for r in
+                             self.replicas + self._parked + self._retired),
             "replicas": self.replica_count,
         }
 

@@ -10,7 +10,19 @@ identical to one held in-process.  Design points:
   whole frame arrives (kernel buffers split frames arbitrarily — a partial
   read is the common case under load, not an error), and raises
   ``TransportError`` on EOF so a dead peer surfaces as a catchable failure,
-  never a hang.
+  never a hang.  ``MAX_FRAME`` is enforced on BOTH ends: the receiver
+  rejects an oversized declared length before allocating for it, and the
+  sender refuses to emit a frame the peer is guaranteed to drop the
+  connection over.
+
+* **Transport-agnostic frames, TCP endpoints.**  ``Connection`` works over
+  any stream socket (ProcessReplica rides a socketpair).  For cross-host
+  replicas, ``Listener``/``dial`` provide the TCP endpoints: a worker binds
+  and accepts (``worker.py --listen host:port``), the router dials with a
+  connect deadline.  Both ends get TCP keepalive (a silently-vanished peer
+  eventually surfaces as an error instead of a permanently-stuck fleet)
+  and TCP_NODELAY (frames are small RPCs; Nagle would add 40 ms stalls to
+  every decode round).
 
 * **JSON, not pickle.**  The worker executes nothing it receives; a replica
   peer is a *service*, not a code-injection channel.  Python's JSON codec
@@ -51,11 +63,22 @@ class TransportError(ConnectionError):
 def pack_frame(obj) -> bytes:
     payload = json.dumps(obj, allow_nan=True,
                          separators=(",", ":")).encode("utf-8")
+    if len(payload) > MAX_FRAME:
+        # the receiver would kill the connection over this frame anyway —
+        # reject it at the sender, where the caller can still handle it
+        raise TransportError(
+            f"refusing to send oversized frame ({len(payload)} bytes "
+            f"> MAX_FRAME {MAX_FRAME})")
     return _LEN.pack(len(payload)) + payload
 
 
 def unpack_payload(payload: bytes):
-    return json.loads(payload.decode("utf-8"))
+    try:
+        return json.loads(payload.decode("utf-8"))
+    except (UnicodeDecodeError, ValueError) as e:
+        # garbage on the wire is a peer we can no longer trust to frame
+        # correctly — surface it as the same typed failure as EOF/reset
+        raise TransportError(f"malformed frame payload: {e}") from e
 
 
 def read_exact(sock: socket.socket, n: int) -> bytes:
@@ -101,6 +124,82 @@ class Connection:
             self.sock.close()
         except OSError:
             pass
+
+
+# ------------------------------------------------------------ TCP endpoints
+
+DEFAULT_CONNECT_TIMEOUT_S = 10.0
+
+
+def parse_addr(addr: str) -> tuple[str, int]:
+    """"host:port" → (host, port).  Port 0 means "kernel picks"."""
+    host, sep, port = addr.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(f"expected host:port, got {addr!r}")
+    return host or "127.0.0.1", int(port)
+
+
+def _tune_tcp(sock: socket.socket):
+    """Frames are small RPCs on a strict request/reply stream: Nagle's 40 ms
+    coalescing stall would dominate a decode round, and a silently-vanished
+    peer must eventually error out instead of wedging the fleet."""
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+
+
+class Listener:
+    """One bound TCP accept socket; ``accept()`` yields framed Connections.
+
+    Binding to port 0 lets the kernel pick — ``self.port`` reports the
+    realized port (workers print it so a parent/script can attach)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 backlog: int = 16):
+        self.sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.sock.bind((host, port))
+        self.sock.listen(backlog)
+        self.host, self.port = self.sock.getsockname()[:2]
+
+    @property
+    def addr(self) -> tuple[str, int]:
+        return (self.host, self.port)
+
+    def accept(self, timeout: float | None = None, *,
+               conn_timeout: float | None = None) -> Connection:
+        """Wait for one peer; raises TransportError on deadline/closure."""
+        try:
+            self.sock.settimeout(timeout)   # EBADF once close() ran — typed
+            peer, _ = self.sock.accept()
+        except (socket.timeout, TimeoutError) as e:
+            raise TransportError(f"accept timed out: {e}") from e
+        except OSError as e:
+            raise TransportError(f"accept failed: {e}") from e
+        _tune_tcp(peer)
+        return Connection(peer, timeout=conn_timeout)
+
+    def close(self):
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def dial(host: str, port: int, *,
+         connect_timeout: float = DEFAULT_CONNECT_TIMEOUT_S,
+         timeout: float | None = None) -> Connection:
+    """Connect to a listening worker; refused / unreachable / slow connects
+    all surface as TransportError within the connect deadline."""
+    try:
+        sock = socket.create_connection((host, port), timeout=connect_timeout)
+    except (socket.timeout, TimeoutError) as e:
+        raise TransportError(
+            f"connect to {host}:{port} timed out after "
+            f"{connect_timeout}s") from e
+    except OSError as e:
+        raise TransportError(f"connect to {host}:{port} failed: {e}") from e
+    _tune_tcp(sock)
+    return Connection(sock, timeout=timeout)
 
 
 # --------------------------------------------------------------------- codecs

@@ -1,39 +1,58 @@
 """Replica worker: a ServingEngine driven over the socket transport.
 
-``python -m repro.serving.worker <fd>`` serves one engine on an inherited
-socketpair fd (ProcessReplica spawns it with ``pass_fds``).  The loop is a
-strict request/reply RPC: every message is answered exactly once, in order,
-so the parent can measure transport latency per call and a missing reply
-always means the worker is gone (never "still thinking about an older
-message").
+Two ways to become a worker:
+
+  ``python -m repro.serving.worker <fd>``
+      serve one engine on an inherited socketpair fd (ProcessReplica
+      spawns it with ``pass_fds`` — single-host).
+  ``python -m repro.serving.worker --listen host:port``
+      bind a TCP listener (port 0 → kernel-picked) and print
+      ``WORKER_LISTENING host:port`` so a parent or script can attach.
+      The worker is a pod: a router DIALS it (TcpReplica), and when that
+      router goes away the worker returns to accept for the next one —
+      unless started ``--once``, which ties its lifetime to the first
+      connection (stub-owned local workers).
+
+The loop is a strict request/reply RPC: every message is answered exactly
+once, in order, and the reply echoes the request's ``seq`` — so the parent
+can measure transport latency per call, a missing reply always means the
+worker is gone (never "still thinking about an older message"), and a
+duplicated or dropped frame surfaces parent-side as a seq desync.
 
 Ops mirror the Replica protocol 1:1 (see serving/replica.py):
 
   init      — build the engine from an encoded ModelConfig (the handshake)
   submit    — enqueue one request (validation errors bounce back typed)
-  step      — one scheduling round; replies completed requests + queue state
+  step      — one scheduling round; batched submits (``"submits": [...]``)
+              are enqueued first, so one message per round replaces one per
+              request; replies completed requests + queue state
   report    — drain the metric window for one ReplicaReport
   lifetime  — lifetime accumulators for fleet-level metrics
   evacuate  — preempt + return every queued/in-flight request (downscale)
   resume    — clear the draining flag (warm revive)
-  shutdown  — clean exit
+  shutdown  — clean exit (also ends a --listen worker's accept loop)
 
 Engine exceptions are caught per-message and replied as
 ``{"error": ..., "etype": ...}`` — a bad request must not kill the worker
-that other requests are mid-generation on.
+that other requests are mid-generation on.  A rejected *batched* submit is
+replied per-request (``"submit_errors"``) so one bad request cannot take
+the round's good submits down with it.
 """
 from __future__ import annotations
 
+import argparse
 import socket
 import sys
 import traceback
 
 from repro.serving.transport import (
     Connection,
+    Listener,
     TransportError,
     decode_config,
     decode_request,
     encode_completion,
+    parse_addr,
 )
 
 
@@ -57,13 +76,27 @@ def handle(engine, msg: dict):
         engine.submit(decode_request(msg["request"]), now=msg.get("now", 0.0))
         return {"ok": True}
     if op == "step":
+        submit_errors = []
+        for d in msg.get("submits", ()):
+            # enqueue BEFORE the round runs — identical ordering to the
+            # unbatched flow, where each submit RPC preceded the step
+            try:
+                engine.submit(decode_request(d["request"]),
+                              now=d.get("now", 0.0))
+            except Exception as e:     # bounce per-request, run the round
+                submit_errors.append({"rid": d["request"].get("rid"),
+                                      "error": str(e),
+                                      "etype": type(e).__name__})
         completed = engine.step(now=msg.get("now"))
-        return {"completed": [encode_completion(r) for r in completed],
-                "queue_depth": engine.scheduler.depth,
-                "active": int(engine.active.sum()),
-                # one float so the parent's lifetime mirror (crash-proof
-                # fleet accounting) tracks occupancy too, not just counts
-                "slot_utilization": float(engine.stats.slot_utilization)}
+        reply = {"completed": [encode_completion(r) for r in completed],
+                 "queue_depth": engine.scheduler.depth,
+                 "active": int(engine.active.sum()),
+                 # one float so the parent's lifetime mirror (crash-proof
+                 # fleet accounting) tracks occupancy too, not just counts
+                 "slot_utilization": float(engine.stats.slot_utilization)}
+        if submit_errors:
+            reply["submit_errors"] = submit_errors
+        return reply
     if op == "report":
         return {"window": engine.stats.drain_window()}
     if op == "lifetime":
@@ -79,16 +112,20 @@ def handle(engine, msg: dict):
     raise RuntimeError(f"unknown op {op!r}")
 
 
-def serve(conn: Connection) -> int:
-    engine = None
+def serve(conn: Connection, engine=None) -> str:
+    """Drive one connection to completion; → "eof" (peer went away — a
+    --listen worker returns to accept) or "shutdown" (exit the process)."""
     while True:
         try:
             msg = conn.recv()
         except TransportError:
-            return 0                      # parent went away: clean exit
+            return "eof"
         if msg.get("op") == "shutdown":
-            conn.send({"ok": True})
-            return 0
+            try:
+                conn.send({"ok": True, "seq": msg.get("seq")})
+            except TransportError:
+                pass
+            return "shutdown"
         try:
             reply = handle(engine, msg)
             engine = reply.pop("engine", engine)
@@ -96,14 +133,53 @@ def serve(conn: Connection) -> int:
             reply = {"error": f"{e}",
                      "etype": type(e).__name__,
                      "trace": traceback.format_exc(limit=8)}
-        conn.send(reply)
+        reply["seq"] = msg.get("seq")     # the desync-detection echo
+        try:
+            conn.send(reply)
+        except TransportError:
+            # the peer detached mid-round (router torn down with a step in
+            # flight): same as EOF on recv — a --listen pod must go back to
+            # accept, not die with the reply in hand
+            return "eof"
+
+
+def serve_listener(listener: Listener, *, once: bool = False) -> int:
+    """Accept loop for a pod-like worker: one connection at a time; EOF
+    sends us back to accept (the next router re-inits its own engine),
+    shutdown — or ``once`` — ends the process."""
+    try:
+        while True:
+            conn = listener.accept()
+            reason = serve(conn)
+            conn.close()
+            if reason == "shutdown" or once:
+                return 0
+    finally:
+        listener.close()
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
-    fd = int(argv[0])
-    sock = socket.socket(fileno=fd)
-    return serve(Connection(sock))
+    ap = argparse.ArgumentParser(prog="repro.serving.worker")
+    ap.add_argument("fd", nargs="?", type=int,
+                    help="inherited socketpair fd (ProcessReplica mode)")
+    ap.add_argument("--listen", metavar="HOST:PORT",
+                    help="bind a TCP listener instead (port 0 = kernel-"
+                         "picked); prints WORKER_LISTENING host:port")
+    ap.add_argument("--once", action="store_true",
+                    help="exit after the first connection ends")
+    args = ap.parse_args(argv)
+    if args.listen:
+        host, port = parse_addr(args.listen)
+        listener = Listener(host, port)
+        print(f"WORKER_LISTENING {listener.host}:{listener.port}",
+              flush=True)
+        return serve_listener(listener, once=args.once)
+    if args.fd is None:
+        ap.error("need an inherited fd or --listen host:port")
+    sock = socket.socket(fileno=args.fd)
+    serve(Connection(sock))
+    return 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,105 @@
+"""Seeded chaos soak (the ``chaos`` marker): a mixed proc+TCP fleet under
+the closed-loop wiring with scripted worker kills and straggler injections.
+The invariant under ALL of it: every admitted request completes exactly
+once, the fleet's lifetime counters balance against what the driver
+collected, and every fault shows up in the collector — crashes as
+straggler flags, evictions as actuated replacements.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.scaling.scaler import EvictionPolicy
+from repro.serving import ProcessReplica, ReplicaRouter, Request, TcpReplica
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+SLOTS, MAX_SEQ, GEN_LEN = 2, 16, 4
+N_REQUESTS = 14
+KILL_TICKS = (4, 9)            # scripted worker kills (any live victim)
+STRAGGLE_TICKS = (6, 7)        # injected straggler windows (K=2 → evict)
+
+
+def _lat_report(rid, tick, lat_ms):
+    return ReplicaReport(replica_id=rid, tick=tick,
+                         latency_ms_samples=[lat_ms] * 4, n_requests=4,
+                         n_errors=0, flop_util=0.5, hbm_util=0.5,
+                         ici_util=0.0, mem_frac=0.5, queue_depth=0)
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
+    def factory(rid):
+        cls = ProcessReplica if rid % 2 == 0 else TcpReplica
+        return cls(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                   replica_id=rid)
+
+    router = ReplicaRouter(factory, n_replicas=3, max_replicas=4)
+    collector = MetricsCollector(straggler_factor=1.5)
+    policy = EvictionPolicy(k_windows=2)
+    rng = np.random.default_rng(42)
+    reqs = [Request(rid=i, prompt=rng.integers(
+                3, CFG.vocab, size=5).astype(np.int32), gen_len=GEN_LEN)
+            for i in range(N_REQUESTS)]
+
+    done, killed, evicted_ids = [], [], []
+    submitted, now, tick = 0, 0.0, 0
+    try:
+        while (len(done) < N_REQUESTS or submitted < N_REQUESTS) \
+                and tick < 120:
+            tick += 1
+            now += 1.0
+            for _ in range(2):                     # staggered admissions
+                if submitted < N_REQUESTS:
+                    router.submit(reqs[submitted], now=now)
+                    submitted += 1
+            if tick in KILL_TICKS:                 # scripted chaos: SIGKILL
+                victim = router.replicas[-1]
+                killed.append(victim.replica_id)
+                victim._proc.kill()
+                victim._proc.wait(timeout=30)
+            done.extend(router.step(now))
+            for rep in router.reports(tick):
+                collector.submit(rep)
+            if tick in STRAGGLE_TICKS:
+                # scripted straggler: one live replica "goes slow" (injected
+                # latency evidence), the rest stay at baseline
+                live = sorted(r.replica_id for r in router.serving_replicas)
+                slow, rest = live[0], live[1:]
+                collector.submit(_lat_report(slow, tick, 5000.0))
+                for rid in rest:
+                    collector.submit(_lat_report(rid, tick, 100.0))
+            evicted_ids.extend(router.evict_stragglers(
+                policy.update(collector.stragglers(),
+                              router.replica_count), now=now))
+
+        # every admitted request completed EXACTLY once, fully generated
+        counts = Counter(r.rid for r in done)
+        assert sorted(counts) == list(range(N_REQUESTS))
+        assert all(c == 1 for c in counts.values()), counts
+        assert all(len(r.tokens_out) == GEN_LEN for r in done)
+
+        # the chaos actually happened: both kills landed, and the injected
+        # straggler was evicted by the K-consecutive-windows policy
+        assert len(killed) == 2
+        assert len(evicted_ids) >= 1
+        assert not set(evicted_ids) & set(killed)  # evicted ≠ crash-reaped
+
+        # fleet lifetime counters balance against the driver's collection
+        m = router.metrics()
+        assert m["completed"] == N_REQUESTS
+        assert m["completed_tokens"] == sum(len(r.tokens_out) for r in done)
+        assert m["replicas"] == 3                  # kills + evictions were
+        #                                            replaced, not absorbed
+
+        # and the control plane SAW the faults: each killed replica's crash
+        # report reached the collector as a straggler flag at some point
+        flagged_ever = {rid for rid, buf in collector.reports.items()
+                        if any(r.n_errors > 0 for r in buf)}
+        assert set(killed) <= flagged_ever
+    finally:
+        router.close()

@@ -1,0 +1,160 @@
+"""The closed loop's straggler-eviction policy: flag → sustain → actuate.
+
+Covers the policy's streak arithmetic (K-1 flagged windows → no action, K →
+evict; recovery resets), the collector interplay (an idle window prunes the
+EWMA, so a recovered replica un-flags and its streak dies with it), the
+1-replica-fleet regression (never evicted to zero), and the end-to-end
+actuation path run_closed_loop drives: policy → router.evict_stragglers →
+evacuate + requeue + replace.
+"""
+import numpy as np
+import pytest
+
+from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
+from repro.core.scaling.scaler import EvictionPolicy
+from repro.serving import ReplicaRouter, Request
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+
+
+def _report(rid, tick, lat, n):
+    return ReplicaReport(replica_id=rid, tick=tick, latency_ms_samples=lat,
+                         n_requests=n, n_errors=0, flop_util=0.5,
+                         hbm_util=0.5, ici_util=0.0, mem_frac=0.5,
+                         queue_depth=0)
+
+
+# ------------------------------------------------------------ policy streaks
+
+
+def test_k_minus_one_flagged_windows_take_no_action():
+    policy = EvictionPolicy(k_windows=3)
+    assert policy.update([7], fleet_size=4) == []
+    assert policy.update([7], fleet_size=4) == []
+    assert policy.streak(7) == 2
+
+
+def test_kth_consecutive_window_evicts_and_resets_the_streak():
+    policy = EvictionPolicy(k_windows=3)
+    policy.update([7], 4), policy.update([7], 4)
+    assert policy.update([7], fleet_size=4) == [7]
+    assert policy.streak(7) == 0          # the replacement starts clean
+    assert policy.update([7], fleet_size=4) == []   # needs K fresh windows
+
+
+def test_recovery_resets_the_streak():
+    policy = EvictionPolicy(k_windows=2)
+    assert policy.update([5], 3) == []
+    assert policy.update([], 3) == []     # one clean window → forgiven
+    assert policy.streak(5) == 0
+    assert policy.update([5], 3) == []    # back to square one
+    assert policy.update([5], 3) == [5]
+
+
+def test_one_replica_fleet_is_never_evicted_to_zero():
+    """Regression: with min_fleet replicas left there is nowhere to drain
+    to while a replacement warms — the policy must sit on its hands no
+    matter how long the streak runs."""
+    policy = EvictionPolicy(k_windows=2)
+    for _ in range(10):
+        assert policy.update([0], fleet_size=1) == []
+    # headroom appears (scale-up) → the sustained straggler goes at once
+    assert policy.update([0], fleet_size=2) == [0]
+
+
+def test_eviction_budget_caps_simultaneous_evictions():
+    """Three replicas all flagged K windows in a 3-fleet with min_fleet=1:
+    at most two may go in one window — the fleet is never emptied in a
+    single actuation even though each eviction is replaced."""
+    policy = EvictionPolicy(k_windows=1)
+    out = policy.update([0, 1, 2], fleet_size=3)
+    assert len(out) == 2
+
+
+# -------------------------------------------- collector EWMA recovery path
+
+
+def test_recovered_replica_unflags_via_collector_ewma_prune():
+    """An evicted→parked straggler keeps reporting empty windows; the
+    collector prunes its latency EWMA, so the straggler feed drops it and
+    the policy streak resets — revival does not re-condemn it."""
+    c = MetricsCollector(straggler_factor=1.5)
+    policy = EvictionPolicy(k_windows=3)
+    for tick in range(2):                 # 2 of the 3 required windows
+        for rid in range(4):
+            lat = [400.0] * 8 if rid == 3 else [100.0] * 8
+            c.submit(_report(rid, tick, lat, 8))
+        assert policy.update(c.stragglers(), fleet_size=4) == []
+    assert policy.streak(3) == 2
+    c.submit(_report(3, 2, [], 0))        # idle window: EWMA pruned
+    assert 3 not in c.stragglers()
+    assert policy.update(c.stragglers(), fleet_size=4) == []
+    assert policy.streak(3) == 0          # recovery observed by the policy
+    c.submit(_report(3, 3, [105.0] * 8, 8))   # revived and healthy
+    assert policy.update(c.stragglers(), fleet_size=4) == []
+
+
+# ------------------------------------------------------- actuation end-to-end
+
+
+def test_policy_actuates_router_eviction_with_requeue_and_replace():
+    """The exact wiring run_closed_loop drives each tick: collector feed →
+    policy.update → router.evict_stragglers.  The Kth window evicts the
+    straggler, its requests requeue through survivors, a replacement holds
+    the count, and every request still completes exactly once."""
+    router = ReplicaRouter.shared_core(CFG, slots=2, max_seq=24,
+                                       n_replicas=3, max_replicas=4)
+    collector = MetricsCollector(straggler_factor=1.5)
+    policy = EvictionPolicy(k_windows=2)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(3, CFG.vocab, size=6)
+                    .astype(np.int32), gen_len=5) for i in range(6)]
+    for r in reqs:
+        router.submit(r, now=0.0)
+    router.step(1.0)
+    slow = router.replicas[1].replica_id
+    evicted = []
+    for tick in range(2):                 # two flagged windows → actuate
+        for rep in router.replicas:
+            lat = [900.0] * 4 if rep.replica_id == slow else [100.0] * 4
+            collector.submit(_report(rep.replica_id, tick, lat, 4))
+        evicted += router.evict_stragglers(
+            policy.update(collector.stragglers(), router.replica_count),
+            now=1.0)
+    assert evicted == [slow]
+    assert router.replica_count == 3      # replacement restored the count
+    assert slow not in [r.replica_id for r in router.replicas]
+    done, now = [], 1.0
+    while len(done) < 6 and now < 100:
+        now += 1.0
+        done.extend(router.step(now))
+    assert sorted(r.rid for r in done) == list(range(6))
+
+
+def test_closed_loop_eviction_disabled_matches_enabled_on_healthy_run():
+    """On a healthy run the policy is a no-op: evict_after=0 (disabled) and
+    the default produce identical streams and scaling decisions — eviction
+    changes nothing unless something actually straggles."""
+    import dataclasses
+
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    results = {}
+    for evict_after in (0, 3):
+        lc = dataclasses.replace(
+            LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                       steps_per_tick=6), evict_after=evict_after)
+        sink = []
+        router, logs = run_closed_loop(CFG, autoscale=True, ticks=6, seed=0,
+                                       lc=lc, sink=sink)
+        results[evict_after] = {
+            "decisions": [(t.replicas, t.reason) for t in logs],
+            "evicted": [t.evicted for t in logs],
+            "streams": {r.rid: tuple(r.tokens_out) for r in sink},
+        }
+        router.close()
+    assert results[0]["decisions"] == results[3]["decisions"]
+    assert results[0]["streams"] == results[3]["streams"]
+    assert all(e == [] for e in results[3]["evicted"])

@@ -1,0 +1,294 @@
+"""Adversarial transport harness: every injected fault must surface as a
+typed TransportError / reaped replica — never a hang, never a stranded or
+double-served request — while benign faults (splits, delays) leave the TCP
+topology observationally identical to in-process serving.
+
+Faults are injected through repro.serving.chaos: a byte-level proxy between
+a real TcpReplica stub and a real worker subprocess (splits / delays /
+mid-frame severs / duplicated frames at chosen frame indices), plus plain
+sockets for handshake-deadline scenarios.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.monitoring.collector import MetricsCollector
+from repro.serving import (
+    InProcessReplica, ReplicaRouter, Request, TcpReplica, spawn_worker,
+)
+from repro.serving.chaos import ChaosProxy, FaultPlan, FaultyConnection
+from repro.serving.transport import Connection, Listener, TransportError
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+SLOTS, MAX_SEQ = 2, 24
+
+
+def _requests(n, gen_len=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(
+                3, CFG.vocab, size=5).astype(np.int32),
+                gen_len=gen_len) for i in range(n)]
+
+
+def _drive(rep, reqs, max_now=100):
+    done, now = [], 0.0
+    for r in reqs:
+        rep.submit(r, now=0.0)
+    while len(done) < len(reqs) and now < max_now:
+        now += 1.0
+        done.extend(rep.step(now))
+    return {r.rid: tuple(r.tokens_out) for r in done}
+
+
+@pytest.fixture
+def tcp_worker():
+    addr, proc = spawn_worker(once=True)
+    yield addr
+    if proc.poll() is None:
+        proc.kill()
+    proc.wait(timeout=30)
+
+
+# ----------------------------------------------------- benign faults absorb
+
+
+@pytest.mark.slow
+def test_split_and_delayed_frames_are_observationally_identical(tcp_worker):
+    """Frames chopped to 7-byte pieces with per-piece delays on BOTH
+    directions: the framing reassembles everything, so the TCP replica's
+    token streams equal the in-process replica's bit-for-bit."""
+    want = _drive(InProcessReplica.build(CFG, slots=SLOTS, max_seq=MAX_SEQ,
+                                         prefill_chunk=4), _requests(3))
+    plan = FaultPlan(chunk_bytes=7, delay_s=0.0005)
+    with ChaosProxy(tcp_worker, c2s=plan, s2c=plan) as proxy:
+        rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=proxy.addr)
+        try:
+            got = _drive(rep, _requests(3))
+        finally:
+            rep.close()
+    assert got == want and not rep.failed
+
+
+# -------------------------------------------------- hard faults surface typed
+
+
+@pytest.mark.slow
+def test_sever_mid_frame_reaps_replica_and_recovers_requests(tcp_worker):
+    """The worker's FIRST step reply is cut in half (frame 2 server→client;
+    frame 1 was the init ack).  The stub must see a typed failure — not a
+    hang — flip failed, emit a crash report, and hand back rewound
+    requests for requeue."""
+    with ChaosProxy(tcp_worker, s2c=FaultPlan(sever_in_frame=2)) as proxy:
+        rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=proxy.addr, replica_id=9, rpc_timeout_s=60.0)
+        try:
+            reqs = _requests(2)
+            for r in reqs:
+                rep.submit(r, now=0.0)
+            out = rep.step(1.0)            # reply severed mid-frame
+            assert out == [] and rep.failed
+            report = rep.report(tick=0)
+            assert report.n_errors > 0 and report.replica_id == 9
+            collector = MetricsCollector()
+            collector.submit(report)
+            assert 9 in collector.stragglers()
+            lost = rep.lost_requests()
+            assert sorted(r.rid for r in lost) == [0, 1]
+            assert all(r.tokens_out == [] and r.t_admit is None
+                       for r in lost)
+        finally:
+            rep.close()
+
+
+@pytest.mark.slow
+def test_duplicated_reply_frame_retires_replica_never_mismatches(tcp_worker):
+    """A duplicated step reply through the proxy: the stub must fail TYPED
+    on a later op (the buffered duplicate desyncs the stream — or, if the
+    teardown races it, the dead channel EOFs), flip failed, emit a crash
+    report, and recover the submitter's requests.  What it must NEVER do
+    is hand a stale reply to the wrong call or hang."""
+    with ChaosProxy(tcp_worker, s2c=FaultPlan(duplicate_frame=2)) as proxy:
+        rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=proxy.addr, replica_id=3, rpc_timeout_s=60.0)
+        try:
+            [req] = _requests(1)
+            rep.submit(req, now=0.0)
+            rep.step(1.0)                  # reply #2 arrives twice
+            with pytest.raises(TransportError):
+                rep._rpc({"op": "report"})
+            assert rep.failed
+            assert rep.report(tick=1).n_errors > 0
+            assert [r.rid for r in rep.lost_requests()] == [0]
+        finally:
+            rep.close()
+
+
+class _ScriptedWorker:
+    """A protocol-speaking fake worker (no engine, no subprocess): answers
+    every op with a minimal well-formed reply, echoing seq — and replays
+    the step reply when told to.  Lets the desync tests be deterministic
+    at any machine load."""
+
+    def __init__(self, *, duplicate_step_reply: bool = False):
+        self.listener = Listener("127.0.0.1", 0)
+        self.duplicate_step_reply = duplicate_step_reply
+        self.thread = threading.Thread(target=self._serve, daemon=True)
+        self.thread.start()
+
+    @property
+    def addr(self):
+        return self.listener.addr
+
+    def _serve(self):
+        try:
+            conn = self.listener.accept(timeout=30, conn_timeout=30)
+            while True:
+                msg = conn.recv()
+                op = msg.get("op")
+                if op == "step":
+                    reply = {"completed": [], "queue_depth": 0, "active": 0,
+                             "slot_utilization": 0.0}
+                elif op == "report":
+                    reply = {"window": {"latency_ms_samples": [],
+                                        "n_requests": 0, "n_tokens": 0,
+                                        "slot_util": 0.0, "queue_depth": 0}}
+                else:
+                    reply = {"ok": True}
+                reply["seq"] = msg.get("seq")
+                conn.send(reply)
+                if op == "step" and self.duplicate_step_reply:
+                    conn.send(reply)       # the injected twin
+                if op == "shutdown":
+                    return
+        except TransportError:
+            return
+
+    def close(self):
+        self.listener.close()
+        self.thread.join(timeout=10)
+
+
+def test_duplicated_reply_is_a_seq_desync_not_a_silent_mismatch():
+    """The exact protocol property the seq echo buys: a duplicated step
+    reply is syntactically valid JSON, so without the seq check the next
+    RPC would silently consume the previous op's reply.  Against a
+    scripted worker (no timing, no teardown races) the desync is the
+    guaranteed outcome."""
+    worker = _ScriptedWorker(duplicate_step_reply=True)
+    rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, addr=worker.addr,
+                     replica_id=5, rpc_timeout_s=30.0)
+    try:
+        rep.step(1.0)                      # reply arrives twice
+        with pytest.raises(TransportError, match="desync"):
+            rep._rpc({"op": "report"})
+        assert rep.failed
+    finally:
+        rep.close()
+        worker.close()
+
+
+@pytest.mark.slow
+def test_corrupted_reply_payload_is_typed_error(tcp_worker):
+    """One flipped byte inside the init reply payload → malformed JSON →
+    TransportError from the constructor, never a hang."""
+    with ChaosProxy(tcp_worker, s2c=FaultPlan(corrupt_in_frame=1)) as proxy:
+        with pytest.raises(TransportError):
+            TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                       addr=proxy.addr, rpc_timeout_s=60.0)
+
+
+def test_delayed_handshake_hits_the_init_deadline():
+    """A peer that accepts the TCP connect but never answers the init
+    handshake must bounce the constructor within init_timeout_s."""
+    lst = Listener("127.0.0.1", 0)
+    stop = threading.Event()
+
+    def black_hole():
+        sock = lst.accept(timeout=30).sock     # connect succeeds...
+        stop.wait(10)                          # ...but no reply ever comes
+        sock.close()
+
+    t = threading.Thread(target=black_hole, daemon=True)
+    t.start()
+    with pytest.raises(TransportError):
+        TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, addr=lst.addr,
+                   init_timeout_s=1.0)
+    stop.set()
+    t.join(timeout=10)
+    lst.close()
+
+
+def test_connect_deadline_surfaces_refused_peer():
+    lst = Listener("127.0.0.1", 0)
+    addr = lst.addr
+    lst.close()
+    with pytest.raises(TransportError):
+        TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, addr=addr,
+                   connect_timeout_s=2.0)
+
+
+def test_faulty_connection_sever_is_mid_frame_eof_for_the_peer():
+    """Endpooint-level shim: a send severed at half-frame leaves the peer
+    reading a truncated frame → TransportError, and the sender gets the
+    typed error immediately."""
+    a_sock, b_sock = socket.socketpair()
+    a = FaultyConnection(a_sock, FaultPlan(sever_in_frame=2), timeout=10.0)
+    b = Connection(b_sock, timeout=10.0)
+    a.send({"fine": 1})
+    assert b.recv() == {"fine": 1}
+    with pytest.raises(TransportError):
+        a.send({"doomed": list(range(32))})
+    with pytest.raises(TransportError):
+        b.recv()
+    b.close()
+
+
+def test_faulty_connection_duplicate_and_split_reassemble():
+    a_sock, b_sock = socket.socketpair()
+    a = FaultyConnection(a_sock, FaultPlan(chunk_bytes=3, duplicate_frame=1),
+                         timeout=10.0)
+    b = Connection(b_sock, timeout=10.0)
+    a.send({"msg": "dup"})
+    assert b.recv() == {"msg": "dup"}      # the frame...
+    assert b.recv() == {"msg": "dup"}      # ...and its injected twin
+    a.close(), b.close()
+
+
+# ------------------------------------------------- fleet-level fault closure
+
+
+@pytest.mark.slow
+def test_tcp_worker_kill_mid_decode_completes_every_request_exactly_once():
+    """Kill one TCP worker mid-decode: the router reaps it on the next
+    step, requeues its rewound requests, builds a replacement, and every
+    request completes exactly once."""
+    router = ReplicaRouter.from_topology(CFG, "tcp", slots=SLOTS,
+                                         max_seq=16, prefill_chunk=4,
+                                         n_replicas=2, max_replicas=3)
+    try:
+        reqs = _requests(6, gen_len=6)
+        for r in reqs:
+            router.submit(r, now=0.0)
+        done, now = [], 0.0
+        while len(done) < 2 and now < 100:   # victim serves real work first
+            now += 1.0
+            done.extend(router.step(now))
+        victim = router.replicas[1]
+        assert isinstance(victim, TcpReplica)
+        victim._proc.kill()
+        victim._proc.wait(timeout=30)
+        while len(done) < 6 and now < 200:
+            now += 1.0
+            done.extend(router.step(now))
+        rids = sorted(r.rid for r in done)
+        assert rids == list(range(6))        # exactly once, none lost
+        assert all(len(r.tokens_out) == 6 for r in done)
+        assert router.replica_count == 2
+        assert router.metrics()["completed"] == 6
+    finally:
+        router.close()

@@ -459,13 +459,13 @@ def test_sharded_replica_matches_inproc_on_two_device_mesh():
 @pytest.mark.slow
 def test_closed_loop_identical_across_topologies():
     """Acceptance: run_closed_loop on the same seed produces identical token
-    streams AND identical scaling decisions on the inproc, sharded, and proc
-    topologies — the control plane cannot tell the fabrics apart."""
+    streams AND identical scaling decisions on the inproc, sharded, proc,
+    and tcp topologies — the control plane cannot tell the fabrics apart."""
     from repro.serving.closed_loop import LoopConfig, run_closed_loop
 
     cfg = TINY_CFGS["dense"]
     results = {}
-    for topology in ("inproc", "sharded", "proc"):
+    for topology in ("inproc", "sharded", "proc", "tcp"):
         lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
                         steps_per_tick=6, topology=topology)
         sink = []
@@ -477,8 +477,52 @@ def test_closed_loop_identical_across_topologies():
             "streams": {r.rid: tuple(r.tokens_out) for r in sink},
         }
         router.close()
-    assert results["inproc"] == results["sharded"] == results["proc"]
+    assert results["inproc"] == results["sharded"] == results["proc"] \
+        == results["tcp"]
     assert results["inproc"]["streams"]          # the loop actually served
+
+
+@pytest.mark.slow
+def test_tcp_router_attaches_to_prestarted_fleet():
+    """The cross-host shape: pods started by an external scheduler
+    (launch_fleet stands in), a router that ATTACHES via addrs — requests
+    complete, per-replica transport is measured, and detaching (close)
+    leaves the pods alive for the next router."""
+    from repro.serving import TcpReplica, launch_fleet
+
+    cfg = TINY_CFGS["dense"]
+    with launch_fleet(2) as fleet:
+        router = ReplicaRouter.from_topology(
+            cfg, "tcp", slots=SLOTS, max_seq=16, prefill_chunk=4,
+            n_replicas=2, max_replicas=2, addrs=fleet.addrs)
+        assert all(isinstance(r, TcpReplica) for r in router.replicas)
+        assert [r.addr for r in router.replicas] == fleet.addrs
+        reqs = _requests(4, prompt_len=5, gen_len=3)
+        for r in reqs:
+            router.submit(r, now=0.0)
+        done, now = [], 0.0
+        while len(done) < 4 and now < 100:
+            now += 1.0
+            done.extend(router.step(now))
+        assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+        router.reports(0)                  # report RPC → transport EWMA
+        assert all(r.transport_ms > 0.0 for r in router.replicas)
+        router.replicas[0].begin_step(now + 1)   # detach MID-ROUND: the pod
+        router.close()                     # must survive its reply landing
+        assert all(proc.poll() is None for _, proc in fleet.workers)  # on a
+        #                                    dead socket and re-enter accept
+        # a SECOND router re-attaches to the same living pods
+        router2 = ReplicaRouter.from_topology(
+            cfg, "tcp", slots=SLOTS, max_seq=16, prefill_chunk=4,
+            n_replicas=2, max_replicas=2, addrs=fleet.addrs)
+        [req] = _requests(1, prompt_len=5, gen_len=2)
+        router2.submit(req, now=0.0)
+        done, now = [], 0.0
+        while not done and now < 50:
+            now += 1.0
+            done.extend(router2.step(now))
+        assert [r.rid for r in done] == [0]
+        router2.close()
 
 
 @pytest.mark.slow

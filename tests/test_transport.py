@@ -6,6 +6,7 @@ as a collector straggler, never as a hang.
 """
 import math
 import socket
+import struct
 import threading
 
 import numpy as np
@@ -14,16 +15,20 @@ import pytest
 from repro.core.monitoring.collector import MetricsCollector, ReplicaReport
 from repro.serving.sampling import SamplingParams
 from repro.serving.scheduler import Request
+import repro.serving.transport as transport
 from repro.serving.transport import (
     Connection,
+    Listener,
     TransportError,
     decode_config,
     decode_report,
     decode_request,
+    dial,
     encode_config,
     encode_report,
     encode_request,
     pack_frame,
+    parse_addr,
 )
 
 from conftest import TINY_CFGS
@@ -138,6 +143,80 @@ def test_mid_frame_eof_raises_transport_error():
     with pytest.raises(TransportError):
         b.recv()
     b.close()
+
+
+def test_pack_frame_enforces_max_frame_at_the_sender(monkeypatch):
+    """Regression: MAX_FRAME used to be recv-side only — a sender could
+    emit a frame the peer was guaranteed to kill the connection over.  The
+    oversized payload must be rejected BEFORE any bytes hit the wire."""
+    monkeypatch.setattr(transport, "MAX_FRAME", 64)
+    with pytest.raises(TransportError, match="oversized"):
+        pack_frame({"blob": "x" * 256})
+    # an in-bounds frame still packs under the tightened limit
+    assert pack_frame({"ok": 1})
+
+
+def test_connection_send_oversized_leaves_channel_clean(monkeypatch):
+    monkeypatch.setattr(transport, "MAX_FRAME", 64)
+    a, b = _sock_pair()
+    with pytest.raises(TransportError):
+        a.send({"blob": "y" * 256})
+    a.send({"after": True})               # nothing partial was written:
+    assert b.recv() == {"after": True}    # the channel is still framed
+    a.close(), b.close()
+
+
+def test_garbage_payload_raises_typed_error_not_hang():
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    junk = b"\xff\xfe\x00not json at all"
+    a_sock.sendall(struct.pack(">I", len(junk)) + junk)
+    with pytest.raises(TransportError):
+        b.recv()
+    a_sock.close(), b.close()
+
+
+# ---------------------------------------------------------------- TCP layer
+
+
+def test_parse_addr():
+    assert parse_addr("10.0.0.7:7077") == ("10.0.0.7", 7077)
+    assert parse_addr(":0") == ("127.0.0.1", 0)
+    with pytest.raises(ValueError):
+        parse_addr("no-port")
+    with pytest.raises(ValueError):
+        parse_addr("host:seven")
+
+
+def test_listener_dial_round_trip_with_keepalive_and_nodelay():
+    lst = Listener("127.0.0.1", 0)
+    assert lst.port != 0                  # kernel-picked port is realized
+    client = dial(lst.host, lst.port, timeout=10.0)
+    server = lst.accept(timeout=10.0, conn_timeout=10.0)
+    client.send({"hello": "🌍", "v": float("inf")})
+    got = server.recv()
+    assert got["hello"] == "🌍" and got["v"] == float("inf")
+    server.send({"ack": 1})
+    assert client.recv() == {"ack": 1}
+    for sock in (client.sock, server.sock):
+        assert sock.getsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY)
+        assert sock.getsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE)
+    client.close(), server.close(), lst.close()
+
+
+def test_dial_refused_raises_transport_error():
+    lst = Listener("127.0.0.1", 0)
+    port = lst.port
+    lst.close()                           # nobody listening on port now
+    with pytest.raises(TransportError):
+        dial("127.0.0.1", port, connect_timeout=5.0)
+
+
+def test_accept_deadline_raises_transport_error():
+    lst = Listener("127.0.0.1", 0)
+    with pytest.raises(TransportError):
+        lst.accept(timeout=0.05)
+    lst.close()
 
 
 # ------------------------------------------------------- crash → straggler

@@ -1,0 +1,194 @@
+"""Property fuzz for the wire contract: every codec round-trips (NaN/±inf
+metrics, unicode payloads, nested MoE/SSM/Hybrid configs), and the framing
+survives adversarial byte streams — random split points reassemble, while
+truncated length prefixes, garbage payloads, and oversized declared lengths
+all surface as typed TransportError, never a hang.
+"""
+import math
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import repro.serving.transport as transport
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import Request
+from repro.serving.transport import (
+    Connection,
+    TransportError,
+    decode_config,
+    decode_report,
+    decode_request,
+    encode_config,
+    encode_report,
+    encode_request,
+    pack_frame,
+    unpack_payload,
+)
+from repro.core.monitoring.collector import ReplicaReport
+
+from conftest import TINY_CFGS
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+finite_or_not = st.floats(allow_nan=True, allow_infinity=True, width=32)
+
+
+def _eq(a: float, b: float) -> bool:
+    return (a == b) or (math.isnan(a) and math.isnan(b))
+
+
+# ------------------------------------------------------------------- codecs
+
+
+@settings(**SETTINGS)
+@given(lat=st.lists(finite_or_not, max_size=8),
+       flop=finite_or_not, transport_ms=finite_or_not,
+       n_req=st.integers(0, 1 << 20), n_err=st.integers(0, 64),
+       qd=st.integers(0, 1 << 16))
+def test_report_codec_round_trips_any_metric_values(lat, flop, transport_ms,
+                                                    n_req, n_err, qd):
+    rep = ReplicaReport(replica_id=1, tick=2, latency_ms_samples=lat,
+                        n_requests=n_req, n_errors=n_err, flop_util=flop,
+                        hbm_util=0.0, ici_util=0.0, mem_frac=0.0,
+                        queue_depth=qd, transport_ms=transport_ms)
+    got = decode_report(encode_report(rep))
+    assert got.n_requests == n_req and got.n_errors == n_err
+    assert got.queue_depth == qd
+    assert _eq(got.flop_util, flop) and _eq(got.transport_ms, transport_ms)
+    assert len(got.latency_ms_samples) == len(lat)
+    assert all(_eq(a, b) for a, b in zip(got.latency_ms_samples, lat))
+
+
+@settings(**SETTINGS)
+@given(data=st.data(),
+       prompt_len=st.integers(1, 12), gen_len=st.integers(1, 32),
+       temperature=st.floats(0.0, 4.0), top_k=st.integers(0, 64),
+       seed=st.integers(0, 2**31 - 1), with_frames=st.booleans())
+def test_request_codec_round_trips(data, prompt_len, gen_len, temperature,
+                                   top_k, seed, with_frames):
+    prompt = np.asarray(data.draw(st.lists(
+        st.integers(0, 2**31 - 1), min_size=prompt_len,
+        max_size=prompt_len)), np.int32)
+    frames = None
+    if with_frames:
+        frames = np.asarray(data.draw(st.lists(
+            st.lists(st.floats(-1e6, 1e6, width=32), min_size=3, max_size=3),
+            min_size=1, max_size=4)), np.float32)
+    req = Request(rid=data.draw(st.integers(0, 2**31 - 1)), prompt=prompt,
+                  gen_len=gen_len,
+                  sampling=SamplingParams(temperature=temperature,
+                                          top_k=top_k, seed=seed),
+                  frames=frames)
+    req.tokens_out = data.draw(st.lists(st.integers(0, 2**31 - 1),
+                                        max_size=6))
+    got = decode_request(encode_request(req))
+    np.testing.assert_array_equal(got.prompt, req.prompt)
+    assert got.rid == req.rid and got.gen_len == gen_len
+    assert got.sampling == req.sampling
+    assert got.tokens_out == req.tokens_out
+    if with_frames:
+        np.testing.assert_allclose(got.frames, frames, rtol=1e-6)
+    else:
+        assert got.frames is None
+
+
+@settings(**SETTINGS)
+@given(family=st.sampled_from(sorted(TINY_CFGS)),
+       vocab=st.integers(8, 1 << 17), n_layers=st.integers(1, 12))
+def test_config_codec_round_trips_every_family_with_overrides(family, vocab,
+                                                              n_layers):
+    """Nested MoE/SSM/Hybrid sub-configs must rebuild equal frozen configs
+    for arbitrary top-level overrides, not just the fixture values."""
+    import dataclasses
+    cfg = dataclasses.replace(TINY_CFGS[family], vocab=vocab,
+                              n_layers=n_layers)
+    assert decode_config(encode_config(cfg)) == cfg
+
+
+@settings(**SETTINGS)
+@given(obj=st.recursive(
+    st.none() | st.booleans() | st.integers(-2**53, 2**53) | st.text()
+    | st.floats(allow_nan=False, allow_infinity=True),
+    lambda kids: st.lists(kids, max_size=4)
+    | st.dictionaries(st.text(max_size=8), kids, max_size=4),
+    max_leaves=16))
+def test_pack_unpack_round_trips_arbitrary_json_with_unicode(obj):
+    raw = pack_frame(obj)
+    (n,) = struct.unpack(">I", raw[:4])
+    assert n == len(raw) - 4
+    assert unpack_payload(raw[4:]) == obj
+
+
+# ------------------------------------------------------------------ framing
+
+
+@settings(**SETTINGS)
+@given(data=st.data(), payload=st.dictionaries(
+    st.text(max_size=6), st.text(max_size=12) | finite_or_not, max_size=6))
+def test_random_split_points_reassemble(data, payload):
+    """The kernel may deliver a frame in ANY byte-sized pieces — every cut
+    set must reassemble to the identical message."""
+    raw = pack_frame(payload)
+    n_cuts = data.draw(st.integers(0, min(len(raw) - 1, 6)))
+    cuts = sorted(data.draw(st.sets(st.integers(1, len(raw) - 1),
+                                    min_size=n_cuts, max_size=n_cuts)))
+    bounds = [0] + cuts + [len(raw)]
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    t = threading.Thread(target=lambda: [
+        a_sock.sendall(raw[lo:hi]) for lo, hi in zip(bounds, bounds[1:])])
+    t.start()
+    got = b.recv()
+    t.join()
+    assert {k: v for k, v in got.items() if not isinstance(v, float)} == \
+        {k: v for k, v in payload.items() if not isinstance(v, float)}
+    for k, v in payload.items():
+        if isinstance(v, float):
+            assert _eq(got[k], v)
+    a_sock.close(), b.close()
+
+
+@settings(**SETTINGS)
+@given(n_bytes=st.integers(0, 3))
+def test_truncated_length_prefix_is_typed_error(n_bytes):
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    a_sock.sendall(b"\x00" * n_bytes)     # die inside the 4-byte header
+    a_sock.close()
+    with pytest.raises(TransportError):
+        b.recv()
+    b.close()
+
+
+@settings(**SETTINGS)
+@given(junk=st.binary(min_size=1, max_size=64))
+def test_garbage_bytes_are_typed_error_not_hang(junk):
+    """A correctly-framed payload of arbitrary garbage must decode-fail as
+    TransportError (malformed JSON / invalid UTF-8), never wedge recv."""
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    a_sock.sendall(struct.pack(">I", len(junk)) + junk)
+    a_sock.close()
+    try:
+        got = b.recv()                    # some byte strings ARE valid JSON
+        assert not isinstance(got, bytes)
+    except TransportError:
+        pass
+    b.close()
+
+
+@settings(**SETTINGS)
+@given(declared=st.integers(transport.MAX_FRAME + 1, 2**32 - 1))
+def test_oversized_declared_length_rejected_before_allocation(declared):
+    a_sock, b_sock = socket.socketpair()
+    b = Connection(b_sock, timeout=10.0)
+    a_sock.sendall(struct.pack(">I", declared) + b"x" * 16)
+    with pytest.raises(TransportError, match="oversized"):
+        b.recv()
+    a_sock.close(), b.close()
