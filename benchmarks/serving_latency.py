@@ -155,6 +155,82 @@ def run_topology(topology: str, smoke: bool = True, seed: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# multi-process pod smoke (the ≥2-process jax.distributed trajectory record)
+# ---------------------------------------------------------------------------
+
+
+def run_pod_smoke(pod_size: int = 2, seed: int = 0, n_requests: int = 4,
+                  gen_len: int = 4):
+    """Drive ONE ``pod_size``-rank pod (worker ranks joined over
+    jax.distributed, lockstep digest-verified) through a seeded burst and
+    assert its token streams equal an in-process replica's on the same
+    seed — the observational-identity bar, recorded for the CI trajectory
+    (BENCH_serving_pod.json) together with the pod's mode and whether the
+    backend could place one program across the ranks.  GATED: where
+    multi-process init is unavailable the record is an explicit skip, not
+    a failure."""
+    from repro.configs import get_smoke_config
+    from repro.serving import DistributedPodReplica, InProcessReplica, \
+        MetricsObserver
+    from repro.serving.scheduler import Request
+
+    cfg = get_smoke_config("qwen2.5-3b")
+
+    def burst(rep):
+        rng = np.random.default_rng(seed)
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    3, cfg.vocab, size=6).astype(np.int32),
+                    gen_len=gen_len) for i in range(n_requests)]
+        done, now = [], 0.0
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        while len(done) < n_requests and now < 500:
+            now += 1.0
+            done.extend(rep.step(now))
+        return {r.rid: list(r.tokens_out) for r in done}
+
+    want = burst(InProcessReplica.build(cfg, slots=2, max_seq=24,
+                                        prefill_chunk=4))
+    t0 = time.perf_counter()
+    try:
+        pod = DistributedPodReplica(cfg, slots=2, max_seq=24,
+                                    prefill_chunk=4, pod_size=pod_size)
+    except Exception as e:
+        msg = str(e).lower()
+        if any(s in msg for s in ("distributed", "initialize",
+                                  "coordinator")):
+            return {"name": "serving_pod", "skipped": f"{e}",
+                    "derived": f"pod smoke SKIPPED (multi-process init "
+                               f"unavailable): {e}"}
+        raise
+    try:
+        obs = MetricsObserver(pod.addr)
+        info = obs.status()["pod"]
+        got = burst(pod)
+        pod.lifetime()                   # one transport-EWMA sample
+        observed = obs.lifetime()
+        obs.close()
+    finally:
+        pod.close()
+    wall = time.perf_counter() - t0
+    match = got == want
+    return {
+        "name": "serving_pod",
+        "pod_size": pod_size,
+        "streams_match": bool(match),
+        "derived": (f"{pod_size}-rank pod ({info['mode']}, spmd_capable="
+                    f"{info['spmd_capable']}): {len(got)} requests, streams "
+                    f"match inproc: {match}, observer saw "
+                    f"{observed['total_completed']} completions, "
+                    f"wall {wall:.1f}s"),
+        "detail": {"pod": info, "wall_s": wall, "seed": seed,
+                   "n_requests": n_requests, "gen_len": gen_len,
+                   "transport_ms": pod.transport_ms,
+                   "observer_lifetime": observed},
+    }
+
+
+# ---------------------------------------------------------------------------
 # submit batching: RPCs per decode round, before vs after
 # ---------------------------------------------------------------------------
 
@@ -305,11 +381,13 @@ if __name__ == "__main__":
                     help="decode data-path ablation: fused Pallas vector-"
                          "index kernel vs jnp reference")
     ap.add_argument("--topology", choices=["inproc", "sharded", "proc",
-                                           "tcp"],
+                                           "tcp", "pod"],
                     default=None,
                     help="replica-fabric smoke: the closed loop on one "
                          "backend, recorded to --out (BENCH_serving.json); "
-                         "proc/tcp also record submit-batching RPC counts")
+                         "proc/tcp also record submit-batching RPC counts; "
+                         "pod runs the gated ≥2-process jax.distributed "
+                         "smoke (BENCH_serving_pod.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest ablation scale (CI artifact)")
     ap.add_argument("--out", default=None,
@@ -324,6 +402,13 @@ if __name__ == "__main__":
         print(res["derived"])
         if not res["tokens_match"]:
             raise SystemExit("kernel ablation: token streams diverged")
+    elif args.topology == "pod":
+        res = run_pod_smoke()
+        print(res["derived"])
+        with open(args.out or "BENCH_serving_pod.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        if not res.get("skipped") and not res["streams_match"]:
+            raise SystemExit("pod smoke: token streams diverged from inproc")
     elif args.topology:
         res = run_topology(args.topology, smoke=args.smoke)
         print(res["derived"])

@@ -36,24 +36,27 @@ def main(argv=None):
     ap.add_argument("--topology", choices=TOPOLOGIES, default="inproc",
                     help="replica backend: in-process engines, one engine "
                          "sharded over the local device mesh, worker "
-                         "subprocesses behind the socket transport, or "
-                         "TCP workers the router dials")
+                         "subprocesses behind the socket transport, TCP "
+                         "workers the router dials, or multi-process pods "
+                         "(N worker ranks behind one head)")
     ap.add_argument("--workers", default=None, metavar="HOST:PORT,...",
-                    help="tcp topology: comma-separated addresses of "
-                         "pre-started worker pods (python -m "
-                         "repro.serving.worker --listen host:port) to "
-                         "attach to; omitted, local TCP workers are "
-                         "spawned on kernel-picked ports")
+                    help="tcp/pod topology: comma-separated addresses of "
+                         "pre-started worker pods (tcp: python -m "
+                         "repro.serving.worker --listen host:port; pod: "
+                         "the pod HEADS) to attach to; omitted, local "
+                         "workers/pods are spawned on kernel-picked ports")
+    ap.add_argument("--pod-size", type=int, default=2,
+                    help="pod topology: worker ranks per replica")
     args = ap.parse_args(argv)
-    if args.workers and args.topology != "tcp":
-        ap.error("--workers only applies to --topology tcp")
+    if args.workers and args.topology not in ("tcp", "pod"):
+        ap.error("--workers only applies to --topology tcp/pod")
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     print(f"engine: {cfg.name} {cfg.n_params() / 1e6:.1f}M params, "
           f"router starts at 1 {args.topology} replica")
     addrs = tuple(args.workers.split(",")) if args.workers else ()
     lc = dataclasses.replace(LoopConfig(), topology=args.topology,
-                             addrs=addrs)
+                             addrs=addrs, pod_size=args.pod_size)
     router, logs = run_closed_loop(cfg, autoscale=True, ticks=args.ticks,
                                    seed=args.seed, lc=lc)
     for t in logs:

@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Intra-repo link checker for docs/*.md and README.md (stdlib only).
+
+Every relative markdown link must resolve to a real file (directories
+count), and a ``#fragment`` pointing into a markdown file must match one
+of that file's headings (GitHub-style slugs).  External links (with a
+scheme) are not fetched — this guards the repo's own structure, not the
+internet.  Exit 0 = all links resolve; nonzero prints one line per
+breakage.
+
+Run: python scripts/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^(```|~~~)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def strip_fenced_code(text: str) -> str:
+    """Drop fenced code blocks — link syntax inside them is illustrative."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if FENCE.match(line.strip()):
+            fenced = not fenced
+            continue
+        out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, spaces → dashes, punctuation out."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set[str]:
+    slugs = set()
+    for line in strip_fenced_code(md_path.read_text()).splitlines():
+        m = HEADING.match(line)
+        if m:
+            slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def check_file(md_path: Path, repo: Path) -> list[str]:
+    errors = []
+    text = strip_fenced_code(md_path.read_text())
+    for target in LINK.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                               # same-file anchor
+            dest = md_path
+        else:
+            dest = (md_path.parent / path_part).resolve()
+            try:
+                dest.relative_to(repo)
+            except ValueError:
+                errors.append(f"{md_path}: link escapes the repo: {target}")
+                continue
+            if not dest.exists():
+                errors.append(f"{md_path}: broken link: {target}")
+                continue
+        if fragment and dest.suffix == ".md" and dest.exists():
+            if fragment not in anchors_of(dest):
+                errors.append(f"{md_path}: missing anchor: {target}")
+    return errors
+
+
+def main() -> int:
+    repo = Path(__file__).resolve().parents[1]
+    files = sorted((repo / "docs").glob("*.md")) + [repo / "README.md"]
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing doc file: {f}" for f in missing]
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f, repo))
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_files = len(files) - len(missing)
+    if not errors:
+        print(f"docs links OK ({n_files} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

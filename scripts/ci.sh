@@ -3,10 +3,14 @@
 # suites first (the `kernels` marker — fast signal when a kernel change
 # breaks oracle parity), then the main suite, then the chaos soak standalone
 # (the `chaos` marker: scripted kills + straggler evictions over a mixed
-# proc/TCP fleet).  Record the decode-kernel ablation (BENCH_decode.json)
-# and the replica-fabric smokes: TCP (2 local workers + the submit-batching
-# RPC before/after — BENCH_serving.json) and proc (BENCH_serving_proc.json)
-# — perf-trajectory artifacts the workflow uploads — then the closed-loop
+# proc/TCP fleet), then the docs job (intra-repo links in docs/*.md +
+# README must resolve — stdlib checker, no new deps).  Record the
+# decode-kernel ablation (BENCH_decode.json) and the replica-fabric smokes:
+# TCP (2 local workers + the submit-batching RPC before/after —
+# BENCH_serving.json), proc (BENCH_serving_proc.json), and the gated
+# ≥2-process pod smoke (jax.distributed ranks via --pod-rank; skips cleanly
+# where multi-process init is unavailable — BENCH_serving_pod.json) —
+# perf-trajectory artifacts the workflow uploads — then the closed-loop
 # serving smoke.  Mirrors .github/workflows/ci.yml so the same command
 # works locally.
 set -euo pipefail
@@ -18,7 +22,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -m kernels
 python -m pytest -x -q -m "not kernels and not chaos"
 python -m pytest -x -q -m chaos
+python scripts/check_docs_links.py
 python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.json
 python -m benchmarks.serving_latency --topology tcp --smoke --out BENCH_serving.json
 python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving_proc.json
+python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_pod.json
 python examples/serve_autoscale.py --smoke

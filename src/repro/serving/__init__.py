@@ -7,16 +7,23 @@ Layout:
   engine.py     — single-replica engine: chunked prefill streamed through the
                   batched decode tick, per-slot ring positions
   replica.py    — the Replica protocol (submit/step/report/scale hooks) and
-                  its four backends: InProcessReplica, ShardedReplica (one
-                  engine data-parallel over a device mesh), ProcessReplica
-                  (engine in a forked worker over a socketpair), TcpReplica
-                  (engine in a listening worker pod the router dials)
+                  its five backends: InProcessReplica, ShardedReplica (one
+                  engine spanning a device mesh), ProcessReplica (engine in
+                  a forked worker over a socketpair), TcpReplica (engine in
+                  a listening worker pod the router dials),
+                  DistributedPodReplica (a multi-process pod of worker
+                  ranks behind one RPC head, stepping in lockstep)
   transport.py  — length-prefixed JSON framing, TCP Listener/dial endpoints
                   + Request/ReplicaReport/ModelConfig codecs (the wire
                   contract)
-  worker.py     — the far side of ProcessReplica/TcpReplica (inherited-fd
-                  or --listen host:port)
-  fleet.py      — launch_fleet: N local listening workers for demos/CI
+  worker.py     — the far side of the remote backends (inherited-fd,
+                  --listen host:port, or --pod-rank R pod mode); one
+                  mutating session + concurrent read-only observers
+  observe.py    — MetricsObserver: read-only attach to a live worker/pod
+                  (lifetime/status polls that never steal the router's
+                  connection or drain its metric window)
+  fleet.py      — launch_fleet / launch_pod: local listening workers and
+                  multi-process pods for demos/CI
   chaos.py      — fault-injection harness (FaultyConnection, ChaosProxy)
                   pinning that faults surface typed, never as hangs
   router.py     — N replicas behind the protocol: least-loaded routing,
@@ -31,8 +38,16 @@ The `core/` control plane (scaler + allocator) drives ReplicaRouter.scale_to;
 examples/serve_autoscale.py closes the loop end to end on CPU.
 """
 from repro.serving.engine import EngineCore, ServingEngine
-from repro.serving.fleet import Fleet, launch_fleet, spawn_worker
+from repro.serving.fleet import (
+    Fleet,
+    PodHandle,
+    launch_fleet,
+    launch_pod,
+    spawn_worker,
+)
+from repro.serving.observe import MetricsObserver
 from repro.serving.replica import (
+    DistributedPodReplica,
     InProcessReplica,
     ProcessReplica,
     Replica,
@@ -48,6 +63,7 @@ from repro.serving.transport import (
     Connection,
     Listener,
     TransportError,
+    WorkerBusyError,
     dial,
     parse_addr,
 )
@@ -56,9 +72,11 @@ from repro.serving.workload import poisson_arrival_times, synthetic_requests
 __all__ = [
     "EngineCore", "ServingEngine", "ReplicaRouter", "TOPOLOGIES",
     "Replica", "InProcessReplica", "ShardedReplica", "ProcessReplica",
-    "SocketReplica", "TcpReplica",
-    "Fleet", "launch_fleet", "spawn_worker",
-    "Connection", "Listener", "TransportError", "dial", "parse_addr",
+    "SocketReplica", "TcpReplica", "DistributedPodReplica",
+    "Fleet", "PodHandle", "launch_fleet", "launch_pod", "spawn_worker",
+    "MetricsObserver",
+    "Connection", "Listener", "TransportError", "WorkerBusyError",
+    "dial", "parse_addr",
     "SamplingParams", "sample_token",
     "FCFSScheduler", "Request",
     "SlotPool", "write_slot",

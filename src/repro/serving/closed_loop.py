@@ -43,11 +43,14 @@ class LoopConfig:
     slo_ms: float = 2000.0
     calm_rps: float = 1.2
     spike_rps: float = 7.0
-    topology: str = "inproc"     # inproc | sharded | proc | tcp (replica.py)
-    addrs: tuple = ()            # tcp: pre-started worker pods to attach to
-    batch_submits: bool = True   # proc/tcp: submits ride the step RPC
+    topology: str = "inproc"     # inproc | sharded | proc | tcp | pod
+    addrs: tuple = ()            # tcp/pod: pre-started pods to attach to
+    pod_size: int = 2            # pod: worker ranks per replica
+    batch_submits: bool = True   # proc/tcp/pod: submits ride the step RPC
     evict_after: int = 3         # consecutive straggler windows → evict
     #                              (0 disables loop-actuated eviction)
+    observe_addrs: tuple = ()    # read-only MetricsObserver attaches polled
+    #                              each tick (never the router's session)
 
 
 @dataclasses.dataclass
@@ -65,6 +68,9 @@ class TickLog:
     anomaly: bool
     evicted: list = dataclasses.field(default_factory=list)  # replica ids
     #                             the eviction policy actuated this tick
+    observed: list = dataclasses.field(default_factory=list)  # one status()
+    #                             per observe_addrs attach (out-of-band
+    #                             lifetime counters, pod rank/mode)
 
 
 def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
@@ -80,20 +86,21 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     profile=default_profile, sink: list | None = None):
     """→ (router, [TickLog]).  ``autoscale=False`` pins one replica (the
     static baseline).  ``lc.topology`` picks the replica backend — the loop
-    is transport-agnostic, so inproc / sharded / proc / tcp runs on the
-    same seed produce the same token streams and the same scaling
+    is transport-agnostic, so inproc / sharded / proc / tcp / pod runs on
+    the same seed produce the same token streams and the same scaling
     trajectory.  ``sink``, when given, accumulates every completed Request
     (the cross-topology equivalence tests compare these).  Callers running
-    the proc/tcp topologies should ``router.close()`` when done (worker
+    the proc/tcp/pod topologies should ``router.close()`` when done (worker
     teardown)."""
     router = ReplicaRouter.from_topology(
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas, addrs=list(lc.addrs),
-        batch_submits=lc.batch_submits)
+        pod_size=lc.pod_size, batch_submits=lc.batch_submits)
     rng = np.random.default_rng(seed)
     evictor = (EvictionPolicy(k_windows=lc.evict_after)
                if lc.evict_after > 0 else None)
+    observers = []
 
     # virtual-clock service time: streamed prompt tail + generation
     service_s = ((spec.prompt_len - lc.prefill_chunk) + spec.gen_len + 1) \
@@ -121,56 +128,85 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
     now, next_rid = 0.0, 0
     logs: list[TickLog] = []
     tick_span = lc.steps_per_tick * lc.tick_s
-    for tick in range(ticks):
-        rps = profile(tick, ticks, lc)
-        n = int(rng.poisson(rps * tick_span))
-        reqs = synthetic_requests(spec, n, cfg.vocab, rng=rng,
-                                  base_rid=next_rid)
-        next_rid += n
-        arrivals = [(now + (i / max(n, 1)) * tick_span, r)
-                    for i, r in enumerate(reqs)]
-        served = 0
-        for _ in range(lc.steps_per_tick):
-            now += lc.tick_s
-            while arrivals and arrivals[0][0] <= now:
-                t_arr, r = arrivals.pop(0)
-                router.submit(r, now=t_arr)
-            done = router.step(now)
-            served += len(done)
-            if sink is not None:
-                sink.extend(done)
+    try:
+        if lc.observe_addrs:
+            # read-only attaches: the loop's out-of-band view of the same
+            # workers its router is mutating — lifetime counters come back
+            # on a SEPARATE connection, so an external monitor's picture
+            # and the control plane's can be compared tick by tick
+            from repro.serving.observe import MetricsObserver
+            for a in lc.observe_addrs:
+                observers.append(MetricsObserver(a))
+        for tick in range(ticks):
+            rps = profile(tick, ticks, lc)
+            n = int(rng.poisson(rps * tick_span))
+            reqs = synthetic_requests(spec, n, cfg.vocab, rng=rng,
+                                      base_rid=next_rid)
+            next_rid += n
+            arrivals = [(now + (i / max(n, 1)) * tick_span, r)
+                        for i, r in enumerate(reqs)]
+            served = 0
+            for _ in range(lc.steps_per_tick):
+                now += lc.tick_s
+                while arrivals and arrivals[0][0] <= now:
+                    t_arr, r = arrivals.pop(0)
+                    router.submit(r, now=t_arr)
+                done = router.step(now)
+                served += len(done)
+                if sink is not None:
+                    sink.extend(done)
 
-        reports = router.reports(tick)
-        for rep in reports:
-            collector.submit(rep)
-        # close the straggler loop: flagged K consecutive windows → the
-        # replica is evicted and replaced (its work requeues through the
-        # survivors), BEFORE this tick's scaling decision sees the fleet
-        evicted: list[int] = []
-        if evictor is not None:
-            evicted = router.evict_stragglers(
-                evictor.update(collector.stragglers(),
-                               router.replica_count), now=now)
-        rec = collector.aggregate(tick, n_replicas=router.replica_count,
-                                  max_replicas=lc.max_replicas)
-        rec["evictions"] = float(len(evicted))   # visible to the DNN/selector
-        rec["rps"] = float(n)
-        rec["rps_window"] = [rec["rps"]]
-        anomalies = anomaly.update(tick, {"rps": rec["rps"]})
-        reason = "static"
-        if autoscale:
-            alloc.observe(rec)
-            alloc.replicas = router.replica_count
-            decision = alloc.decide(rec)
-            router.scale_to(decision.target_replicas, now=now)
-            alloc.apply(decision)
-            reason = decision.reason
-        logs.append(TickLog(
-            tick=tick, rps_target=rps, arrivals=n, served=served,
-            latency_p50_ms=rec["latency_p50"],
-            latency_p95_ms=rec["latency_p95"],
-            queue_depth=rec["queue_depth"],
-            replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
-            replicas=router.replica_count, reason=reason, anomaly=bool(
-                anomalies), evicted=evicted))
+            reports = router.reports(tick)
+            for rep in reports:
+                collector.submit(rep)
+            # close the straggler loop: flagged K consecutive windows → the
+            # replica is evicted and replaced (its work requeues through the
+            # survivors), BEFORE this tick's scaling decision sees the fleet
+            evicted: list[int] = []
+            if evictor is not None:
+                evicted = router.evict_stragglers(
+                    evictor.update(collector.stragglers(),
+                                   router.replica_count), now=now)
+            rec = collector.aggregate(tick, n_replicas=router.replica_count,
+                                      max_replicas=lc.max_replicas)
+            rec["evictions"] = float(len(evicted))   # visible to the DNN/selector
+            rec["rps"] = float(n)
+            rec["rps_window"] = [rec["rps"]]
+            anomalies = anomaly.update(tick, {"rps": rec["rps"]})
+            reason = "static"
+            if autoscale:
+                alloc.observe(rec)
+                alloc.replicas = router.replica_count
+                decision = alloc.decide(rec)
+                router.scale_to(decision.target_replicas, now=now)
+                alloc.apply(decision)
+                reason = decision.reason
+            observed = []
+            for obs in list(observers):
+                try:
+                    observed.append({"addr": obs.addr, **obs.status()})
+                except (ConnectionError, OSError, RuntimeError):
+                    # the observed worker retired (evicted / scaled away)
+                    # or bounced the poll with an error reply — out-of-band
+                    # monitoring must never take the loop down
+                    obs.close()
+                    observers.remove(obs)
+            logs.append(TickLog(
+                tick=tick, rps_target=rps, arrivals=n, served=served,
+                latency_p50_ms=rec["latency_p50"],
+                latency_p95_ms=rec["latency_p95"],
+                queue_depth=rec["queue_depth"],
+                replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
+                replicas=router.replica_count, reason=reason, anomaly=bool(
+                    anomalies), evicted=evicted, observed=observed))
+    except BaseException:
+        # the caller never receives the router handle it is documented to
+        # close — reap the fleet (spawned workers/pods included) here
+        router.close()
+        raise
+    finally:
+        # out-of-band attaches must not leak when a tick raises (worker
+        # crash mid-run, an observer dial failing after the fleet is up)
+        for obs in observers:
+            obs.close()
     return router, logs

@@ -1,4 +1,4 @@
-"""Local TCP worker fleets: spawn N listening workers for demos and CI.
+"""Local worker fleets and pods: spawn listening workers for demos and CI.
 
 In production a TcpReplica attaches to a worker pod somebody else scheduled
 (k8s, a launcher) — the router never forks it.  For demos, CI, and the
@@ -8,16 +8,26 @@ kernel-picked port off each worker's banner line, and hands back dialable
 addresses.  A Fleet outlives any one router (a router detaching leaves the
 pod listening, unless the worker was started ``--once``), so the same
 two-terminal flow in the README works in one process.
+
+``launch_pod`` stands in for a MULTI-HOST pod scheduler: it spawns
+``pod_size`` ranks of one model-parallel pod (``--pod-rank/--pod-size``
+plus a shared jax.distributed ``--coordinator``) on localhost — non-head
+ranks first (they must be listening before the head can claim their
+mutating sessions), then the head with ``--pod-peers`` pointing at them.
+Only the HEAD's address is dialable by a router; the returned PodHandle
+owns every rank process.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import select
+import socket
 import subprocess
 import sys
 import time
 from pathlib import Path
+from typing import Sequence
 
 from repro.serving.transport import TransportError
 
@@ -36,6 +46,7 @@ def worker_env() -> dict:
 
 def spawn_worker(host: str = "127.0.0.1", port: int = 0, *,
                  once: bool = True, start_timeout_s: float = 60.0,
+                 extra_args: Sequence[str] = (),
                  ) -> tuple[tuple[str, int], subprocess.Popen]:
     """Spawn one listening TCP worker; → ((host, port), process).
 
@@ -43,10 +54,11 @@ def spawn_worker(host: str = "127.0.0.1", port: int = 0, *,
     → kernel-picked); we scan its stdout for the banner under a deadline so
     a worker that dies at import surfaces as a TransportError with its exit
     code, never a hang.  ``once`` ties the worker's lifetime to its first
-    connection (right for stub-owned workers); pass ``once=False`` for a
-    pod-like worker that keeps listening across router attach/detach."""
+    mutating session (right for stub-owned workers); pass ``once=False``
+    for a pod-like worker that keeps listening across router attach/detach.
+    ``extra_args`` rides extra worker flags (the pod-rank plumbing)."""
     cmd = [sys.executable, "-m", "repro.serving.worker",
-           "--listen", f"{host}:{port}"]
+           "--listen", f"{host}:{port}", *extra_args]
     if once:
         cmd.append("--once")
     proc = subprocess.Popen(cmd, env=worker_env(), stdout=subprocess.PIPE,
@@ -117,3 +129,94 @@ def launch_fleet(n: int, *, host: str = "127.0.0.1") -> Fleet:
         Fleet(workers).close()
         raise
     return Fleet(workers)
+
+
+# ---------------------------------------------------------------------------
+# multi-process pods
+# ---------------------------------------------------------------------------
+
+
+def free_port(host: str = "127.0.0.1") -> int:
+    """A kernel-picked free port for the jax.distributed coordinator.  The
+    bind-then-release dance is racy in principle; for the localhost
+    demo/CI scheduler stand-in it is the standard trade — a real scheduler
+    assigns the coordinator endpoint itself."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+@dataclasses.dataclass
+class PodHandle:
+    """One spawned multi-process pod: rank-ordered addresses and process
+    handles (index 0 is the head — the only rank a router dials)."""
+
+    rank_addrs: list[tuple[str, int]]
+    procs: list[subprocess.Popen]
+    coordinator: str
+
+    @property
+    def head_addr(self) -> tuple[str, int]:
+        return self.rank_addrs[0]
+
+    @property
+    def head_proc(self) -> subprocess.Popen:
+        return self.procs[0]
+
+    def close(self):
+        for proc in self.procs:
+            if proc.poll() is None:
+                proc.terminate()
+        for proc in self.procs:
+            try:
+                proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+                proc.wait(timeout=10)
+
+    def __enter__(self) -> "PodHandle":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def launch_pod(pod_size: int, *, host: str = "127.0.0.1",
+               once: bool = True,
+               start_timeout_s: float = 120.0) -> PodHandle:
+    """Spawn one ``pod_size``-rank pod on localhost; → PodHandle.
+
+    Non-head ranks come up first (the head claims their mutating sessions
+    at startup, so they must already be listening), each handed the shared
+    coordinator address and its rank; the head comes up last with
+    ``--pod-peers`` naming the ranks.  The head's banner therefore means
+    the whole pod is wired.  ``once`` ties the HEAD's lifetime to its
+    first router session (stub-owned pods); non-head ranks always follow
+    the head — a forwarded shutdown or the handle's close() retires them."""
+    if pod_size < 1:
+        raise ValueError(f"pod_size must be >= 1, got {pod_size}")
+    coordinator = f"{host}:{free_port(host)}"
+    addrs: list[tuple[str, int]] = []
+    procs: list[subprocess.Popen] = []
+    try:
+        for rank in range(1, pod_size):
+            addr, proc = spawn_worker(
+                host, once=False, start_timeout_s=start_timeout_s,
+                extra_args=["--pod-rank", str(rank),
+                            "--pod-size", str(pod_size),
+                            "--coordinator", coordinator])
+            addrs.append(addr)
+            procs.append(proc)
+        peers = ",".join(f"{h}:{p}" for h, p in addrs)
+        head_args = ["--pod-rank", "0", "--pod-size", str(pod_size),
+                     "--coordinator", coordinator]
+        if peers:
+            head_args += ["--pod-peers", peers]
+        head_addr, head_proc = spawn_worker(
+            host, once=once, start_timeout_s=start_timeout_s,
+            extra_args=head_args)
+    except Exception:
+        PodHandle(addrs, procs, coordinator).close()
+        raise
+    return PodHandle([head_addr] + addrs, [head_proc] + procs, coordinator)
+

@@ -26,6 +26,19 @@ surface; everything engine-shaped lives behind one of three backends:
                      with connect/handshake deadlines and keepalive.  When
                      no address is given the stub spawns a local TCP worker
                      (demos/CI) and owns its lifetime.
+  DistributedPodReplica — TcpReplica against the HEAD of a multi-process
+                     pod: N worker ranks (``--pod-rank/--pod-size``,
+                     optionally a jax.distributed ``--coordinator``)
+                     jointly back one replica the router addresses as a
+                     single unit; rank 0 forwards mutating ops so the
+                     ranks step in lockstep (digest-verified).
+
+Attach handshake: a listening worker serves ONE mutating session plus any
+number of read-only observers (serving/observe.py) concurrently, so an
+external monitor can poll lifetime()/status() without stealing the
+router's connection.  SocketReplica claims the mutating session with an
+explicit ``attach`` before init; losing the race surfaces as a typed
+WorkerBusyError, never a protocol desync.
 
 Remote stubs share SocketReplica: a strict request/reply RPC stream where
 every message carries a sequence number the reply must echo — a duplicated,
@@ -68,6 +81,7 @@ from repro.serving.scheduler import Request
 from repro.serving.transport import (
     Connection,
     TransportError,
+    WorkerBusyError,
     apply_request,
     dial,
     encode_config,
@@ -248,43 +262,52 @@ def _axes_leaf(x) -> bool:
 
 def make_sharded_decode(cfg, mesh, slots: int, max_seq: int):
     """The engine decode step under shard_map: the slot/batch axis of the
-    tokens, the cache, and the logits is sharded over the mesh's "data"
-    axis; params are replicated.  The body is collective-free (decode is
-    purely batch-parallel), so each device serves slots/N rows of the same
-    replica.  Per-leaf specs come from the model's own cache_spec logical
-    axes — the same table the multi-host launcher shards by — with the
-    pool's two vectorized leaves (per-slot "index" positions, per-slot
-    "cross_len") pinned to the slot axis."""
+    tokens, the cache, and the logits is sharded over EVERY axis of
+    ``mesh``; params are replicated.  The body is collective-free (decode
+    is purely batch-parallel), so each device serves slots/N rows of the
+    same replica — on the classic single-host ("data",) mesh exactly as
+    before, and on a pod mesh whose "model" axis spans processes
+    (launch.mesh.make_pod_mesh) the pod's whole device set jointly serves
+    one replica's slots.  Per-leaf specs are derived from the model's own
+    cache_spec logical axes through SERVE_RULES (``pod_decode_rules``) —
+    the same rules machinery the multi-host launcher shards by; the
+    first-use-wins rule in ``spec_for`` keeps the body collective-free by
+    construction (batch leads every decode-state leaf, so the base
+    table's model-axis mappings are dropped per-leaf).  The pool's two
+    vectorized leaves (per-slot "index" positions, per-slot "cross_len")
+    are pinned to the slot axis, which cache_spec declares scalar/batch."""
     import jax
-    from jax.sharding import PartitionSpec as P
 
     from repro.models import LM
     from repro.models.steps import cache_axes
-    from repro.sharding import shard_map
+    from repro.sharding import pod_decode_rules, shard_map, spec_for
 
+    rules = pod_decode_rules(mesh)
     axes = cache_axes(cfg, slots, max_seq)
-
-    def to_spec(ax):
-        return P(*[("data" if a == "batch" else None) for a in ax])
-
-    cache_specs = jax.tree.map(to_spec, axes, is_leaf=_axes_leaf)
-    # SlotPool vectorizes these two over slots (cache_spec says scalar/batch)
-    cache_specs["index"] = P("data")
+    cache_specs = jax.tree.map(lambda ax: spec_for(ax, rules, mesh), axes,
+                               is_leaf=_axes_leaf)
+    cache_specs["index"] = spec_for(("batch",), rules, mesh)
     if "cross_len" in cache_specs:
-        cache_specs["cross_len"] = P("data")
+        cache_specs["cross_len"] = spec_for(("batch",), rules, mesh)
+    tok_spec = spec_for(("batch", "seq"), rules, mesh)
+    logit_spec = spec_for(("batch", "seq", "vocab"), rules, mesh)
+    param_spec = spec_for((), rules, mesh)          # replicated
 
     def local_decode(params, tokens, cache):
         return LM.decode(params, tokens, cfg, cache)
 
     f = shard_map(local_decode, mesh=mesh,
-                  in_specs=(P(), P("data", None), cache_specs),
-                  out_specs=(P("data", None, None), cache_specs),
+                  in_specs=(param_spec, tok_spec, cache_specs),
+                  out_specs=(logit_spec, cache_specs),
                   check_vma=False)
     return jax.jit(f, donate_argnums=(2,))
 
 
 class ShardedReplica(InProcessReplica):
-    """One engine data-parallel over a device mesh: S slots / N devices."""
+    """One engine spanning a device mesh: S slots / N devices.  Any mesh
+    works — the classic local ("data",) axis, or a pod mesh whose "model"
+    axis spans processes (launch.mesh.make_pod_mesh) on backends that can
+    place one program across hosts."""
 
     kind = "sharded"
 
@@ -371,8 +394,12 @@ class SocketReplica:
             "slot_utilization": 0.0, "queue_depth": 0}
         self._conn = conn
         self._proc = proc
-        # handshake: the worker builds the identical engine from the wire
+        # two-step handshake: claim the worker's single mutating session
+        # (a second router racing us bounces typed as WorkerBusyError —
+        # observers attach read-only and are never in contention), then
+        # have the worker build the identical engine from the wire
         # (imports jax + jits lazily — give it a generous first deadline)
+        self._rpc({"op": "attach", "mode": "mutate"})
         self._rpc({"op": "init", "cfg": encode_config(cfg), "slots": slots,
                    "max_seq": max_seq, "seed": seed,
                    "prefill_chunk": prefill_chunk,
@@ -432,6 +459,20 @@ class SocketReplica:
         if "error" in reply:
             if reply.get("etype") == "ValueError":
                 raise ValueError(reply["error"])
+            if reply.get("etype") == "WorkerBusyError":
+                # the worker's mutating session belongs to someone else —
+                # this stub never owned the peer, so fail typed and final
+                self._mark_failed()
+                raise WorkerBusyError(
+                    f"replica {self.replica_id}: {reply['error']}")
+            if reply.get("etype") == "PodDesyncError":
+                # a pod whose ranks diverged retires as a unit — same
+                # router-side surface as a lost rank (reap + requeue),
+                # NEVER a driver-crashing engine error
+                self._mark_failed()
+                raise TransportError(
+                    f"replica {self.replica_id} pod desync: "
+                    f"{reply['error']}")
             raise RuntimeError(
                 f"worker {self.replica_id}: {reply['error']}\n"
                 f"{reply.get('trace', '')}")
@@ -519,6 +560,12 @@ class SocketReplica:
         except TransportError:
             self._mark_failed()
             return out
+        if reply.get("etype") == "PodDesyncError":
+            # the pod's ranks split mid-step: it is dead as a unit — flip
+            # failed so the router's normal reap path (evict + requeue via
+            # lost_requests) handles it like any other lost replica
+            self._mark_failed()
+            return out
         if "error" in reply:           # engine bug, not a transport failure
             raise RuntimeError(
                 f"worker {self.replica_id}: {reply['error']}\n"
@@ -589,7 +636,12 @@ class SocketReplica:
                 self._lifetime_cache = self._rpc({"op": "lifetime"})["lifetime"]
             except TransportError:
                 pass
-        return dict(self._lifetime_cache)
+        out = dict(self._lifetime_cache)
+        # snapshot the nested list too: _mirror_lifetime appends to the
+        # cache in place, and a shallow copy would retroactively mutate
+        # every lifetime() result already handed to a caller
+        out["latencies_ms"] = list(out.get("latencies_ms", ()))
+        return out
 
     def evacuate(self) -> list[Request]:
         self._draining = True
@@ -761,5 +813,70 @@ class TcpReplica(SocketReplica):
             if proc is not None and proc.poll() is None:
                 proc.kill()
             raise
+
+
+class DistributedPodReplica(TcpReplica):
+    """A TcpReplica whose far side is a MULTI-PROCESS POD: ``pod_size``
+    worker ranks (``worker.py --pod-rank R --pod-size N``) jointly backing
+    one replica.  The router's view is unchanged — it dials rank 0 (the
+    RPC head) and speaks the ordinary replica protocol; the head forwards
+    every mutating op to the non-head ranks so the pod steps in lockstep,
+    and cross-checks per-step digests (see worker.py "Pod execution").
+
+    ``addr`` is the HEAD's address of a pod somebody else scheduled; with
+    no address the stub launches a local pod (fleet.launch_pod — demos,
+    CI, the 2-process equivalence tests) and owns every rank's lifetime:
+    close() shuts the head down over the wire (which forwards the
+    shutdown to the ranks) and then reaps all the rank processes."""
+
+    kind = "pod"
+
+    def __init__(self, cfg, *, slots: int, max_seq: int, pod_size: int = 2,
+                 addr: str | tuple[str, int] | None = None, seed: int = 0,
+                 prefill_chunk: int | None = None, replica_id: int = 0,
+                 rpc_timeout_s: float = 120.0,
+                 init_timeout_s: float = 600.0,
+                 connect_timeout_s: float = 10.0,
+                 batch_submits: bool = True):
+        from repro.serving.fleet import launch_pod
+
+        self.pod_size = int(pod_size)
+        self._pod_handle = None
+        if addr is None:
+            self._pod_handle = launch_pod(self.pod_size, once=True)
+            addr = self._pod_handle.head_addr
+        try:
+            super().__init__(cfg, slots=slots, max_seq=max_seq, addr=addr,
+                             seed=seed, prefill_chunk=prefill_chunk,
+                             replica_id=replica_id,
+                             rpc_timeout_s=rpc_timeout_s,
+                             init_timeout_s=init_timeout_s,
+                             connect_timeout_s=connect_timeout_s,
+                             batch_submits=batch_submits)
+        except Exception:
+            if self._pod_handle is not None:
+                self._pod_handle.close()
+            raise
+        if self._pod_handle is not None:
+            # the stub owns the whole pod's lifetime: the head process
+            # carries the liveness probe + shutdown RPC (which it forwards
+            # to the other ranks), close()/failure reaps everything
+            self._proc = self._pod_handle.head_proc
+
+    def close(self):
+        super().close()
+        if self._pod_handle is not None:
+            self._pod_handle.close()
+
+    def __del__(self):
+        try:
+            handle = getattr(self, "_pod_handle", None)
+            if handle is not None:
+                for proc in handle.procs:
+                    if proc.poll() is None:
+                        proc.kill()
+        except Exception:
+            pass
+        super().__del__()
 
 

@@ -41,7 +41,33 @@ from repro.serving.replica import (
 from repro.serving.scheduler import Request
 from repro.serving.transport import TransportError
 
-TOPOLOGIES = ("inproc", "sharded", "proc", "tcp")
+TOPOLOGIES = ("inproc", "sharded", "proc", "tcp", "pod")
+
+
+def _attach_factory(klass, cfg, addr_list, topology, **fixed):
+    """Factory for attach-style replicas (tcp workers, pod heads): ids
+    inside ``addr_list`` dial the operator's pre-scheduled endpoints; ids
+    past it spawn LOCAL stand-ins so scale-up keeps working in a demo
+    without a pod scheduler — but past an EXPLICIT list that substitution
+    is capacity drift, so it is both warned (stderr readers) and counted
+    (``factory.counters["off_list_spawns"]`` → router.metrics(), where the
+    closed loop can see the topology drifting)."""
+    import warnings
+
+    counters = {"off_list_spawns": 0}
+
+    def factory(replica_id: int):
+        addr = addr_list[replica_id] if replica_id < len(addr_list) else None
+        if addr is None and addr_list:
+            counters["off_list_spawns"] += 1
+            warnings.warn(
+                f"{topology} replica {replica_id} exceeds the "
+                f"{len(addr_list)}-pod attach list; spawning a LOCAL "
+                f"worker on the router host", RuntimeWarning, stacklevel=2)
+        return klass(cfg, addr=addr, replica_id=replica_id, **fixed)
+
+    factory.counters = counters
+    return factory
 
 
 def _coerce(obj) -> Replica:
@@ -86,9 +112,9 @@ class ReplicaRouter:
     def from_topology(cls, cfg, topology: str, *, slots: int, max_seq: int,
                       seed: int = 0, prefill_chunk: int | None = None,
                       n_replicas: int = 1, max_replicas: int = 8,
-                      mesh=None, addrs=None,
+                      mesh=None, addrs=None, pod_size: int = 2,
                       batch_submits: bool = True) -> "ReplicaRouter":
-        """Build the fleet for one of the four replica topologies.
+        """Build the fleet for one of the five replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
         sharded — each replica spans the local device mesh (slot axis
@@ -102,9 +128,15 @@ class ReplicaRouter:
                   replica ids past the list spawn local workers on
                   kernel-picked ports, so scale-up keeps working in a demo
                   without a pod scheduler.
+        pod     — each replica is a MULTI-PROCESS pod of ``pod_size``
+                  worker ranks behind one head (DistributedPodReplica):
+                  ``addrs`` lists pre-scheduled pod HEAD addresses;
+                  replica ids past the list launch local pods.
 
-        ``batch_submits`` (proc/tcp) folds per-tick submits into the step
-        RPC — one message per round per replica instead of one per request.
+        ``batch_submits`` (proc/tcp/pod) folds per-tick submits into the
+        step RPC — one message per round per replica instead of one per
+        request.  For the attach topologies, off-list local spawns are
+        counted in ``metrics()["off_list_spawns"]``.
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
@@ -118,27 +150,18 @@ class ReplicaRouter:
                                       replica_id=replica_id,
                                       batch_submits=batch_submits)
         elif topology == "tcp":
-            import warnings
-
             from repro.serving.replica import TcpReplica
-            addr_list = list(addrs or [])
-
-            def factory(replica_id: int):
-                addr = (addr_list[replica_id]
-                        if replica_id < len(addr_list) else None)
-                if addr is None and addr_list:
-                    # the operator gave an explicit pod list — a scale-up or
-                    # eviction replacement past it silently degrading to a
-                    # router-host worker would be invisible capacity drift
-                    warnings.warn(
-                        f"tcp replica {replica_id} exceeds the {len(addr_list)}"
-                        f"-pod attach list; spawning a LOCAL worker on the "
-                        f"router host", RuntimeWarning, stacklevel=2)
-                return TcpReplica(cfg, slots=slots, max_seq=max_seq,
-                                  addr=addr, seed=seed,
-                                  prefill_chunk=prefill_chunk,
-                                  replica_id=replica_id,
-                                  batch_submits=batch_submits)
+            factory = _attach_factory(
+                TcpReplica, cfg, list(addrs or []), topology, slots=slots,
+                max_seq=max_seq, seed=seed, prefill_chunk=prefill_chunk,
+                batch_submits=batch_submits)
+        elif topology == "pod":
+            from repro.serving.replica import DistributedPodReplica
+            factory = _attach_factory(
+                DistributedPodReplica, cfg, list(addrs or []), topology,
+                slots=slots, max_seq=max_seq, seed=seed,
+                prefill_chunk=prefill_chunk, pod_size=pod_size,
+                batch_submits=batch_submits)
         elif topology == "sharded":
             from repro.serving.replica import (
                 ShardedReplica, make_sharded_decode,
@@ -378,6 +401,11 @@ class ReplicaRouter:
             # in-process fleets) — the submit-batching benchmark metric
             "rpc_count": sum(getattr(r, "rpc_count", 0) for r in
                              self.replicas + self._parked + self._retired),
+            # attach topologies: replacements/scale-ups that fell off the
+            # operator's explicit attach list onto router-host workers —
+            # topology drift the closed loop should see, not just stderr
+            "off_list_spawns": getattr(self._factory, "counters",
+                                       {}).get("off_list_spawns", 0),
             "replicas": self.replica_count,
         }
 

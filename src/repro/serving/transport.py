@@ -57,6 +57,15 @@ class TransportError(ConnectionError):
     """The peer is gone (EOF / reset / timeout) or sent a malformed frame."""
 
 
+class WorkerBusyError(TransportError):
+    """The worker already has a mutating session.  A listening worker
+    serves ONE mutator (a router's SocketReplica) plus any number of
+    read-only observers concurrently; a second ``attach(mode="mutate")``
+    is rejected with this type — the wire carries it as
+    ``etype: "WorkerBusyError"`` and the dialing stub re-raises it, so a
+    router racing another router for a pod fails typed, not desynced."""
+
+
 # --------------------------------------------------------------------- frames
 
 

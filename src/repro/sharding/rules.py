@@ -98,6 +98,23 @@ def serve_rules(global_batch: int) -> AxisRules:
     return SERVE_RULES if global_batch >= 16 else SERVE_RULES_SMALL_BATCH
 
 
+def pod_decode_rules(mesh, base: AxisRules = SERVE_RULES) -> AxisRules:
+    """SERVE_RULES specialized for a replica's shard_map decode tick on
+    ``mesh`` (ShardedReplica, single-host or a multi-process pod).
+
+    The decode body is run under shard_map and is collective-free — purely
+    batch-parallel — so the slot/batch axis must absorb EVERY mesh axis.
+    Mapping "batch" to all of them does two things at once: the pod's full
+    device set (the "model" axis included, even when it spans hosts)
+    jointly serves one replica's S slots, and ``spec_for``'s first-use-wins
+    rule then DROPS the base table's model-axis mappings (cache_seq,
+    kv_heads, vocab) on every cache/logits leaf — batch is the leading
+    sharded dim of every decode-state leaf, so no leaf can demand a
+    collective the body doesn't perform.  The spec derivation itself is the
+    same rules machinery the multi-host launcher shards by."""
+    return base.replace(batch=tuple(mesh.axis_names))
+
+
 def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -79,11 +79,11 @@ def test_split_and_delayed_frames_are_observationally_identical(tcp_worker):
 
 @pytest.mark.slow
 def test_sever_mid_frame_reaps_replica_and_recovers_requests(tcp_worker):
-    """The worker's FIRST step reply is cut in half (frame 2 server→client;
-    frame 1 was the init ack).  The stub must see a typed failure — not a
-    hang — flip failed, emit a crash report, and hand back rewound
-    requests for requeue."""
-    with ChaosProxy(tcp_worker, s2c=FaultPlan(sever_in_frame=2)) as proxy:
+    """The worker's FIRST step reply is cut in half (frame 3 server→client;
+    frames 1–2 were the attach and init acks).  The stub must see a typed
+    failure — not a hang — flip failed, emit a crash report, and hand back
+    rewound requests for requeue."""
+    with ChaosProxy(tcp_worker, s2c=FaultPlan(sever_in_frame=3)) as proxy:
         rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
                          addr=proxy.addr, replica_id=9, rpc_timeout_s=60.0)
         try:
@@ -112,13 +112,13 @@ def test_duplicated_reply_frame_retires_replica_never_mismatches(tcp_worker):
     teardown races it, the dead channel EOFs), flip failed, emit a crash
     report, and recover the submitter's requests.  What it must NEVER do
     is hand a stale reply to the wrong call or hang."""
-    with ChaosProxy(tcp_worker, s2c=FaultPlan(duplicate_frame=2)) as proxy:
+    with ChaosProxy(tcp_worker, s2c=FaultPlan(duplicate_frame=3)) as proxy:
         rep = TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
                          addr=proxy.addr, replica_id=3, rpc_timeout_s=60.0)
         try:
             [req] = _requests(1)
             rep.submit(req, now=0.0)
-            rep.step(1.0)                  # reply #2 arrives twice
+            rep.step(1.0)                  # reply #3 arrives twice
             with pytest.raises(TransportError):
                 rep._rpc({"op": "report"})
             assert rep.failed
@@ -194,8 +194,9 @@ def test_duplicated_reply_is_a_seq_desync_not_a_silent_mismatch():
 
 @pytest.mark.slow
 def test_corrupted_reply_payload_is_typed_error(tcp_worker):
-    """One flipped byte inside the init reply payload → malformed JSON →
-    TransportError from the constructor, never a hang."""
+    """One flipped byte inside the attach reply payload (the handshake's
+    first server frame) → malformed JSON → TransportError from the
+    constructor, never a hang."""
     with ChaosProxy(tcp_worker, s2c=FaultPlan(corrupt_in_frame=1)) as proxy:
         with pytest.raises(TransportError):
             TcpReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,

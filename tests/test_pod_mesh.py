@@ -1,0 +1,131 @@
+"""The multi-process pod plumbing that runs without spawning a pod:
+mesh construction, the pod decode rules' collective-free guarantee, the
+lockstep step digest, and the worker CLI's pod-flag validation."""
+import json
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import jax
+from repro.launch.mesh import (
+    local_pod_mesh, make_pod_mesh, spmd_across_processes,
+)
+from repro.serving.worker import PodRuntime, step_digest
+from repro.sharding import SERVE_RULES, pod_decode_rules, spec_for
+
+
+# ------------------------------------------------------------------- meshes
+
+
+def test_make_pod_mesh_axes_and_layout():
+    mesh = make_pod_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, len(jax.devices()))
+    # explicit arrangement: the model axis is the raw device order (which
+    # is process-major under jax.distributed — the axis that spans hosts)
+    assert list(mesh.devices[0]) == list(jax.devices())
+
+
+def test_make_pod_mesh_rejects_indivisible_data():
+    with pytest.raises(ValueError):
+        make_pod_mesh(data=len(jax.devices()) + 1)
+
+
+def test_local_pod_mesh_covers_local_devices():
+    mesh = local_pod_mesh()
+    assert mesh.axis_names == ("model",)
+    assert mesh.devices.size == len(jax.local_devices())
+
+
+def test_spmd_probe_trivially_true_single_process():
+    assert jax.process_count() == 1
+    assert spmd_across_processes() is True
+
+
+# ------------------------------------------------------- pod decode rules
+
+
+def test_pod_decode_rules_batch_absorbs_every_mesh_axis():
+    mesh = make_pod_mesh()
+    rules = pod_decode_rules(mesh)
+    assert rules.get("batch") == ("data", "model")
+    # a KV-cache leaf: batch leads, so SERVE_RULES' model-axis mappings
+    # (cache_seq here) are dropped by first-use-wins — the shard_map body
+    # stays collective-free on ANY mesh
+    kv = spec_for(("layers", "batch", "cache_seq", "kv_heads", None),
+                  rules, mesh)
+    assert kv == P(None, ("data", "model"))
+    logits = spec_for(("batch", "seq", "vocab"), rules, mesh)
+    assert logits == P(("data", "model"))
+    # base table untouched for non-batch axes that DON'T collide
+    assert SERVE_RULES.get("cache_seq") == ("model",)
+
+
+def test_pod_decode_rules_on_classic_data_mesh_match_legacy():
+    """On the single-host ("data",) mesh the derived specs are exactly the
+    pre-pod hand-written ones — the generalization is a no-op there."""
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((len(jax.devices()),), ("data",))
+    rules = pod_decode_rules(mesh)
+    assert spec_for(("layers", "batch", "cache_seq", "kv_heads", None),
+                    rules, mesh) == P(None, "data")
+    assert spec_for(("batch", "seq"), rules, mesh) == P("data")
+    assert spec_for(("batch",), rules, mesh) == P("data")
+
+
+# ------------------------------------------------------------ step digest
+
+
+def _reply(completed, queue_depth=0, active=0):
+    return {"completed": completed, "queue_depth": queue_depth,
+            "active": active}
+
+
+def test_step_digest_order_independent_and_sensitive():
+    a = _reply([{"rid": 1, "tokens_out": [5, 6]},
+                {"rid": 2, "tokens_out": [7]}], 3, 1)
+    b = _reply([{"rid": 2, "tokens_out": [7]},
+                {"rid": 1, "tokens_out": [5, 6]}], 3, 1)
+    assert step_digest(a) == step_digest(b)           # completion order: no
+    assert step_digest(a) != step_digest(_reply(      # tokens: yes
+        [{"rid": 1, "tokens_out": [5, 9]},
+         {"rid": 2, "tokens_out": [7]}], 3, 1))
+    assert step_digest(a) != step_digest(             # queue state: yes
+        _reply(a["completed"], 2, 1))
+    json.dumps(step_digest(a))                        # wire-safe
+
+
+def test_step_digest_ignores_host_local_timestamps():
+    base = [{"rid": 1, "tokens_out": [5], "t_done": 1.0}]
+    other = [{"rid": 1, "tokens_out": [5], "t_done": 9.9}]
+    assert step_digest(_reply(base)) == step_digest(_reply(other))
+
+
+# ------------------------------------------------------------- worker CLI
+
+
+def test_worker_cli_validates_pod_flags():
+    from repro.serving.worker import main
+
+    with pytest.raises(SystemExit):
+        main(["--pod-rank", "0", "--pod-size", "2"])      # needs --listen
+    with pytest.raises(SystemExit):
+        main(["--listen", "127.0.0.1:0", "--pod-rank", "1"])   # no size
+    with pytest.raises(SystemExit):
+        main(["--listen", "127.0.0.1:0", "--pod-rank", "2",
+              "--pod-size", "2"])                         # rank out of range
+    with pytest.raises(SystemExit):
+        main(["--listen", "127.0.0.1:0", "--pod-rank", "0",
+              "--pod-size", "3", "--pod-peers", "127.0.0.1:1"])  # 1 != 2
+    with pytest.raises(SystemExit):
+        main(["--listen", "127.0.0.1:0", "--pod-rank", "1",
+              "--pod-size", "2", "--pod-peers", "127.0.0.1:1"])  # head-only
+
+
+def test_pod_runtime_roles():
+    head = PodRuntime(0, 2, "127.0.0.1:9999", ("127.0.0.1:1",))
+    rank = PodRuntime(1, 2, "127.0.0.1:9999")
+    assert head.is_head and not rank.is_head
+    assert head.info()["rank"] == 0 and rank.info()["size"] == 2
+    assert head.info()["mode"] is None        # no engine built yet

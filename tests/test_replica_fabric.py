@@ -525,6 +525,90 @@ def test_tcp_router_attaches_to_prestarted_fleet():
         router2.close()
 
 
+def _skip_if_pod_unavailable(e: Exception):
+    """The pod smoke is gated, not required: where multi-process init is
+    unavailable (no jax.distributed backend, sandboxed CI) skip cleanly —
+    any OTHER failure is a real bug and must fail the test."""
+    msg = str(e).lower()
+    if any(s in msg for s in ("distributed", "initialize", "coordinator")):
+        pytest.skip(f"multi-process pod unavailable here: {e}")
+    raise e
+
+
+@pytest.mark.slow
+def test_pod_replica_matches_sharded_topology_with_live_observer():
+    """Acceptance: a 2-process pod — two worker ranks joined over
+    jax.distributed, rank 0 the RPC head, lockstep verified by per-step
+    digests — serves a seeded stream observationally identical to the
+    single-host `sharded` topology, while a READ-ONLY metrics attach polls
+    the head concurrently during decode without perturbing the stream (the
+    observer's lifetime counters match the router-side stub's at every
+    poll)."""
+    from repro.serving import DistributedPodReplica, MetricsObserver
+
+    cfg = TINY_CFGS["dense"]
+    want = _run_replica(ShardedReplica(
+        cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+        mesh=_mesh_1d(1)), _requests(3, seed=7))
+    try:
+        pod = DistributedPodReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ,
+                                    prefill_chunk=4, pod_size=2)
+    except Exception as e:
+        _skip_if_pod_unavailable(e)
+    try:
+        obs = MetricsObserver(pod.addr)
+        info = obs.status()["pod"]
+        assert info["rank"] == 0 and info["size"] == 2
+        assert info["process_count"] == 2        # the cluster really formed
+        reqs = _requests(3, seed=7)
+        done, now = [], 0.0
+        for r in reqs[:2]:
+            pod.submit(r, now=0.0)
+        for _ in range(2):
+            now += 1.0
+            done.extend(pod.step(now))
+            assert obs.lifetime() == pod.lifetime()   # concurrent, agreeing
+        for r in reqs[2:]:
+            pod.submit(r, now=now)
+        while len(done) < 3 and now < 200:
+            now += 1.0
+            done.extend(pod.step(now))
+            assert obs.lifetime() == pod.lifetime()
+        got = {r.rid: tuple(r.tokens_out) for r in done}
+        assert got == want
+        obs.close()
+    finally:
+        pod.close()
+
+
+@pytest.mark.slow
+def test_pod_closed_loop_matches_inproc():
+    """The router addresses a pod as ONE replica: the full closed loop on
+    the pod topology (each replica = a 2-rank pod) reproduces the inproc
+    topology's token streams and scaling decisions on the same seed."""
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    cfg = TINY_CFGS["dense"]
+    results = {}
+    for topology in ("inproc", "pod"):
+        lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                        steps_per_tick=6, topology=topology, pod_size=2)
+        sink = []
+        try:
+            router, logs = run_closed_loop(cfg, autoscale=True, ticks=6,
+                                           seed=0, lc=lc, sink=sink)
+        except Exception as e:
+            _skip_if_pod_unavailable(e)
+        results[topology] = {
+            "decisions": [(t.replicas, t.reason) for t in logs],
+            "served": [t.served for t in logs],
+            "streams": {r.rid: tuple(r.tokens_out) for r in sink},
+        }
+        router.close()
+    assert results["inproc"] == results["pod"]
+    assert results["inproc"]["streams"]
+
+
 @pytest.mark.slow
 def test_submit_reroutes_around_silently_dead_replica():
     """A worker that dies BETWEEN steps is invisible until an RPC touches

@@ -1,0 +1,309 @@
+"""Concurrent worker sessions: one mutator + read-only observers.
+
+The --listen worker's accept loop multiplexes ONE mutating session (a
+router's SocketReplica) with any number of read-only observer attaches.
+Pinned here:
+
+* a second mutate attach is rejected with a TYPED WorkerBusyError (both
+  via the explicit attach handshake and via a legacy implicit first op);
+* an observer sees the SAME lifetime() counters the router's session sees,
+  mid-decode, without draining the mutator's metric window;
+* an observer severed mid-frame leaves the mutating session unharmed;
+* an observer issuing a mutating op is bounced per-message with a typed
+  PermissionError and the observer session survives;
+* the closed loop can carry out-of-band observer attaches
+  (LoopConfig.observe_addrs) whose counters match the router's fleet
+  metrics at the end of the run;
+* the tcp/pod factories count off-list local spawns into
+  router.metrics()["off_list_spawns"] (the topology-drift signal).
+"""
+import socket
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    MetricsObserver, ReplicaRouter, Request, TcpReplica, WorkerBusyError,
+    launch_fleet, spawn_worker,
+)
+from repro.serving.transport import Connection, dial
+
+from conftest import TINY_CFGS
+
+SLOTS = 2
+MAX_SEQ = 24
+
+
+def _requests(n, prompt_len=6, gen_len=4, seed=0):
+    cfg = TINY_CFGS["dense"]
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(
+                3, cfg.vocab, size=prompt_len).astype(np.int32),
+                gen_len=gen_len) for i in range(n)]
+
+
+@pytest.mark.slow
+def test_second_mutator_rejected_typed_and_observers_concurrent():
+    """One spawned worker: the first TcpReplica owns the mutating session;
+    a second TcpReplica attach fails with WorkerBusyError (typed, no
+    desync); an observer attached THROUGHOUT polls the same lifetime
+    counters the router-side stub sees mid-decode — and its polls never
+    perturb the token stream (asserted against a fresh identical run)."""
+    cfg = TINY_CFGS["dense"]
+    addr, proc = spawn_worker(once=False)
+    try:
+        rep = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=addr)
+        obs = MetricsObserver(addr)
+        with pytest.raises(WorkerBusyError):
+            TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, addr=addr)
+        # ... the rejection did not disturb either live session
+        assert obs.ping()
+
+        reqs = _requests(4, gen_len=5)
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        done, now = [], 0.0
+        mid_lifetimes = []
+        while len(done) < 4 and now < 100:
+            now += 1.0
+            done.extend(rep.step(now))
+            # concurrent poll, mid-decode: same counters both sides
+            mid_lifetimes.append((obs.lifetime(), rep.lifetime()))
+        assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+        for seen_by_observer, seen_by_router in mid_lifetimes:
+            assert seen_by_observer == seen_by_router
+        assert any(lt["total_completed"] > 0
+                   for lt, _ in mid_lifetimes[:-1]), \
+            "observer never caught the pod mid-stream"
+        streams = {r.rid: tuple(r.tokens_out) for r in done}
+        rep.close()
+        obs.close()
+
+        # unobserved control run on a fresh attach: identical stream
+        rep2 = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                          addr=addr)
+        for r in _requests(4, gen_len=5):
+            rep2.submit(r, now=0.0)
+        done2, now = [], 0.0
+        while len(done2) < 4 and now < 100:
+            now += 1.0
+            done2.extend(rep2.step(now))
+        assert {r.rid: tuple(r.tokens_out) for r in done2} == streams
+        rep2.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+@pytest.mark.slow
+def test_observer_severed_mid_frame_leaves_mutator_unharmed():
+    """Write half a frame on an observer connection and slam it shut: the
+    worker must drop that observer and keep serving the mutating session
+    without a hiccup."""
+    cfg = TINY_CFGS["dense"]
+    addr, proc = spawn_worker(once=True)
+    try:
+        rep = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=addr)
+        reqs = _requests(2, gen_len=4)
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        done = [r for r in rep.step(1.0)]
+
+        # a raw observer that dies mid-frame: declare 64 bytes, send 3, RST
+        raw = socket.create_connection(addr, timeout=10)
+        conn = Connection(raw, timeout=10)
+        conn.send({"op": "attach", "mode": "observe", "seq": 0})
+        assert conn.recv()["ok"]
+        raw.sendall(struct.pack(">I", 64) + b'{"o')
+        raw.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                       struct.pack("ii", 1, 0))   # RST, not FIN — the rudest
+        raw.close()
+
+        now = 1.0
+        while len(done) < 2 and now < 100:
+            now += 1.0
+            done.extend(rep.step(now))
+        assert sorted(r.rid for r in done) == [0, 1]
+        assert all(len(r.tokens_out) == 4 for r in done)
+        assert rep.lifetime()["total_completed"] == 2
+        rep.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+@pytest.mark.slow
+def test_observer_stalled_mid_frame_does_not_block_mutator():
+    """The sharper isolation property: an observer that sends HALF a frame
+    and then goes quiet — socket alive, frame never finished — must cost
+    the mutating session nothing (per-session receive buffers; the partial
+    frame just parks).  When the observer finally finishes the frame, it
+    gets served."""
+    import time
+
+    cfg = TINY_CFGS["dense"]
+    addr, proc = spawn_worker(once=True)
+    try:
+        rep = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         addr=addr)
+        raw = socket.create_connection(addr, timeout=30)
+        stalled = Connection(raw, timeout=30)
+        stalled.send({"op": "attach", "mode": "observe", "seq": 0})
+        assert stalled.recv()["ok"]
+        frame = struct.pack(">I", 30) + b'{"op":"ping"'   # 12 of 30 bytes
+        raw.sendall(frame)                                # ...and stall
+
+        reqs = _requests(2, gen_len=3)
+        t0 = time.monotonic()
+        for r in reqs:
+            rep.submit(r, now=0.0)
+        done, now = [], 0.0
+        while len(done) < 2 and now < 100:
+            now += 1.0
+            done.extend(rep.step(now))
+        assert sorted(r.rid for r in done) == [0, 1]
+        # the stalled half-frame cost the mutator nothing (well under the
+        # 30s session send deadline — generous bound for a loaded CI box)
+        assert time.monotonic() - t0 < 20.0
+        raw.sendall(b',"seq":1}' + b" " * (30 - 12 - 9))  # finish the frame
+        reply = stalled.recv()
+        assert reply["ok"] and reply["seq"] == 1
+        stalled.close()
+        rep.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+def test_pod_desync_reply_reaps_replica_instead_of_crashing():
+    """A PodDesyncError step reply (the head detected rank divergence)
+    must surface exactly like a lost replica — stub flips failed, step
+    returns, lost requests recoverable — NEVER as a driver-crashing
+    RuntimeError: one drifted rank costs one pod, not the whole fleet."""
+    import threading
+
+    from repro.serving.transport import Listener
+
+    lst = Listener("127.0.0.1", 0)
+
+    def fake_pod_head():
+        conn = lst.accept(timeout=30, conn_timeout=30)
+        while True:
+            msg = conn.recv()
+            if msg["op"] == "step":
+                conn.send({"error": "pod lockstep divergence on step",
+                           "etype": "PodDesyncError", "seq": msg["seq"]})
+                return
+            conn.send({"ok": True, "seq": msg["seq"]})
+
+    t = threading.Thread(target=fake_pod_head, daemon=True)
+    t.start()
+    cfg = TINY_CFGS["dense"]
+    rep = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                     addr=lst.addr, rpc_timeout_s=30.0)
+    [req] = _requests(1, gen_len=2)
+    rep.submit(req, now=0.0)
+    out = rep.step(1.0)                    # desync reply: no raise
+    assert out == [] and rep.failed
+    assert [r.rid for r in rep.lost_requests()] == [0]
+    t.join(timeout=10)
+    lst.close()
+
+
+@pytest.mark.slow
+def test_observer_mutating_op_bounced_typed_session_survives():
+    cfg = TINY_CFGS["dense"]
+    addr, proc = spawn_worker(once=True)
+    try:
+        rep = TcpReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, addr=addr)
+        obs = MetricsObserver(addr)
+        for bad_op in ("evacuate", "resume", "report", "step", "shutdown"):
+            with pytest.raises(PermissionError):
+                obs._rpc({"op": bad_op})
+        # the bounces were per-message: the observer session is intact
+        assert obs.ping()
+        assert obs.status()["initialized"]
+        obs.close()
+        rep.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+@pytest.mark.slow
+def test_legacy_implicit_mutator_claim_still_works():
+    """A pre-attach client whose first op is init must still get the
+    mutating session; a second such client bounces typed."""
+    cfg = TINY_CFGS["dense"]
+    from repro.serving.transport import encode_config
+    addr, proc = spawn_worker(once=False)
+    try:
+        conn = dial(*addr, timeout=120)
+        conn.send({"op": "init", "cfg": encode_config(cfg), "slots": SLOTS,
+                   "max_seq": MAX_SEQ, "seed": 0, "prefill_chunk": None,
+                   "replica_id": 0, "seq": 0})
+        assert conn.recv()["ok"]
+        late = dial(*addr, timeout=30)
+        late.send({"op": "ping", "seq": 0})
+        reply = late.recv()
+        assert reply.get("etype") == "WorkerBusyError"
+        late.close()
+        conn.close()
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        proc.wait(timeout=30)
+
+
+@pytest.mark.slow
+def test_closed_loop_observe_addrs_out_of_band_counters():
+    """The closed loop drives a tcp fleet while holding read-only observer
+    attaches on the same workers: the out-of-band lifetime counters it
+    logs per tick must add up to the router's own fleet metrics at the
+    end — two views of one fleet, over two kinds of session."""
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    cfg = TINY_CFGS["dense"]
+    with launch_fleet(2) as fleet:
+        lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                        steps_per_tick=6, topology="tcp",
+                        addrs=tuple(fleet.addrs),
+                        observe_addrs=tuple(fleet.addrs))
+        router, logs = run_closed_loop(cfg, autoscale=True, ticks=6, seed=0,
+                                       lc=lc)
+        assert all(len(t.observed) == 2 for t in logs)
+        observed_completed = sum(
+            o["lifetime"]["total_completed"] for o in logs[-1].observed)
+        assert observed_completed == router.metrics()["completed"] > 0
+        router.close()
+
+
+def test_off_list_spawns_surface_in_router_metrics():
+    """An eviction replacement (or scale-up) past an explicit attach list
+    spawns a LOCAL worker — stderr already warns; the count must ALSO be
+    visible to the control plane via router.metrics()."""
+    cfg = TINY_CFGS["dense"]
+    with launch_fleet(1) as fleet:
+        with pytest.warns(RuntimeWarning, match="attach list"):
+            router = ReplicaRouter.from_topology(
+                cfg, "tcp", slots=SLOTS, max_seq=16, prefill_chunk=4,
+                n_replicas=2, max_replicas=2, addrs=fleet.addrs)
+        try:
+            assert router.metrics()["off_list_spawns"] == 1
+            # an on-list-only fleet reports zero
+        finally:
+            router.close()
+    router2 = ReplicaRouter.from_topology(
+        cfg, "proc", slots=SLOTS, max_seq=16, prefill_chunk=4,
+        n_replicas=1, max_replicas=1)
+    try:
+        assert router2.metrics()["off_list_spawns"] == 0
+    finally:
+        router2.close()
