@@ -296,6 +296,103 @@ def run_rpc_batching(topology: str = "tcp", batch: int = 4, rounds: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# KV-pool ablation (dense per-slot rings vs paged block tables)
+# ---------------------------------------------------------------------------
+
+POOL_SCALES = {
+    # the dense variant gets dense_slots rings of max_seq tokens; the paged
+    # variant gets THE SAME cache HBM (dense_slots·nk blocks, + the trash
+    # block) but n_requests slots over it — prefix sharing is what lets the
+    # oversubscription actually admit
+    "smoke": dict(n_requests=8, prefix_len=12, prompt_len=13, gen_len=3,
+                  dense_slots=4, max_seq=16, block_size=4),
+    "full": dict(n_requests=12, prefix_len=24, prompt_len=25, gen_len=7,
+                 dense_slots=4, max_seq=32, block_size=4),
+}
+
+
+def _pool_run(pool: str, *, n_requests, prefix_len, prompt_len, gen_len,
+              dense_slots, max_seq, block_size, seed: int = 0):
+    """One warmup request (publishes the prefix blocks), then a burst of
+    n_requests sharing its prefix; returns (peak in-flight, streams,
+    lifetime counters, cache token capacity)."""
+    from repro.configs import get_smoke_config
+    from repro.serving import ServingEngine, shared_prefix_requests
+    from repro.sim.serving import WorkloadSpec
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    nk = max_seq // block_size
+    if pool == "paged":
+        num_blocks = dense_slots * nk + 1
+        eng = ServingEngine(cfg, slots=n_requests, max_seq=max_seq,
+                            prefill_chunk=prompt_len, pool="paged",
+                            block_size=block_size, num_blocks=num_blocks)
+        cache_tokens = num_blocks * block_size
+    else:
+        eng = ServingEngine(cfg, slots=dense_slots, max_seq=max_seq,
+                            prefill_chunk=prompt_len)
+        cache_tokens = dense_slots * max_seq
+    spec = WorkloadSpec(prompt_len=prompt_len, gen_len=gen_len)
+    rng = np.random.default_rng(seed)
+    reqs = shared_prefix_requests(spec, n_requests + 1, cfg.vocab,
+                                  prefix_len=prefix_len, rng=rng)
+    done, now = [], 0.0
+    eng.submit(reqs[0], now=now)         # warmup: registers the prefix
+    while not eng.idle:
+        now += 1.0
+        done.extend(eng.step(now=now))
+    for r in reqs[1:]:                   # the burst rides the warm prefix
+        eng.submit(r, now=now)
+    peak = 0
+    while len(done) < len(reqs) and now < 2000:
+        now += 1.0
+        done.extend(eng.step(now=now))
+        peak = max(peak, int(eng.active.sum()))
+    assert len(done) == len(reqs), f"stalled at {len(done)}/{len(reqs)}"
+    return peak, {r.rid: list(r.tokens_out) for r in done}, \
+        eng.lifetime(), cache_tokens
+
+
+def run_pool_ablation(smoke: bool = True, seed: int = 0):
+    """Dense per-slot rings vs the paged block-table pool AT FIXED CACHE
+    HBM, on a shared-prefix burst.  Records the two acceptance bars: peak
+    concurrent in-flight ≥2× dense, and prefill compute cut by the shared-
+    prefix fraction (prefill_tokens = prompt_tokens - tokens_shared) — while
+    the token streams stay bit-identical."""
+    scale = POOL_SCALES["smoke" if smoke else "full"]
+    t0 = time.perf_counter()
+    peak_d, streams_d, lt_d, hbm_d = _pool_run("dense", seed=seed, **scale)
+    peak_p, streams_p, lt_p, hbm_p = _pool_run("paged", seed=seed, **scale)
+    wall = time.perf_counter() - t0
+    match = streams_d == streams_p
+    shared_frac = lt_p["tokens_shared"] / max(lt_p["prompt_tokens"], 1)
+    accounting_ok = (lt_p["prefill_tokens"]
+                     == lt_p["prompt_tokens"] - lt_p["tokens_shared"])
+    return {
+        "name": "kv_pool_ablation",
+        "streams_match": bool(match),
+        "inflight_ratio": peak_p / max(peak_d, 1),
+        "derived": (f"paged vs dense at ~{hbm_d} cached tokens: peak "
+                    f"in-flight {peak_d}->{peak_p} "
+                    f"({peak_p / max(peak_d, 1):.1f}x), prefill "
+                    f"{lt_d['prefill_tokens']}->{lt_p['prefill_tokens']} "
+                    f"tokens ({shared_frac:.0%} shared), streams match: "
+                    f"{match}, wall {wall:.1f}s"),
+        "detail": {"dense": {"peak_inflight": peak_d, "cache_tokens": hbm_d,
+                             "prefill_tokens": lt_d["prefill_tokens"],
+                             "prompt_tokens": lt_d["prompt_tokens"]},
+                   "paged": {"peak_inflight": peak_p, "cache_tokens": hbm_p,
+                             "prefill_tokens": lt_p["prefill_tokens"],
+                             "prompt_tokens": lt_p["prompt_tokens"],
+                             "prefix_hits": lt_p["prefix_hits"],
+                             "tokens_shared": lt_p["tokens_shared"]},
+                   "shared_frac": shared_frac,
+                   "accounting_ok": bool(accounting_ok),
+                   "scale": scale, "seed": seed, "wall_s": wall},
+    }
+
+
+# ---------------------------------------------------------------------------
 # decode-kernel ablation (pallas vs jnp reference data path)
 # ---------------------------------------------------------------------------
 
@@ -388,6 +485,12 @@ if __name__ == "__main__":
                          "proc/tcp also record submit-batching RPC counts; "
                          "pod runs the gated ≥2-process jax.distributed "
                          "smoke (BENCH_serving_pod.json)")
+    ap.add_argument("--pool", choices=["dense", "paged"], default=None,
+                    help="KV-pool ablation: dense per-slot rings vs paged "
+                         "block tables with prefix sharing at fixed cache "
+                         "HBM (either value runs BOTH variants — the flag "
+                         "records which layout is under test; writes "
+                         "BENCH_paged.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest ablation scale (CI artifact)")
     ap.add_argument("--out", default=None,
@@ -402,6 +505,20 @@ if __name__ == "__main__":
         print(res["derived"])
         if not res["tokens_match"]:
             raise SystemExit("kernel ablation: token streams diverged")
+    elif args.pool:
+        res = run_pool_ablation(smoke=args.smoke)
+        with open(args.out or "BENCH_paged.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if not res["streams_match"]:
+            raise SystemExit("pool ablation: token streams diverged")
+        if res["inflight_ratio"] < 2.0:
+            raise SystemExit("pool ablation: paged pool should hold >=2x "
+                             "the dense pool's concurrent requests at "
+                             "fixed cache HBM")
+        if not res["detail"]["accounting_ok"]:
+            raise SystemExit("pool ablation: prefill_tokens != "
+                             "prompt_tokens - tokens_shared")
     elif args.topology == "pod":
         res = run_pod_smoke()
         print(res["derived"])

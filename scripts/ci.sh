@@ -9,9 +9,11 @@
 # TCP (2 local workers + the submit-batching RPC before/after —
 # BENCH_serving.json), proc (BENCH_serving_proc.json), and the gated
 # ≥2-process pod smoke (jax.distributed ranks via --pod-rank; skips cleanly
-# where multi-process init is unavailable — BENCH_serving_pod.json) —
-# perf-trajectory artifacts the workflow uploads — then the closed-loop
-# serving smoke.  Mirrors .github/workflows/ci.yml so the same command
+# where multi-process init is unavailable — BENCH_serving_pod.json), and the
+# KV-pool ablation (paged block tables vs dense rings at fixed cache HBM:
+# ≥2x concurrent in-flight + shared-prefix prefill savings, streams
+# bit-identical — BENCH_paged.json) — perf-trajectory artifacts the workflow
+# uploads — then the closed-loop serving smoke.  Mirrors .github/workflows/ci.yml so the same command
 # works locally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -27,4 +29,5 @@ python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.js
 python -m benchmarks.serving_latency --topology tcp --smoke --out BENCH_serving.json
 python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving_proc.json
 python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_pod.json
+python -m benchmarks.serving_latency --pool paged --smoke --out BENCH_paged.json
 python examples/serve_autoscale.py --smoke

@@ -71,25 +71,47 @@ class MetricsCollector:
 
     def aggregate(self, tick: int, *, n_replicas: int,
                   max_replicas: int) -> dict:
-        """Fleet-level record for this tick (the DNN's input record)."""
+        """Fleet-level record for this tick (the DNN's input record).
+
+        Staleness is handled per channel KIND.  Gauges (util, queue depth,
+        transport) decay by 0.5**stale — a silent replica's last level is
+        still weak evidence of its current level.  EVENT channels (latency
+        samples, request/error counts) come only from fresh reports: those
+        events happened once, in the window they were reported — replaying
+        them every aggregate counted each completed request and its latency
+        once per tick of silence, inflating fleet throughput and freezing
+        the latency percentiles on whatever the stale replica last saw.
+
+        Replicas silent past max_staleness are PRUNED outright — reports,
+        error flags, and latency EWMAs: a retired replica's state must not
+        hold collector memory (or a straggler flag) for the rest of the
+        run."""
         lat, reqs, errs = [], 0, 0
         util = {"flop_util": [], "hbm_util": [], "ici_util": [], "mem_frac": []}
         qd, transport = [], []
+        dead = []
         for rid, buf in self.reports.items():
             if not buf:
+                dead.append(rid)
                 continue
             r = buf[-1]
             stale = tick - r.tick
             if stale > self.max_staleness:
-                continue              # long-gone replica: age out entirely
-            w = 0.5 ** stale          # decay stale replicas
-            lat.extend(r.latency_ms_samples)
-            reqs += r.n_requests
-            errs += r.n_errors
+                dead.append(rid)      # long-gone replica: age out entirely
+                continue
+            w = 0.5 ** stale          # decay stale replicas' gauges
+            if stale == 0:
+                lat.extend(r.latency_ms_samples)
+                reqs += r.n_requests
+                errs += r.n_errors
             for k in util:
                 util[k].append(getattr(r, k) * w)
-            qd.append(r.queue_depth)
-            transport.append(r.transport_ms)
+            qd.append(r.queue_depth * w)
+            transport.append(r.transport_ms * w)
+        for rid in dead:
+            del self.reports[rid]
+            self._errored.pop(rid, None)
+            self._lat_ewma.pop(rid, None)
         lat_arr = np.asarray(lat) if lat else np.zeros(1)
         rec = {
             "tick": tick,

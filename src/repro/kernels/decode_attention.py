@@ -124,6 +124,105 @@ def decode_attention_bkgd(q, k_cache, v_cache, index, *, block_k: int = 512,
 
 
 # ---------------------------------------------------------------------------
+# paged decode: the KV pool is (NB, KV, bk, hd) physical blocks and each
+# batch row walks its own (nk,) row of a scalar-prefetched block table
+# ---------------------------------------------------------------------------
+
+
+def _decode_paged_kernel(tbl_ref, idx_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float, bk: int,
+                         nk: int):
+    """Body identical to ``_decode_kernel`` — only the K/V routing differs
+    (the index maps below translate logical block ki through the table)."""
+    del tbl_ref
+    _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, scale=scale, bk=bk, nk=nk)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged_bkgd(q, k_cache, v_cache, tbl, index, *,
+                                interpret: bool = False):
+    """q: (B, KV, G, hd); caches: (NB, KV, bk, hd) shared physical blocks;
+    tbl: (B, nk) int32 block table (row b's logical block j lives in physical
+    block tbl[b, j]); index: (B,) int32 per-row absolute position.
+
+    This is ``decode_attention_bkgd`` with one generalization: the K/V index
+    map reads the scalar-prefetched table, so logical block ki of row b
+    streams physical block ``tbl[b, ki]`` from the pool — the same per-row
+    dead-block clamping applies (blocks past the row's validity horizon
+    re-map to its last live block and the pipeline skips the HBM fetch)."""
+    B, KV, G, hd = q.shape
+    NB, _, bk, _ = k_cache.shape
+    nk = tbl.shape[1]
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    tbl = jnp.asarray(tbl, jnp.int32)
+
+    def kv_map(b, h, ki, tbl_ref, idx_ref):
+        last = jnp.minimum(idx_ref[b] // bk, nk - 1)
+        return (tbl_ref[b, jnp.minimum(ki, last)], h, 0, 0)
+
+    kernel = functools.partial(_decode_paged_kernel, scale=hd ** -0.5,
+                               bk=bk, nk=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ki, t, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, ki, t, i: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, idx, q, k_cache, v_cache)
+
+
+def _paged_update_kernel(blk_ref, off_ref, new_ref, cache_ref, out_ref):
+    del blk_ref, off_ref, cache_ref   # routing happens in the out index map
+    out_ref[...] = new_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_paged_update_bs(cache, new, blk, off, *, interpret: bool = False):
+    """Scatter ``new[b]`` into ``cache[blk[b], off[b]]`` in place.
+
+    cache: (NB, bk, KV, hd) physical block pool (model layout); new:
+    (B, KV, hd); blk/off: (B,) int32 physical block id and in-block offset.
+    The table-resolved coordinates are scalar-prefetched and consumed by the
+    output index map — ``cache_ring_update_bs`` with the row's ring slot
+    replaced by a (block, offset) pair routed through the block table."""
+    NB, bk, KV, hd = cache.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(new.shape[0],),
+        in_specs=[
+            pl.BlockSpec((1, 1, KV, hd), lambda b, k, o: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, KV, hd), lambda b, k, o: (k[b], o[b], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, KV, hd),
+                               lambda b, k, o: (k[b], o[b], 0, 0)),
+    )
+    return pl.pallas_call(
+        _paged_update_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(cache.shape, cache.dtype),
+        input_output_aliases={3: 0},     # cache operand aliases the output
+        interpret=interpret,
+    )(jnp.asarray(blk, jnp.int32), jnp.asarray(off, jnp.int32),
+      new[:, None], cache)
+
+
+# ---------------------------------------------------------------------------
 # per-row ring-buffer K/V write
 # ---------------------------------------------------------------------------
 

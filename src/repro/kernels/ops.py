@@ -14,8 +14,10 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_bhsd
 from repro.kernels.decode_attention import (
+    cache_paged_update_bs,
     cache_ring_update_bs,
     decode_attention_bkgd,
+    decode_attention_paged_bkgd,
 )
 from repro.kernels.ssm_scan import ssm_scan_ssd
 
@@ -61,6 +63,34 @@ def decode_attention(q, k_cache, v_cache, index, *, block_k: int = 512,
     out = decode_attention_bkgd(qt, kt, vt, index, block_k=bk,
                                 interpret=interpret)
     return out.reshape(B, 1, H, hd)
+
+
+def decode_attention_paged(q, k_cache, v_cache, tbl, index, *, interpret=None):
+    """q: (B, 1, H, hd); caches: (NB, bk, KV, hd) physical block pools;
+    tbl: (B, nk) int32 block table; index: scalar or (B,) → (B, 1, H, hd).
+
+    The paged analogue of ``decode_attention``: each batch row's logical
+    sequence is the concatenation of the pool blocks its table row names,
+    so the kernel streams ``tbl[b, ki]`` where the dense kernel streamed
+    block ki of row b's private ring."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qt = q[:, 0].reshape(B, KV, G, hd)  # head h = kv·G + g, as in sdpa_ref
+    kt = jnp.swapaxes(k_cache, 1, 2)    # (NB, KV, bk, hd)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    out = decode_attention_paged_bkgd(qt, kt, vt, tbl, index,
+                                      interpret=interpret)
+    return out.reshape(B, 1, H, hd)
+
+
+def cache_paged_update(cache, new, blk, off, *, interpret=None):
+    """Scatter ``new[b]`` into ``cache[blk[b], off[b]]`` — the table-routed
+    K/V write.  cache: (NB, bk, KV, hd); new: (B, KV, hd); blk/off: (B,)
+    int32 physical block id and in-block offset."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return cache_paged_update_bs(cache, new, blk, off, interpret=interpret)
 
 
 def cache_ring_update(cache, new, slot, *, interpret=None):

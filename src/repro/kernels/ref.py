@@ -54,6 +54,30 @@ def decode_attention_ref(q, k_cache, v_cache, index):
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q, k_cache, v_cache, tbl, index):
+    """q: (B, 1, H, hd); caches: (NB, bk, KV, hd) physical block pools;
+    tbl: (B, nk) int32 block table; index: scalar or (B,).
+
+    The oracle gathers each row's logical sequence out of the block pool
+    (``pool[tbl[b]]`` → (nk, bk, KV, hd) → (nk·bk, KV, hd)) and then runs
+    the dense masked decode attention on it — paged attention must equal
+    dense attention over the gathered view."""
+    B = q.shape[0]
+    nk = tbl.shape[1]
+    bk = k_cache.shape[1]
+    tbl = jnp.asarray(tbl, jnp.int32)
+    kg = k_cache[tbl].reshape(B, nk * bk, *k_cache.shape[2:])
+    vg = v_cache[tbl].reshape(B, nk * bk, *v_cache.shape[2:])
+    return decode_attention_ref(q, kg, vg, index)
+
+
+def cache_paged_update_ref(cache, new, blk, off):
+    """cache: (NB, bk, KV, hd); new: (B, KV, hd); blk/off: (B,) — the jnp
+    scatter the Pallas table-routed write must reproduce exactly."""
+    return cache.at[jnp.asarray(blk, jnp.int32),
+                    jnp.asarray(off, jnp.int32)].set(new.astype(cache.dtype))
+
+
 def cache_ring_update_ref(cache, new, slot):
     """cache: (B, Smax, KV, hd); new: (B, KV, hd); slot: (B,) — the jnp
     scatter the Pallas per-row ring write must reproduce exactly."""

@@ -260,7 +260,7 @@ class Attention:
 
     @staticmethod
     def decode(params, x, cfg, cache, index, *, angles=None, cross_kv=None,
-               cross_len=None):
+               cross_len=None, block_tbl=None):
         """x: (B, 1, d_in); cache: {"k","v"}: (B, Smax, KV, hd); index: the
         absolute position being written — scalar int32, or a (B,) vector when
         each batch row sits at its own position (continuous batching: the
@@ -268,7 +268,13 @@ class Attention:
         slots and validity horizons differ per row).  cross_len: optional
         scalar or (B,) encoder length for the cross_kv branch — key positions
         >= cross_len are masked, so a max_seq-sized cross-K/V pool can hold
-        shorter encodings per slot.  Returns (y, new_cache)."""
+        shorter encodings per slot.  block_tbl: optional (B, nk) int32 block
+        table — when given, cache leaves are a PHYSICAL BLOCK POOL
+        (NB, bk, KV, hd) shared by all rows, row b's logical sequence is the
+        concatenation of blocks ``block_tbl[b]``, and the write lands at
+        (block_tbl[b, pos//bk], pos%bk) instead of a private ring slot
+        (paged KV: slots share prefix blocks, so the pool's leading dim is
+        block-count, not batch).  Returns (y, new_cache)."""
         B = x.shape[0]
         index = jnp.asarray(index, jnp.int32)
         if cross_kv is not None:
@@ -292,6 +298,13 @@ class Attention:
         if angles is not None:
             q = apply_rope(q, angles)
             k = apply_rope(k, angles)
+        if block_tbl is not None:
+            out, new_cache = Attention._decode_paged(q, k, v, cfg, cache,
+                                                     index, block_tbl)
+            y = Linear.apply(params["wo"], out.reshape(B, 1, -1),
+                             dtype=cfg.cdtype)
+            y = constrain(y, ("batch", None, "embed_act"))
+            return y, new_cache
         Smax = cache["k"].shape[1]
         sk = Attention._splitk_ctx(Smax) if index.ndim == 0 else None
         if sk is not None:
@@ -341,6 +354,53 @@ class Attention:
         y = Linear.apply(params["wo"], out.reshape(B, 1, -1), dtype=cfg.cdtype)
         y = constrain(y, ("batch", None, "embed_act"))
         return y, new_cache
+
+    # ---------------- paged decode (block-table KV pool) ------------------
+    #
+    # The cache leaves are a pool of NB fixed-size blocks shared by every
+    # slot; each row's (nk,) table row names the physical blocks that make
+    # up its logical sequence.  Shared prefix blocks appear in several
+    # tables at once — the attention gather reads them read-only, and the
+    # engine's allocator guarantees the write target (pos // bk) is always
+    # a private block, so no kernel-level copy-on-write is needed.
+
+    @staticmethod
+    def _decode_paged(q, k_new, v_new, cfg, cache, index, block_tbl):
+        """q/k_new/v_new: (B, 1, ·, hd); cache leaves (NB, bk, KV, hd);
+        block_tbl (B, nk) int32; index (B,) or scalar int32."""
+        B = q.shape[0]
+        NB, bks = cache["k"].shape[0], cache["k"].shape[1]
+        nk = block_tbl.shape[1]
+        Smax = nk * bks
+        index = jnp.broadcast_to(
+            jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+        # under a shard_map decode the pool is split over the batch/mesh
+        # axes and the engine hands out GLOBAL block ids — rem() maps them
+        # into this shard's local pool (the allocator pins a slot's blocks
+        # to its own partition, so the fold is exact); unsharded, ids are
+        # already < NB and rem() is the identity
+        tbl = jax.lax.rem(jnp.asarray(block_tbl, jnp.int32), NB)
+        rpos = jax.lax.rem(index, Smax)
+        rows = jnp.arange(B)
+        blk = tbl[rows, rpos // bks]
+        off = rpos % bks
+        if cfg.use_pallas:
+            from repro.kernels import ops as kops
+            k_cache = kops.cache_paged_update(cache["k"], k_new[:, 0], blk, off)
+            v_cache = kops.cache_paged_update(cache["v"], v_new[:, 0], blk, off)
+            out = kops.decode_attention_paged(q, k_cache, v_cache, tbl, index)
+        else:
+            k_cache = cache["k"].at[blk, off].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[blk, off].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            kg = k_cache[tbl].reshape(B, Smax, *k_cache.shape[2:])
+            vg = v_cache[tbl].reshape(B, Smax, *v_cache.shape[2:])
+            slots = jnp.arange(Smax, dtype=jnp.int32)
+            bias = jnp.where(slots[None, None, :] <= index[:, None, None],
+                             0.0, NEG_INF).astype(jnp.float32)
+            out = sdpa_ref(q, kg, vg, bias)
+        return out, {"k": k_cache, "v": v_cache}
 
     # ---------------- split-K decode (flash-decoding over the model axis) --
     #

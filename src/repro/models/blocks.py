@@ -66,11 +66,11 @@ class DecoderBlock:
         return x + h, aux
 
     @staticmethod
-    def decode(params, x, cfg, cache, index, *, angles=None):
+    def decode(params, x, cfg, cache, index, *, angles=None, block_tbl=None):
         norm = _norm_cls(cfg)
         h = norm.apply(params["ln1"], x, eps=cfg.norm_eps)
         h, cache = Attention.decode(params["attn"], h, cfg, cache, index,
-                                    angles=angles)
+                                    angles=angles, block_tbl=block_tbl)
         x = x + h
         h = norm.apply(params["ln2"], x, eps=cfg.norm_eps)
         h, _ = DecoderBlock._ffn(params, h, cfg)
@@ -148,10 +148,10 @@ class SharedAttnBlock:
         return x2 + h
 
     @staticmethod
-    def decode(params, x2, cfg, cache, index, *, angles=None):
+    def decode(params, x2, cfg, cache, index, *, angles=None, block_tbl=None):
         h = RMSNorm.apply(params["ln1"], x2, eps=cfg.norm_eps)
         h, cache = Attention.decode(params["attn"], h, cfg, cache, index,
-                                    angles=angles)
+                                    angles=angles, block_tbl=block_tbl)
         x2 = x2 + h
         h = RMSNorm.apply(params["ln2"], x2, eps=cfg.norm_eps)
         h = SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
@@ -243,14 +243,17 @@ class CrossDecoderBlock:
         return x + SwiGLU.apply(params["mlp"], h, dtype=cfg.cdtype)
 
     @staticmethod
-    def decode(params, x, cfg, state, index, *, angles=None, cross_len=None):
+    def decode(params, x, cfg, state, index, *, angles=None, cross_len=None,
+               block_tbl=None):
         """state = {"self": kv-cache, "cross": precomputed (k, v)}.
         cross_len: optional scalar or (B,) encoder length — cross-K/V
         positions >= cross_len are masked (a max_seq-sized cross pool can
-        hold per-slot encoder lengths)."""
+        hold per-slot encoder lengths).  block_tbl routes the SELF cache
+        only — cross K/V is written once at admission and stays dense."""
         h = LayerNorm.apply(params["ln1"], x, eps=cfg.norm_eps)
         h, self_cache = Attention.decode(params["self_attn"], h, cfg,
-                                         state["self"], index, angles=angles)
+                                         state["self"], index, angles=angles,
+                                         block_tbl=block_tbl)
         x = x + h
         h = LayerNorm.apply(params["ln2"], x, eps=cfg.norm_eps)
         h, _ = Attention.decode(params["cross_attn"], h, cfg, None, index,

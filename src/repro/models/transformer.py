@@ -594,8 +594,12 @@ class LM:
     @staticmethod
     def decode(params, tokens, cfg: ModelConfig, cache):
         """tokens: (B, 1) → (logits (B, 1, V), new cache).  cache["index"] is
-        the absolute position of this token."""
+        the absolute position of this token.  A "block_tbl" cache entry
+        ((B, nk) int32) switches attention K/V leaves to the paged block-pool
+        layout — the table is shared by all layers (one allocation per slot)
+        and rides the cache pytree unchanged."""
         index = cache["index"]
+        tbl = cache.get("block_tbl")
         B = tokens.shape[0]
         h = LM._embed(params, tokens, cfg)
         angles = _angles(cfg, B, 1, start=index)
@@ -607,14 +611,16 @@ class LM:
                 lp, st = xs
                 y, st2 = CrossDecoderBlock.decode(lp, x, cfg, st, index,
                                                   angles=angles,
-                                                  cross_len=cross_len)
+                                                  cross_len=cross_len,
+                                                  block_tbl=tbl)
                 return y, st2
             h, new_state = LM._decode_scan(
                 body, h, params["dec_blocks"],
                 {"self": cache["self"], "cross": cache["cross"]}, cfg)
             new_cache = {**cache, **new_state}
         elif cfg.hybrid is not None:
-            h, new_cache = LM._decode_hybrid(params, h, cfg, cache, index, angles)
+            h, new_cache = LM._decode_hybrid(params, h, cfg, cache, index,
+                                             angles, block_tbl=tbl)
         elif cfg.ssm is not None:
             def body(x, xs):
                 lp, st = xs
@@ -625,7 +631,8 @@ class LM:
         else:
             def body(x, xs):
                 lp, st = xs
-                return DecoderBlock.decode(lp, x, cfg, st, index, angles=angles)
+                return DecoderBlock.decode(lp, x, cfg, st, index,
+                                           angles=angles, block_tbl=tbl)
             h, states = LM._decode_scan(body, h, params["blocks"],
                                         cache["layers"], cfg)
             new_cache = {**cache, "layers": states}
@@ -651,7 +658,8 @@ class LM:
         return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
 
     @staticmethod
-    def _decode_hybrid(params, h, cfg, cache, index, angles):
+    def _decode_hybrid(params, h, cfg, cache, index, angles, *,
+                       block_tbl=None):
         emb0 = h
         A = cfg.hybrid.attn_every
         n_shared = cfg.hybrid.n_shared_blocks
@@ -669,7 +677,8 @@ class LM:
             sel = _index_tree(shared, jax.lax.rem(g, n_shared))
             x2 = jnp.concatenate([x, emb0], axis=-1)
             x2, kv2 = SharedAttnBlock.decode(sel, x2, cfg, kv, index,
-                                             angles=angles)
+                                             angles=angles,
+                                             block_tbl=block_tbl)
             x = x + Linear.apply(down_g, x2, dtype=cfg.cdtype)
             return (x, g + 1), (m_states, kv2)
 

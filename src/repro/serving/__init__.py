@@ -58,7 +58,9 @@ from repro.serving.replica import (
 from repro.serving.router import ReplicaRouter, TOPOLOGIES
 from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import FCFSScheduler, Request
-from repro.serving.slots import SlotPool, write_slot
+from repro.serving.slots import (
+    PagedSlotPool, SlotPool, make_pool, paged_cache_spec, write_slot,
+)
 from repro.serving.transport import (
     Connection,
     Listener,
@@ -67,7 +69,9 @@ from repro.serving.transport import (
     dial,
     parse_addr,
 )
-from repro.serving.workload import poisson_arrival_times, synthetic_requests
+from repro.serving.workload import (
+    poisson_arrival_times, shared_prefix_requests, synthetic_requests,
+)
 
 __all__ = [
     "EngineCore", "ServingEngine", "ReplicaRouter", "TOPOLOGIES",
@@ -79,6 +83,7 @@ __all__ = [
     "dial", "parse_addr",
     "SamplingParams", "sample_token",
     "FCFSScheduler", "Request",
-    "SlotPool", "write_slot",
-    "poisson_arrival_times", "synthetic_requests",
+    "SlotPool", "PagedSlotPool", "make_pool", "paged_cache_spec",
+    "write_slot",
+    "poisson_arrival_times", "shared_prefix_requests", "synthetic_requests",
 ]

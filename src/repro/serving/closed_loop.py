@@ -51,6 +51,9 @@ class LoopConfig:
     #                              (0 disables loop-actuated eviction)
     observe_addrs: tuple = ()    # read-only MetricsObserver attaches polled
     #                              each tick (never the router's session)
+    pool: str = "dense"          # replica KV layout: dense | paged
+    block_size: int | None = None   # paged: tokens per physical block
+    num_blocks: int | None = None   # paged: physical blocks per replica
 
 
 @dataclasses.dataclass
@@ -96,15 +99,20 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas, addrs=list(lc.addrs),
-        pod_size=lc.pod_size, batch_submits=lc.batch_submits)
+        pod_size=lc.pod_size, batch_submits=lc.batch_submits,
+        pool=lc.pool, block_size=lc.block_size, num_blocks=lc.num_blocks)
     rng = np.random.default_rng(seed)
     evictor = (EvictionPolicy(k_windows=lc.evict_after)
                if lc.evict_after > 0 else None)
     observers = []
 
-    # virtual-clock service time: streamed prompt tail + generation
-    service_s = ((spec.prompt_len - lc.prefill_chunk) + spec.gen_len + 1) \
-        * lc.tick_s
+    # virtual-clock service time: streamed prompt tail + generation.  The
+    # tail clamps at 0 — a prefill chunk >= the prompt swallows the whole
+    # prompt in one shot; without the clamp the capacity model's service
+    # time went NEGATIVE, inverting the planner (capacity < 0, util pinned
+    # at 1.0, predicted latency negative → never scale up under a spike)
+    service_s = (max(spec.prompt_len - lc.prefill_chunk, 0)
+                 + spec.gen_len + 1) * lc.tick_s
 
     def perf_model(replicas, rps):
         """(latency_ms, util) — capacity model over the engine's own slot

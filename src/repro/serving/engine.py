@@ -34,7 +34,7 @@ import numpy as np
 from repro.models import LM
 from repro.models.steps import make_decode_step, make_prefill_step
 from repro.serving.scheduler import FCFSScheduler, Request
-from repro.serving.slots import SlotPool
+from repro.serving.slots import make_pool
 
 PHASE_FREE, PHASE_PREFILL, PHASE_DECODE = 0, 1, 2
 
@@ -140,7 +140,9 @@ class ServingEngine:
 
     def __init__(self, cfg, *, slots: int, max_seq: int, seed: int = 0,
                  prefill_chunk: int | None = None,
-                 core: EngineCore | None = None, replica_id: int = 0):
+                 core: EngineCore | None = None, replica_id: int = 0,
+                 pool: str = "dense", block_size: int | None = None,
+                 num_blocks: int | None = None, partitions: int = 1):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -150,7 +152,15 @@ class ServingEngine:
         self.params = self.core.params
         self.prefill = self.core.prefill
         self.decode = self.core.decode
-        self.pool = SlotPool(cfg, slots, max_seq)
+        self.pool = make_pool(cfg, slots, max_seq, pool=pool,
+                              block_size=block_size, num_blocks=num_blocks,
+                              partitions=partitions)
+        # "paged" on a family with no pageable leaves (pure SSM, short
+        # sliding windows) degenerates to the dense pool — same cache tree,
+        # so the engine's dense code paths apply unchanged
+        self._paged = getattr(self.pool, "is_paged", False)
+        self.prefill_tokens = 0      # prompt tokens actually computed
+        self.prompt_tokens = 0       # prompt tokens admitted (incl. shared)
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self._tokens_host = np.zeros(slots, np.int32)
         self.pos = np.zeros(slots, np.int64)        # per-slot position
@@ -203,6 +213,16 @@ class ServingEngine:
         if not self.draining:
             free = [s for s in range(self.slots) if not self.active[s]]
             while free and self.scheduler:
+                if self._paged:
+                    # head-of-line capacity gate: a paged pool can have free
+                    # SLOTS but no free BLOCKS (slots oversubscribe the
+                    # pool); admitting anyway would fault mid-decode, and
+                    # skipping ahead would break FCFS order
+                    head = self.scheduler.peek()
+                    if not self.pool.can_admit(
+                            free[0], np.asarray(head.prompt).reshape(-1),
+                            head.gen_len):
+                        break
                 req = self.scheduler.pop()
                 slot = free.pop(0)
                 req.t_admit = now
@@ -241,7 +261,29 @@ class ServingEngine:
         if not self.cfg.attn_free and self.cfg.sliding_window is None:
             # full-attention ring wrap would overwrite live context
             gen_len = min(gen_len, self.max_seq - P)
+        self.prompt_tokens += P
+        if self._paged:
+            h_tok = self.pool.admit_slot(slot, prompt, gen_len)
+            if h_tok > 0:
+                # resident prefix: the shared blocks already hold positions
+                # 0..h_tok-1, so NO prefill runs at all — the rest of the
+                # prompt streams through the decode tick exactly like the
+                # chunked-prefill tail, starting at position h_tok
+                self.prefill_tokens += P - h_tok
+                self.pool.set_slot_index(slot, h_tok)
+                self.pos[slot] = h_tok
+                self._prompt[slot] = prompt
+                self.remaining[slot] = gen_len
+                self.active[slot] = True
+                if request is not None:
+                    self.slot_owner[slot] = request
+                self._tokens_host[slot] = int(prompt[h_tok])
+                self._fed[slot] = h_tok + 1      # h_tok shared + 1 staged
+                self.phase[slot] = PHASE_PREFILL
+                self.tokens = jnp.asarray(self._tokens_host[:, None])
+                return
         c = P if self.prefill_chunk >= P else self.prefill_chunk
+        self.prefill_tokens += P
         inputs = {"tokens": jnp.asarray(prompt[None, :c])}
         if self.cfg.family == "vlm":
             inputs["patches"] = jnp.zeros(
@@ -252,6 +294,11 @@ class ServingEngine:
                                            self.cfg.cdtype)
         logits, cache1 = self.prefill(self.params, inputs)
         self.pool.write(cache1, slot, index=c)
+        if self._paged:
+            # blocks fully covered by the one-shot prefill are complete
+            # prompt prefixes — publish them for future admissions to share
+            for j in range(c // self.pool.block_size):
+                self.pool.register_block(slot, j, prompt)
         self.pos[slot] = c
         self._prompt[slot] = prompt
         self.remaining[slot] = gen_len
@@ -285,6 +332,13 @@ class ServingEngine:
             req = self.slot_owner.get(slot)
             if self.phase[slot] == PHASE_PREFILL:
                 prompt = self._prompt[slot]
+                pos = int(self.pos[slot])
+                if (self._paged and pos % self.pool.block_size == 0
+                        and pos <= len(prompt)):
+                    # a streamed block just filled with pure prompt tokens —
+                    # publish it (positions pos-bk..pos-1 are prompt[:pos])
+                    self.pool.register_block(
+                        slot, pos // self.pool.block_size - 1, prompt)
                 if self._fed[slot] < len(prompt):
                     self._tokens_host[slot] = int(prompt[self._fed[slot]])
                     self._fed[slot] += 1
@@ -317,6 +371,10 @@ class ServingEngine:
         self._prompt[slot] = None
         self._fed[slot] = 0
         self.slot_owner.pop(slot, None)
+        if self._paged:
+            # refcount decrement: blocks nobody references (no table row,
+            # no registry entry) return to the free list immediately
+            self.pool.release(slot)
 
     def preempt_slot(self, slot: int) -> Request | None:
         """Evict an in-flight request from its slot, rewound for requeue.
@@ -339,19 +397,30 @@ class ServingEngine:
             req = self.preempt_slot(int(slot))
             if req is not None:
                 out.append(req)
+        if self._paged:
+            # with every slot released, dropping the prefix registry's own
+            # references drives every block refcount back to zero
+            self.pool.release_registry()
         return out
 
     def lifetime(self) -> dict:
         """Lifetime accumulators for fleet-level metrics — ONE definition,
         shared by the in-process replica wrapper and the subprocess worker,
         so the two transports cannot drift apart field-by-field."""
-        return {
+        out = {
             "latencies_ms": [float(v) for v in self.stats.latencies_ms],
             "total_tokens": int(self.stats.total_tokens),
             "total_completed": int(self.stats.total_completed),
             "slot_utilization": float(self.stats.slot_utilization),
             "queue_depth": int(self.scheduler.depth),
+            "prefill_tokens": int(self.prefill_tokens),
+            "prompt_tokens": int(self.prompt_tokens),
         }
+        if self._paged:
+            out["prefix_hits"] = int(self.pool.n_prefix_hits)
+            out["prefix_admits"] = int(self.pool.n_admits)
+            out["tokens_shared"] = int(self.pool.tokens_shared)
+        return out
 
     # ------------------------------------------------------------- compat
 

@@ -172,10 +172,14 @@ class InProcessReplica:
     def build(cls, cfg, *, slots: int, max_seq: int, seed: int = 0,
               prefill_chunk: int | None = None,
               core: EngineCore | None = None,
-              replica_id: int = 0) -> "InProcessReplica":
+              replica_id: int = 0, pool: str = "dense",
+              block_size: int | None = None,
+              num_blocks: int | None = None) -> "InProcessReplica":
         return cls(ServingEngine(cfg, slots=slots, max_seq=max_seq,
                                  seed=seed, prefill_chunk=prefill_chunk,
-                                 core=core, replica_id=replica_id))
+                                 core=core, replica_id=replica_id,
+                                 pool=pool, block_size=block_size,
+                                 num_blocks=num_blocks))
 
     # ------------------------------------------------------------- protocol
 
@@ -260,7 +264,9 @@ def _axes_leaf(x) -> bool:
                                         for a in x)
 
 
-def make_sharded_decode(cfg, mesh, slots: int, max_seq: int):
+def make_sharded_decode(cfg, mesh, slots: int, max_seq: int, *,
+                        pool: str = "dense", block_size: int | None = None,
+                        num_blocks: int | None = None):
     """The engine decode step under shard_map: the slot/batch axis of the
     tokens, the cache, and the logits is sharded over EVERY axis of
     ``mesh``; params are replicated.  The body is collective-free (decode
@@ -283,7 +289,26 @@ def make_sharded_decode(cfg, mesh, slots: int, max_seq: int):
     from repro.sharding import pod_decode_rules, shard_map, spec_for
 
     rules = pod_decode_rules(mesh)
-    axes = cache_axes(cfg, slots, max_seq)
+    if pool == "paged":
+        # the paged pool swaps the per-slot cache_seq axis for a pooled
+        # cache_blocks axis (+ the block table itself); its spec carries
+        # the logical axes, so derive per-leaf specs from it.  Geometry
+        # defaults resolve through the same helper the engine's pool uses,
+        # with partitions = mesh size — the spec and the pool must agree.
+        from repro.serving.slots import paged_cache_spec, pool_geometry
+
+        def _spec_leaf(x):
+            return (isinstance(x, tuple) and len(x) == 3
+                    and isinstance(x[0], tuple))
+
+        bk, nb = pool_geometry(slots, max_seq, block_size=block_size,
+                               num_blocks=num_blocks,
+                               partitions=int(mesh.devices.size))
+        spec = paged_cache_spec(cfg, slots, max_seq, block_size=bk,
+                                num_blocks=nb)
+        axes = jax.tree.map(lambda leaf: leaf[2], spec, is_leaf=_spec_leaf)
+    else:
+        axes = cache_axes(cfg, slots, max_seq)
     cache_specs = jax.tree.map(lambda ax: spec_for(ax, rules, mesh), axes,
                                is_leaf=_axes_leaf)
     cache_specs["index"] = spec_for(("batch",), rules, mesh)
@@ -314,7 +339,9 @@ class ShardedReplica(InProcessReplica):
     def __init__(self, cfg, *, slots: int, max_seq: int, mesh=None,
                  seed: int = 0, prefill_chunk: int | None = None,
                  core: EngineCore | None = None, replica_id: int = 0,
-                 decode_fn=None):
+                 decode_fn=None, pool: str = "dense",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None):
         if mesh is None:
             import jax
 
@@ -324,11 +351,19 @@ class ShardedReplica(InProcessReplica):
         if slots % n_dev != 0:
             raise ValueError(f"slots ({slots}) must divide evenly over the "
                              f"mesh ({n_dev} devices)")
+        # paged allocator partitions track the mesh: slot s draws blocks
+        # only from its own shard's contiguous block range, so the sharded
+        # decode body's global→local block-id fold stays exact
         engine = ServingEngine(cfg, slots=slots, max_seq=max_seq, seed=seed,
                                prefill_chunk=prefill_chunk, core=core,
-                               replica_id=replica_id)
+                               replica_id=replica_id, pool=pool,
+                               block_size=block_size, num_blocks=num_blocks,
+                               partitions=n_dev)
         engine.decode = (decode_fn if decode_fn is not None
-                         else make_sharded_decode(cfg, mesh, slots, max_seq))
+                         else make_sharded_decode(cfg, mesh, slots, max_seq,
+                                                  pool=pool,
+                                                  block_size=block_size,
+                                                  num_blocks=num_blocks))
         super().__init__(engine)
         self.mesh = mesh
 
@@ -367,7 +402,9 @@ class SocketReplica:
                  replica_id: int = 0, proc: subprocess.Popen | None = None,
                  rpc_timeout_s: float = 120.0,
                  init_timeout_s: float = 600.0,
-                 batch_submits: bool = True):
+                 batch_submits: bool = True, pool: str = "dense",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -403,7 +440,9 @@ class SocketReplica:
         self._rpc({"op": "init", "cfg": encode_config(cfg), "slots": slots,
                    "max_seq": max_seq, "seed": seed,
                    "prefill_chunk": prefill_chunk,
-                   "replica_id": replica_id}, timeout=init_timeout_s)
+                   "replica_id": replica_id, "pool": pool,
+                   "block_size": block_size, "num_blocks": num_blocks},
+                  timeout=init_timeout_s)
 
     # ------------------------------------------------------------- plumbing
 
@@ -759,7 +798,9 @@ class ProcessReplica(SocketReplica):
                  prefill_chunk: int | None = None, replica_id: int = 0,
                  rpc_timeout_s: float = 120.0,
                  init_timeout_s: float = 600.0,
-                 batch_submits: bool = True):
+                 batch_submits: bool = True, pool: str = "dense",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None):
         parent_sock, child_sock = socket.socketpair()
         child_sock.set_inheritable(True)
         proc = subprocess.Popen(
@@ -772,7 +813,8 @@ class ProcessReplica(SocketReplica):
                          prefill_chunk=prefill_chunk, replica_id=replica_id,
                          proc=proc, rpc_timeout_s=rpc_timeout_s,
                          init_timeout_s=init_timeout_s,
-                         batch_submits=batch_submits)
+                         batch_submits=batch_submits, pool=pool,
+                         block_size=block_size, num_blocks=num_blocks)
 
 
 class TcpReplica(SocketReplica):
@@ -791,7 +833,9 @@ class TcpReplica(SocketReplica):
                  rpc_timeout_s: float = 120.0,
                  init_timeout_s: float = 600.0,
                  connect_timeout_s: float = 10.0,
-                 batch_submits: bool = True):
+                 batch_submits: bool = True, pool: str = "dense",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None):
         proc = None
         if addr is None:
             addr, proc = spawn_worker()
@@ -806,7 +850,8 @@ class TcpReplica(SocketReplica):
                              replica_id=replica_id, proc=proc,
                              rpc_timeout_s=rpc_timeout_s,
                              init_timeout_s=init_timeout_s,
-                             batch_submits=batch_submits)
+                             batch_submits=batch_submits, pool=pool,
+                             block_size=block_size, num_blocks=num_blocks)
         except TransportError:
             # dial or handshake died before the stub owned the worker's
             # lifetime — do not leak a locally-spawned process
@@ -837,7 +882,9 @@ class DistributedPodReplica(TcpReplica):
                  rpc_timeout_s: float = 120.0,
                  init_timeout_s: float = 600.0,
                  connect_timeout_s: float = 10.0,
-                 batch_submits: bool = True):
+                 batch_submits: bool = True, pool: str = "dense",
+                 block_size: int | None = None,
+                 num_blocks: int | None = None):
         from repro.serving.fleet import launch_pod
 
         self.pod_size = int(pod_size)
@@ -852,7 +899,8 @@ class DistributedPodReplica(TcpReplica):
                              rpc_timeout_s=rpc_timeout_s,
                              init_timeout_s=init_timeout_s,
                              connect_timeout_s=connect_timeout_s,
-                             batch_submits=batch_submits)
+                             batch_submits=batch_submits, pool=pool,
+                             block_size=block_size, num_blocks=num_blocks)
         except Exception:
             if self._pod_handle is not None:
                 self._pod_handle.close()

@@ -113,7 +113,9 @@ class ReplicaRouter:
                       seed: int = 0, prefill_chunk: int | None = None,
                       n_replicas: int = 1, max_replicas: int = 8,
                       mesh=None, addrs=None, pod_size: int = 2,
-                      batch_submits: bool = True) -> "ReplicaRouter":
+                      batch_submits: bool = True, pool: str = "dense",
+                      block_size: int | None = None,
+                      num_blocks: int | None = None) -> "ReplicaRouter":
         """Build the fleet for one of the five replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
@@ -137,10 +139,17 @@ class ReplicaRouter:
         step RPC — one message per round per replica instead of one per
         request.  For the attach topologies, off-list local spawns are
         counted in ``metrics()["off_list_spawns"]``.
+
+        ``pool`` ∈ {"dense", "paged"} selects each replica's KV layout
+        (serving/slots.py); ``block_size``/``num_blocks`` tune the paged
+        pool's geometry.  The layout is observationally invisible — token
+        streams match the dense pool bit-for-bit on every topology.
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
                              f"(expected one of {TOPOLOGIES})")
+        pool_kw = dict(pool=pool, block_size=block_size,
+                       num_blocks=num_blocks)
         if topology == "proc":
             from repro.serving.replica import ProcessReplica
 
@@ -148,20 +157,20 @@ class ReplicaRouter:
                 return ProcessReplica(cfg, slots=slots, max_seq=max_seq,
                                       seed=seed, prefill_chunk=prefill_chunk,
                                       replica_id=replica_id,
-                                      batch_submits=batch_submits)
+                                      batch_submits=batch_submits, **pool_kw)
         elif topology == "tcp":
             from repro.serving.replica import TcpReplica
             factory = _attach_factory(
                 TcpReplica, cfg, list(addrs or []), topology, slots=slots,
                 max_seq=max_seq, seed=seed, prefill_chunk=prefill_chunk,
-                batch_submits=batch_submits)
+                batch_submits=batch_submits, **pool_kw)
         elif topology == "pod":
             from repro.serving.replica import DistributedPodReplica
             factory = _attach_factory(
                 DistributedPodReplica, cfg, list(addrs or []), topology,
                 slots=slots, max_seq=max_seq, seed=seed,
                 prefill_chunk=prefill_chunk, pod_size=pod_size,
-                batch_submits=batch_submits)
+                batch_submits=batch_submits, **pool_kw)
         elif topology == "sharded":
             from repro.serving.replica import (
                 ShardedReplica, make_sharded_decode,
@@ -172,14 +181,15 @@ class ReplicaRouter:
                 from repro.launch.mesh import make_mesh
                 mesh = make_mesh((len(jax.devices()),), ("data",))
             core = EngineCore(cfg, max_seq, seed=seed)
-            decode_fn = make_sharded_decode(cfg, mesh, slots, max_seq)
+            decode_fn = make_sharded_decode(cfg, mesh, slots, max_seq,
+                                            **pool_kw)
 
             def factory(replica_id: int):
                 return ShardedReplica(cfg, slots=slots, max_seq=max_seq,
                                       mesh=mesh, seed=seed,
                                       prefill_chunk=prefill_chunk, core=core,
                                       replica_id=replica_id,
-                                      decode_fn=decode_fn)
+                                      decode_fn=decode_fn, **pool_kw)
         else:
             core = EngineCore(cfg, max_seq, seed=seed)
 
@@ -187,7 +197,7 @@ class ReplicaRouter:
                 return InProcessReplica.build(
                     cfg, slots=slots, max_seq=max_seq,
                     prefill_chunk=prefill_chunk, core=core,
-                    replica_id=replica_id)
+                    replica_id=replica_id, **pool_kw)
 
         return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas)
 

@@ -23,7 +23,11 @@ class Request:
     rid: int
     prompt: np.ndarray
     gen_len: int
-    sampling: SamplingParams = SamplingParams()
+    # default_factory, NOT a shared class-level instance: safe today only
+    # because SamplingParams is frozen, but a future mutable field would
+    # silently couple every request in the fleet through one object
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # enc-dec families: precomputed encoder frames, (S_enc, d_model) float.
     frames: Optional[np.ndarray] = None
     t_submit: Optional[float] = None
@@ -83,6 +87,11 @@ class FCFSScheduler:
 
     def pop(self) -> Request:
         return self._queue.popleft()
+
+    def peek(self) -> Request:
+        """Head of the queue without removing it — admission gates that may
+        refuse the head (paged pool out of blocks) must not reorder FCFS."""
+        return self._queue[0]
 
     def drain(self) -> list[Request]:
         """Remove and return every queued (not yet admitted) request — used

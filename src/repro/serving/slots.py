@@ -16,11 +16,24 @@ The pool's "index" leaf is a (slots,) int32 vector of per-slot absolute
 positions (the seed engine kept a single scalar — every slot decoded with the
 max position's RoPE angles and validity mask, which is wrong the moment
 admissions stagger).  LM.decode accepts the vector directly.
+
+``PagedSlotPool`` replaces the dense per-slot ring with a block-table pool:
+every *pageable* cache leaf (logical "cache_seq" axis sized max_seq — i.e.
+full-attention K/V) is re-laid as (A, NB, block, KV, hd) physical blocks
+shared by all slots, a (slots, nk) "block_tbl" cache entry names each slot's
+blocks, and blocks are refcounted with prefix sharing: admission of a prompt
+whose block-aligned prefix is already resident maps the shared blocks
+read-only and skips that part of prefill entirely.  Non-pageable leaves
+(SSM state, sliding-window rings, cross K/V) keep the dense per-slot layout.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import LM
 
@@ -96,3 +109,397 @@ class SlotPool:
 
     def set_index(self, values):
         self.cache = {**self.cache, "index": jnp.asarray(values, jnp.int32)}
+
+    def set_slot_index(self, slot: int, pos):
+        idx = self.cache["index"].at[slot].set(jnp.asarray(pos, jnp.int32))
+        self.cache = {**self.cache, "index": idx}
+
+
+# ---------------------------------------------------------------------------
+# paged pool: block-granular allocation + refcounted prefix sharing
+# ---------------------------------------------------------------------------
+
+
+def _is_spec_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple))
+
+
+def _pageable(shape, axes, max_seq: int) -> bool:
+    """A leaf pages iff it has a logical "cache_seq" axis sized max_seq —
+    full-attention K/V.  A sliding-window ring (cache_seq == window <
+    max_seq) is already bounded and wraps, so block-granular allocation
+    buys nothing and the ring arithmetic stays dense."""
+    return "cache_seq" in axes and shape[axes.index("cache_seq")] == max_seq
+
+
+def paged_cache_spec(cfg, slots: int, max_seq: int, *, block_size: int,
+                     num_blocks: int):
+    """LM.cache_spec with pageable leaves re-laid as block pools.
+
+    Pageable (A, slots, max_seq, KV, hd) leaves become
+    (A, num_blocks, block_size, KV, hd) with logical axes
+    ("layers", "cache_blocks", None, "kv_heads", None) — the block axis
+    takes over the role the slot axis played for sharding (pod_decode_rules
+    maps "cache_blocks" onto the same mesh axes as "batch", so a shard owns
+    a contiguous range of physical blocks exactly as it owns a contiguous
+    range of slots).  Adds the (slots, nk) int32 "block_tbl" leaf."""
+    assert max_seq % block_size == 0, (max_seq, block_size)
+    nk = max_seq // block_size
+
+    def one(leaf):
+        shape, dtype, axes = leaf
+        if not _pageable(shape, axes, max_seq):
+            return leaf
+        b_ax = axes.index("batch")
+        s_ax = axes.index("cache_seq")
+        assert s_ax == b_ax + 1, (axes,)   # (…, batch, cache_seq, …)
+        new_shape = (shape[:b_ax] + (num_blocks, block_size)
+                     + shape[s_ax + 1:])
+        new_axes = (axes[:b_ax] + ("cache_blocks", None) + axes[s_ax + 1:])
+        return (new_shape, dtype, new_axes)
+
+    spec = jax.tree.map(one, LM.cache_spec(cfg, slots, max_seq),
+                        is_leaf=_is_spec_leaf)
+    spec["index"] = ((slots,), jnp.int32, ("batch",))
+    if any(_pageable(s, ax, max_seq) for s, _, ax in
+           jax.tree.leaves(LM.cache_spec(cfg, slots, max_seq),
+                           is_leaf=_is_spec_leaf)):
+        spec["block_tbl"] = ((slots, nk), jnp.int32, ("batch", None))
+    return spec
+
+
+def pool_geometry(slots: int, max_seq: int, *, block_size: int | None = None,
+                  num_blocks: int | None = None,
+                  partitions: int = 1) -> tuple[int, int]:
+    """Resolve (block_size, num_blocks) defaults — shared by PagedSlotPool
+    and make_sharded_decode so the spec derivation and the engine's actual
+    pool always agree on the cache geometry."""
+    bk = block_size if block_size is not None else min(8, max_seq)
+    assert max_seq % bk == 0, (max_seq, bk)
+    assert slots % partitions == 0, (slots, partitions)
+    nk = max_seq // bk
+    per_part = slots // partitions
+    if num_blocks is None:
+        # enough for every slot at max_seq, plus the trash block
+        num_blocks = partitions * (per_part * nk + 1)
+    assert num_blocks % partitions == 0, (num_blocks, partitions)
+    return bk, num_blocks
+
+
+def _prefix_key(prompt: np.ndarray, n: int) -> bytes:
+    """Content hash of the first ``n`` prompt tokens — the prefix registry
+    key.  Hashing (rather than the raw token tuple) keeps key size O(1) for
+    long system prompts."""
+    return hashlib.sha1(
+        np.ascontiguousarray(prompt[:n], dtype=np.int64).tobytes()).digest()
+
+
+class PagedSlotPool(SlotPool):
+    """Block-table pool: pageable K/V leaves live in a shared physical block
+    pool; each slot's (nk,) table row names its blocks; blocks are
+    refcounted and prompt prefixes are shared copy-on-write.
+
+    Layout / allocator invariants:
+      - the pool is split into ``partitions`` contiguous ranges (one per
+        shard of a sharded decode); slot s draws only from partition
+        ``s * partitions // slots`` — its blocks stay on the shard that owns
+        its table row, so the shard_map decode body's global→local id fold
+        (``rem(id, NB_local)``) is exact
+      - the FIRST block of each partition is that partition's *trash* block:
+        inactive slots' table rows point at it, so their garbage decode
+        writes land somewhere harmless that no live table row reads
+      - a block's refcount = #slot tables naming it + 1 if the prefix
+        registry holds it; it returns to the free list at zero
+      - admission maps registered prefix blocks read-only (refcount++) and
+        allocates private blocks for the rest; the engine only ever writes
+        positions >= the shared prefix, so shared blocks are never written
+        (``ensure_private`` forks a copy-on-write duplicate for any client
+        that does need to write into a shared block)
+    """
+
+    def __init__(self, cfg, slots: int, max_seq: int, *,
+                 block_size: int | None = None,
+                 num_blocks: int | None = None, partitions: int = 1):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        bk, num_blocks = pool_geometry(slots, max_seq, block_size=block_size,
+                                       num_blocks=num_blocks,
+                                       partitions=partitions)
+        self.block_size = bk
+        self.nk = max_seq // bk
+        self.partitions = partitions
+        self.num_blocks = num_blocks
+        self.nb_local = num_blocks // partitions
+        assert self.nb_local >= self.nk + 1, \
+            "need at least one slot's worth of blocks + trash per partition"
+
+        spec = paged_cache_spec(cfg, slots, max_seq, block_size=bk,
+                                num_blocks=num_blocks)
+        self._paged_leaf = jax.tree.map(
+            lambda s: s[2] is not None and "cache_blocks" in s[2],
+            {k: v for k, v in spec.items() if k not in ("index", "block_tbl")},
+            is_leaf=_is_spec_leaf)
+        self.cache = jax.tree.map(lambda s: jnp.zeros(s[0], s[1]), spec,
+                                  is_leaf=_is_spec_leaf)
+
+        # host-side allocator state
+        self.trash = [p * self.nb_local for p in range(partitions)]
+        self.free: list[list[int]] = [
+            [p * self.nb_local + i for i in range(1, self.nb_local)]
+            for p in range(partitions)]
+        self.refcount = np.zeros(num_blocks, np.int64)
+        self.tables = np.zeros((slots, self.nk), np.int32)
+        for s in range(slots):
+            self.tables[s, :] = self.trash[self._partition(s)]
+        self.slot_blocks: list[list[int]] = [[] for _ in range(slots)]
+        # per-partition prefix registry: key → block id, LRU-ordered.
+        # Sharing needs the ENTIRE per-slot decode state to live in pageable
+        # leaves (+ index) — recurrent SSM/mamba state or cross K/V encodes
+        # the full prefix outside the blocks, so skipping prefill for those
+        # families would skip state the blocks don't carry.
+        self.can_share = (cfg.ssm is None and cfg.hybrid is None
+                          and not cfg.enc_dec
+                          and bool(jax.tree.leaves(self._paged_leaf))
+                          and all(jax.tree.leaves(self._paged_leaf)))
+        self.registry: list[OrderedDict] = [OrderedDict()
+                                            for _ in range(partitions)]
+        self._block_key: dict[int, bytes] = {}
+        # prefix-cache observability (scraped into EngineStats.lifetime)
+        self.n_admits = 0
+        self.n_prefix_hits = 0
+        self.tokens_shared = 0
+        self._sync_tables()
+
+    # ------------------------------------------------------------- layout
+
+    @property
+    def is_paged(self) -> bool:
+        return "block_tbl" in self.cache
+
+    def _partition(self, slot: int) -> int:
+        return slot * self.partitions // self.slots
+
+    def _block_partition(self, block: int) -> int:
+        return block // self.nb_local
+
+    def _sync_tables(self, slot: int | None = None):
+        if "block_tbl" not in self.cache:
+            return
+        if slot is None:
+            tbl = jnp.asarray(self.tables)
+        else:
+            tbl = self.cache["block_tbl"].at[slot].set(
+                jnp.asarray(self.tables[slot]))
+        self.cache = {**self.cache, "block_tbl": tbl}
+
+    # ------------------------------------------------------------- alloc
+
+    def blocks_needed(self, total_len: int) -> int:
+        return -(-min(total_len, self.max_seq) // self.block_size)
+
+    def lookup_prefix(self, slot: int, prompt: np.ndarray):
+        """→ (n_hit_blocks, [block ids]) for the longest registered
+        block-aligned prefix of ``prompt`` on this slot's partition.  Capped
+        at (P-1)//bk blocks so at least one prompt token always streams
+        through the engine (the logits for the first sampled token must come
+        from somewhere)."""
+        if not self.can_share:
+            return 0, []
+        reg = self.registry[self._partition(slot)]
+        P = len(prompt)
+        hit: list[int] = []
+        for j in range((P - 1) // self.block_size):
+            key = _prefix_key(prompt, (j + 1) * self.block_size)
+            blk = reg.get(key)
+            if blk is None:
+                break
+            reg.move_to_end(key)       # LRU touch
+            hit.append(blk)
+        return len(hit), hit
+
+    def _reclaim(self, part: int, need: int):
+        """LRU-evict registry-only blocks (refcount == 1) until the
+        partition's free list can cover ``need`` private blocks."""
+        reg = self.registry[part]
+        while len(self.free[part]) < need:
+            victim = next((k for k, b in reg.items()
+                           if self.refcount[b] == 1), None)
+            if victim is None:
+                break
+            blk = reg.pop(victim)
+            self._block_key.pop(blk, None)
+            self.refcount[blk] -= 1
+            self.free[part].append(blk)
+
+    def can_admit(self, slot: int, prompt: np.ndarray, gen_len: int) -> bool:
+        part = self._partition(slot)
+        h, _ = self.lookup_prefix(slot, prompt)
+        need = self.blocks_needed(len(prompt) + gen_len) - h
+        reg = self.registry[part]
+        evictable = sum(1 for b in reg.values() if self.refcount[b] == 1)
+        return len(self.free[part]) + evictable >= need
+
+    def admit_slot(self, slot: int, prompt: np.ndarray, gen_len: int) -> int:
+        """Build the slot's table row: shared prefix blocks mapped read-only
+        (refcount++), private blocks allocated for the rest, remaining table
+        entries parked on the trash block.  Returns the number of prompt
+        TOKENS already resident (0 → caller runs a full prefill)."""
+        part = self._partition(slot)
+        assert not self.slot_blocks[slot], f"slot {slot} not released"
+        h, shared = self.lookup_prefix(slot, prompt)
+        need_total = self.blocks_needed(len(prompt) + gen_len)
+        n_priv = need_total - h
+        self._reclaim(part, n_priv)
+        assert len(self.free[part]) >= n_priv, \
+            f"partition {part} exhausted ({n_priv} blocks needed)"
+        row = np.full(self.nk, self.trash[part], np.int32)
+        for j, blk in enumerate(shared):
+            self.refcount[blk] += 1
+            row[j] = blk
+        priv = [self.free[part].pop() for _ in range(n_priv)]
+        for j, blk in enumerate(priv):
+            self.refcount[blk] += 1
+            row[h + j] = blk
+        self.tables[slot] = row
+        self.slot_blocks[slot] = shared + priv
+        self._sync_tables(slot)
+        self.n_admits += 1
+        if h:
+            self.n_prefix_hits += 1
+            self.tokens_shared += h * self.block_size
+        return h * self.block_size
+
+    def register_block(self, slot: int, j: int, prompt: np.ndarray):
+        """Publish the slot's j-th block (fully written with
+        prompt[:(j+1)·bk]) into the prefix registry — future admissions with
+        the same prefix map it read-only.  The registry holds its own
+        reference, so the block survives the slot's release."""
+        if not self.can_share:
+            return
+        part = self._partition(slot)
+        blk = int(self.tables[slot, j])
+        if blk == self.trash[part]:
+            return
+        key = _prefix_key(prompt, (j + 1) * self.block_size)
+        reg = self.registry[part]
+        if key in reg:
+            return
+        reg[key] = blk
+        self._block_key[blk] = key
+        self.refcount[blk] += 1
+
+    def ensure_private(self, slot: int, j: int):
+        """Copy-on-write fork: if the slot's j-th block is shared
+        (refcount > 1), allocate a private copy, copy the block's contents
+        in every pageable leaf, and repoint the table row.  The serving
+        engine never needs this (it only writes past the shared prefix);
+        it is the safety valve for clients that edit resident context."""
+        part = self._partition(slot)
+        blk = int(self.tables[slot, j])
+        if blk == self.trash[part] or self.refcount[blk] <= 1:
+            return blk
+        self._reclaim(part, 1)
+        assert self.free[part], f"partition {part} exhausted (COW fork)"
+        new = self.free[part].pop()
+        b_ax = 1   # pageable leaves are (A, NB, bk, KV, hd)
+
+        def copy(leaf, paged):
+            if not paged:
+                return leaf
+            idx = [slice(None)] * leaf.ndim
+            idx[b_ax] = new
+            src = [slice(None)] * leaf.ndim
+            src[b_ax] = blk
+            return leaf.at[tuple(idx)].set(leaf[tuple(src)])
+
+        rest = {k: v for k, v in self.cache.items()
+                if k not in ("index", "block_tbl")}
+        rest = jax.tree.map(copy, rest, self._paged_leaf)
+        self.cache = {**self.cache, **rest}
+        self.refcount[new] += 1
+        self.refcount[blk] -= 1
+        pos = self.slot_blocks[slot].index(blk)
+        self.slot_blocks[slot][pos] = new
+        self.tables[slot, j] = new
+        self._sync_tables(slot)
+        return new
+
+    def release(self, slot: int):
+        """Drop the slot's references; blocks whose refcount reaches zero
+        return to their partition's free list.  Registered prefix blocks
+        survive (the registry's own reference keeps them resident)."""
+        part = self._partition(slot)
+        for blk in self.slot_blocks[slot]:
+            self.refcount[blk] -= 1
+            if self.refcount[blk] == 0:
+                self.free[self._block_partition(blk)].append(blk)
+        self.slot_blocks[slot] = []
+        self.tables[slot, :] = self.trash[part]
+        self._sync_tables(slot)
+
+    def release_registry(self):
+        """Drop every prefix-registry reference (engine evacuate): with all
+        slots released, every refcount returns to zero and the pool is
+        back to its freshly-initialized occupancy."""
+        for part, reg in enumerate(self.registry):
+            for key, blk in list(reg.items()):
+                self.refcount[blk] -= 1
+                if self.refcount[blk] == 0:
+                    self.free[self._block_partition(blk)].append(blk)
+            reg.clear()
+        self._block_key.clear()
+
+    # ------------------------------------------------------------- write
+
+    def write(self, one, slot: int, *, index=None):
+        """Write a batch-1 DENSE cache pytree (from prefill) into ``slot``:
+        dense leaves merge exactly as in SlotPool; pageable leaves are cut
+        into bk-token chunks and scattered into the slot's allocated
+        physical blocks (shared prefix blocks are never among them — on a
+        prefix hit the engine skips prefill, so write() only ever sees
+        fully-private admissions)."""
+        ids = np.asarray(self.tables[slot], np.int32)
+        n_alloc = len(self.slot_blocks[slot])
+        bk = self.block_size
+
+        def write_leaf(pool, o, paged):
+            if not paged:
+                return write_slot(pool, o, slot)
+            o = _pad_to_pool_seq(pool, o, self.max_seq)
+            # (A, 1, Smax, KV, hd) → (A, nk, bk, KV, hd) chunks
+            A = o.shape[0]
+            chunks = o[:, 0].reshape((A, self.nk, bk) + o.shape[3:])
+            tgt = jnp.asarray(ids[:n_alloc])
+            return pool.at[:, tgt].set(
+                chunks[:, :n_alloc].astype(pool.dtype))
+
+        rest_pool = {k: v for k, v in self.cache.items()
+                     if k not in ("index", "block_tbl")}
+        rest_one = {k: v for k, v in one.items() if k != "index"}
+        rest = jax.tree.map(write_leaf, rest_pool, rest_one, self._paged_leaf)
+        pos = one["index"] if index is None else index
+        idx = self.cache["index"].at[slot].set(jnp.asarray(pos, jnp.int32))
+        self.cache = {**self.cache, **rest, "index": idx}
+
+
+def _pad_to_pool_seq(pool, one, max_seq: int):
+    """Zero-pad a batch-1 prefill leaf's seq axis (axis 2 of
+    (A, 1, S, KV, hd)) up to max_seq so it cuts into nk whole blocks."""
+    short = max_seq - one.shape[2]
+    if short > 0:
+        pad = [(0, 0)] * one.ndim
+        pad[2] = (0, short)
+        one = jnp.pad(one, pad)
+    return one
+
+
+def make_pool(cfg, slots: int, max_seq: int, *, pool: str = "dense",
+              block_size: int | None = None, num_blocks: int | None = None,
+              partitions: int = 1):
+    """Pool factory: ``pool`` ∈ {"dense", "paged"}."""
+    if pool == "paged":
+        return PagedSlotPool(cfg, slots, max_seq, block_size=block_size,
+                             num_blocks=num_blocks, partitions=partitions)
+    assert pool == "dense", pool
+    return SlotPool(cfg, slots, max_seq)

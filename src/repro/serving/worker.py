@@ -250,11 +250,18 @@ class PodRuntime:
         mesh = local_pod_mesh()
         cfg = decode_config(msg["cfg"])
         slots, max_seq = int(msg["slots"]), int(msg["max_seq"])
+        pool = msg.get("pool") or "dense"
+        block_size, num_blocks = msg.get("block_size"), msg.get("num_blocks")
         engine = ServingEngine(cfg, slots=slots, max_seq=max_seq,
                                seed=int(msg.get("seed", 0)),
                                prefill_chunk=msg.get("prefill_chunk"),
-                               replica_id=int(msg.get("replica_id", 0)))
-        engine.decode = make_sharded_decode(cfg, mesh, slots, max_seq)
+                               replica_id=int(msg.get("replica_id", 0)),
+                               pool=pool, block_size=block_size,
+                               num_blocks=num_blocks,
+                               partitions=int(mesh.devices.size))
+        engine.decode = make_sharded_decode(cfg, mesh, slots, max_seq,
+                                            pool=pool, block_size=block_size,
+                                            num_blocks=num_blocks)
         return engine
 
     def info(self) -> dict:
@@ -286,7 +293,10 @@ def handle(engine, msg: dict, pod: PodRuntime | None = None):
                                max_seq=int(msg["max_seq"]),
                                seed=int(msg.get("seed", 0)),
                                prefill_chunk=msg.get("prefill_chunk"),
-                               replica_id=int(msg.get("replica_id", 0)))
+                               replica_id=int(msg.get("replica_id", 0)),
+                               pool=msg.get("pool") or "dense",
+                               block_size=msg.get("block_size"),
+                               num_blocks=msg.get("num_blocks"))
         return {"ok": True, "engine": engine}
     if op == "status":
         # observer-safe: reads accumulators, drains nothing.  The lifetime

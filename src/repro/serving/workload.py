@@ -30,3 +30,25 @@ def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                 gen_len=spec.gen_len, sampling=sampling)
         for i in range(n)
     ]
+
+
+def shared_prefix_requests(spec: WorkloadSpec, n: int, vocab: int, *,
+                           prefix_len: int, rng: np.random.Generator,
+                           base_rid: int = 0,
+                           sampling: SamplingParams = SamplingParams()
+                           ) -> list[Request]:
+    """n requests sharing one ``prefix_len``-token system prompt; the rest
+    of each prompt is private.  The shape a paged pool's prefix cache is
+    built for — the first admission prefills the prefix, later ones map its
+    blocks read-only."""
+    assert 0 <= prefix_len <= spec.prompt_len, (prefix_len, spec.prompt_len)
+    prefix = rng.integers(3, vocab, size=prefix_len).astype(np.int32)
+    return [
+        Request(rid=base_rid + i,
+                prompt=np.concatenate(
+                    [prefix,
+                     rng.integers(3, vocab, size=spec.prompt_len - prefix_len
+                                  ).astype(np.int32)]),
+                gen_len=spec.gen_len, sampling=sampling)
+        for i in range(n)
+    ]

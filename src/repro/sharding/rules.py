@@ -111,8 +111,15 @@ def pod_decode_rules(mesh, base: AxisRules = SERVE_RULES) -> AxisRules:
     kv_heads, vocab) on every cache/logits leaf — batch is the leading
     sharded dim of every decode-state leaf, so no leaf can demand a
     collective the body doesn't perform.  The spec derivation itself is the
-    same rules machinery the multi-host launcher shards by."""
-    return base.replace(batch=tuple(mesh.axis_names))
+    same rules machinery the multi-host launcher shards by.
+
+    "cache_blocks" (the physical-block axis of a paged KV pool) maps to the
+    same axes as "batch": a shard owns a contiguous range of blocks exactly
+    as it owns a contiguous range of slots, and the paged allocator pins a
+    slot's blocks to its own partition, so the decode body stays
+    collective-free in the paged layout too."""
+    axes = tuple(mesh.axis_names)
+    return base.replace(batch=axes, cache_blocks=axes)
 
 
 def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:

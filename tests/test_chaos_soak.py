@@ -47,6 +47,7 @@ def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
             for i in range(N_REQUESTS)]
 
     done, killed, evicted_ids = [], [], []
+    flagged_ever: set[int] = set()
     submitted, now, tick = 0, 0.0, 0
     try:
         while (len(done) < N_REQUESTS or submitted < N_REQUESTS) \
@@ -65,6 +66,8 @@ def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
             done.extend(router.step(now))
             for rep in router.reports(tick):
                 collector.submit(rep)
+                if rep.n_errors > 0:    # recorded NOW — aggregate() prunes
+                    flagged_ever.add(rep.replica_id)
             if tick in STRAGGLE_TICKS:
                 # scripted straggler: one live replica "goes slow" (injected
                 # latency evidence), the rest stay at baseline
@@ -76,6 +79,15 @@ def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
             evicted_ids.extend(router.evict_stragglers(
                 policy.update(collector.stragglers(),
                               router.replica_count), now=now))
+            collector.aggregate(tick, n_replicas=router.replica_count,
+                                max_replicas=4)
+
+        # drain ticks: age every retired replica past max_staleness so the
+        # footprint assertions below observe the pruned steady state
+        for _ in range(collector.max_staleness + 1):
+            tick += 1
+            collector.aggregate(tick, n_replicas=router.replica_count,
+                                max_replicas=4)
 
         # every admitted request completed EXACTLY once, fully generated
         counts = Counter(r.rid for r in done)
@@ -98,8 +110,15 @@ def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
 
         # and the control plane SAW the faults: each killed replica's crash
         # report reached the collector as a straggler flag at some point
-        flagged_ever = {rid for rid, buf in collector.reports.items()
-                        if any(r.n_errors > 0 for r in buf)}
         assert set(killed) <= flagged_ever
+
+        # retired replicas aged out of the collector entirely — reports,
+        # error flags, latency EWMAs: a 120-tick soak's collector footprint
+        # is bounded by the LIVE fleet, not the whole churn history
+        retired = set(killed) | set(evicted_ids)
+        assert retired and not retired & set(collector.reports)
+        assert not retired & set(collector._errored)
+        assert not retired & set(collector._lat_ewma)
+        assert len(collector.reports) <= router.replica_count + 1
     finally:
         router.close()

@@ -1,0 +1,537 @@
+"""Paged KV cache: block-table pool, refcounted prefix sharing, COW forks.
+
+Four layers, mirroring the PR's acceptance bar:
+
+* kernel parity — the block-gather decode kernel and the table-routed
+  cache scatter against their jnp oracles AND against the dense ring
+  kernels laid out identically (the bit-identity basis);
+* allocator unit tests — refcounts, prefix registry LRU, copy-on-write,
+  capacity gating, and the ≥2× concurrent-in-flight claim at fixed HBM;
+* engine equivalence — shared-prefix workloads produce token streams
+  bit-identical to the dense pool on every model family, with staggered
+  admission and mid-run preemption (router downscale), and refcounts
+  return to zero after evacuate();
+* this PR's satellite bugfix regressions — the closed loop's negative
+  service-time capacity model, the collector's stale-report replay and
+  unbounded retired-replica footprint, and Request's shared class-level
+  SamplingParams default.
+"""
+import dataclasses
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (
+    PagedSlotPool, Request, SamplingParams, ServingEngine, make_pool,
+    paged_cache_spec,
+)
+from repro.serving.engine import EngineCore
+
+from conftest import TINY_CFGS
+
+MAX_SEQ = 24
+BK = 4
+FAMILIES = ["dense", "swa", "vlm", "moe", "hybrid"]
+
+
+@functools.lru_cache(maxsize=None)
+def core_for(family: str, use_pallas: bool = False) -> EngineCore:
+    cfg = TINY_CFGS[family]
+    if use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
+    return EngineCore(cfg, MAX_SEQ, seed=0)
+
+
+def make_engine(family: str, *, slots=2, prefill_chunk=4, pool="dense",
+                use_pallas=False, **kw) -> ServingEngine:
+    core = core_for(family, use_pallas)
+    return ServingEngine(core.cfg, slots=slots, max_seq=MAX_SEQ,
+                         prefill_chunk=prefill_chunk, core=core, pool=pool,
+                         **kw)
+
+
+def shared_prefix_requests(family: str, n, *, prefix_len=8, prompt_len=11,
+                           gen_len=3, seed=0):
+    cfg = TINY_CFGS[family]
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(3, cfg.vocab, size=prefix_len).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefix, rng.integers(3, cfg.vocab,
+                                              size=prompt_len - prefix_len
+                                              ).astype(np.int32)]),
+                    gen_len=gen_len) for i in range(n)]
+
+
+def run_staggered(eng, reqs, max_steps=600):
+    """Submit one request per tick (staggered admission), run to drain."""
+    done, now, i = [], 0.0, 0
+    for _ in range(max_steps):
+        if i < len(reqs):
+            eng.submit(reqs[i], now=now)
+            i += 1
+        now += 1.0
+        done.extend(eng.step(now=now))
+        if len(done) >= len(reqs) and eng.idle:
+            return {r.rid: tuple(r.tokens_out) for r in done}
+    raise AssertionError(f"stalled at {len(done)}/{len(reqs)}")
+
+
+# ------------------------------------------------------------ kernel parity
+
+
+@pytest.mark.kernels
+def test_paged_decode_attention_matches_ref():
+    from repro.kernels import ops, ref
+
+    B, H, KV, hd, NB = 3, 4, 2, 32, 13
+    nk, bk = 4, 8
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, 1, H, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (NB, bk, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (NB, bk, KV, hd))
+    rng = np.random.default_rng(3)
+    # each row walks a distinct permutation of physical blocks
+    tbl = np.stack([rng.permutation(NB)[:nk] for _ in range(B)]).astype(np.int32)
+    for index in ([0, 7, 31], [31, 12, 1], [5, 5, 5]):
+        idx = np.asarray(index, np.int32)
+        out = ops.decode_attention_paged(q, kc, vc, tbl, idx, interpret=True)
+        want = ref.decode_attention_paged_ref(q, kc, vc, tbl, idx)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.kernels
+def test_paged_decode_attention_matches_dense_kernel_bitwise():
+    """The bit-identity basis: lay a dense (B, Smax, KV, hd) ring into the
+    block pool under an identity table — the paged kernel must reproduce
+    the dense vector-index kernel's output EXACTLY (same flash recurrence,
+    same block schedule, only the address computation differs)."""
+    from repro.kernels import ops
+
+    B, H, KV, hd, Smax, bk = 2, 4, 2, 32, 64, 8
+    nk = Smax // bk
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, 1, H, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(key, 1), (B, Smax, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 2), (B, Smax, KV, hd))
+    # identity layout: block b*nk + j holds row b's tokens [j*bk, (j+1)*bk)
+    pool_k = kc.reshape(B * nk, bk, KV, hd)
+    pool_v = vc.reshape(B * nk, bk, KV, hd)
+    tbl = np.arange(B * nk, dtype=np.int32).reshape(B, nk)
+    index = np.asarray([Smax - 1, 23], np.int32)
+    dense = ops.decode_attention(q, kc, vc, index, block_k=bk, interpret=True)
+    paged = ops.decode_attention_paged(q, pool_k, pool_v, tbl, index,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(paged))
+
+
+@pytest.mark.kernels
+def test_paged_cache_update_matches_ref():
+    from repro.kernels import ops, ref
+
+    NB, bk, KV, hd, B = 9, 8, 2, 32, 4
+    key = jax.random.PRNGKey(2)
+    cache = jax.random.normal(key, (NB, bk, KV, hd), jnp.float32)
+    new = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, hd))
+    blk = np.asarray([1, 4, 7, 2], np.int32)
+    off = np.asarray([0, 3, 7, 5], np.int32)
+    got = ops.cache_paged_update(cache, new, blk, off, interpret=True)
+    want = ref.cache_paged_update_ref(cache, new, blk, off)
+    np.testing.assert_allclose(got, want, atol=0, rtol=0)
+    # untouched blocks bit-identical to the input
+    mask = np.ones(NB, bool)
+    mask[blk] = False
+    np.testing.assert_array_equal(np.asarray(got)[mask],
+                                  np.asarray(cache)[mask])
+
+
+# ------------------------------------------------------------ allocator
+
+
+def test_paged_cache_spec_layout():
+    cfg = TINY_CFGS["dense"]
+    spec = paged_cache_spec(cfg, 4, MAX_SEQ, block_size=BK, num_blocks=25)
+    (shape, dtype, axes) = spec["layers"]["k"]
+    assert shape == (cfg.n_layers, 25, BK, cfg.n_kv_heads,
+                     cfg.d_model // cfg.n_heads)
+    assert axes == ("layers", "cache_blocks", None, "kv_heads", None)
+    assert spec["block_tbl"][0] == (4, MAX_SEQ // BK)
+    assert spec["index"][0] == (4,)
+
+
+def test_admit_release_returns_refcounts_to_zero():
+    pool = PagedSlotPool(TINY_CFGS["dense"], 2, MAX_SEQ, block_size=BK)
+    free0 = len(pool.free[0])
+    prompt = np.arange(3, 14, dtype=np.int32)         # 11 tokens
+    assert pool.can_admit(0, prompt, 3)
+    h = pool.admit_slot(0, prompt, 3)
+    assert h == 0                                     # cold registry
+    need = pool.blocks_needed(11 + 3)
+    assert len(pool.slot_blocks[0]) == need
+    assert all(pool.refcount[b] == 1 for b in pool.slot_blocks[0])
+    pool.release(0)
+    assert (pool.refcount == 0).all()
+    assert len(pool.free[0]) == free0
+    # the freed row parks on the trash block
+    assert (pool.tables[0] == pool.trash[0]).all()
+
+
+def test_prefix_sharing_and_registry_refcounts():
+    pool = PagedSlotPool(TINY_CFGS["dense"], 2, MAX_SEQ, block_size=BK)
+    prompt = np.arange(3, 14, dtype=np.int32)         # 11 tokens, 2 whole blocks
+    pool.admit_slot(0, prompt, 3)
+    # prefill published both whole prompt blocks ((P-1)//bk = 2)
+    for j in range(2):
+        pool.register_block(0, j, prompt)
+    # same prefix, different tail → 2 blocks resident
+    prompt2 = np.concatenate([prompt[:8], np.asarray([60, 61, 62], np.int32)])
+    h = pool.admit_slot(1, prompt2, 3)
+    assert h == 2 * BK
+    assert pool.n_prefix_hits == 1 and pool.tokens_shared == 2 * BK
+    shared = pool.slot_blocks[1][:2]
+    assert shared == pool.slot_blocks[0][:2]
+    # 1 (slot 0) + 1 (slot 1) + 1 (registry)
+    assert all(pool.refcount[b] == 3 for b in shared)
+    pool.release(0)
+    assert all(pool.refcount[b] == 2 for b in shared)   # survives release
+    pool.release(1)
+    assert all(pool.refcount[b] == 1 for b in shared)   # registry's ref
+    pool.release_registry()
+    assert (pool.refcount == 0).all()
+
+
+def test_copy_on_write_fork_preserves_contents():
+    pool = PagedSlotPool(TINY_CFGS["dense"], 2, MAX_SEQ, block_size=BK)
+    prompt = np.arange(3, 14, dtype=np.int32)
+    pool.admit_slot(0, prompt, 3)
+    for j in range(2):
+        pool.register_block(0, j, prompt)
+    pool.admit_slot(1, prompt, 3)                     # maps blocks 0,1 shared
+    blk = int(pool.tables[1, 0])
+    # mark the shared block's contents so the copy is observable
+    k = pool.cache["layers"]["k"]
+    marked = k.at[:, blk].set(7.5)
+    pool.cache = {**pool.cache,
+                  "layers": {**pool.cache["layers"], "k": marked}}
+    new = pool.ensure_private(1, 0)
+    assert new != blk
+    assert int(pool.tables[1, 0]) == new
+    assert int(pool.tables[0, 0]) == blk              # slot 0 untouched
+    k = pool.cache["layers"]["k"]
+    np.testing.assert_array_equal(np.asarray(k[:, new]), np.asarray(k[:, blk]))
+    assert pool.refcount[new] == 1
+    # a block the slot owns privately is returned unchanged
+    priv = int(pool.tables[0, 2])
+    assert pool.ensure_private(0, 2) == priv
+
+
+def test_registry_lru_reclaim_under_pressure():
+    """A full pool evicts registry-only (refcount == 1) blocks LRU-first to
+    admit new work — the prefix cache is a cache, not a leak."""
+    cfg = TINY_CFGS["dense"]
+    nk = MAX_SEQ // BK
+    # room for exactly 2 full-length slots (+ trash)
+    pool = PagedSlotPool(cfg, 2, MAX_SEQ, block_size=BK,
+                         num_blocks=2 * nk + 1)
+    long_a = np.arange(3, 3 + 20, dtype=np.int32)     # 20 tokens + 4 gen
+    pool.admit_slot(0, long_a, 4)
+    for j in range(4):
+        pool.register_block(0, j, long_a)
+    pool.release(0)                                   # registry holds 4 blocks
+    assert sum(pool.refcount > 0) == 4
+    long_b = np.arange(40, 60, dtype=np.int32)        # disjoint prompt
+    assert pool.can_admit(0, long_b, 4)               # evictable counts
+    pool.admit_slot(0, long_b, 4)
+    pool.admit_slot(1, long_b[::-1].copy(), 4)        # forces full reclaim
+    assert pool.n_prefix_hits == 0
+    pool.release(0)
+    pool.release(1)
+    pool.release_registry()
+    assert (pool.refcount == 0).all()
+
+
+def test_paged_pool_doubles_inflight_at_fixed_hbm():
+    """The headline capacity claim: at the HBM budget that bounds the dense
+    pool to 4 resident requests, prefix sharing holds 8 concurrently."""
+    cfg = TINY_CFGS["dense"]
+    max_seq, bk = 16, 4
+    dense_blocks = 4 * (max_seq // bk)                # 4 dense slots' HBM
+    pool = PagedSlotPool(cfg, 8, max_seq, block_size=bk,
+                         num_blocks=dense_blocks + 1)  # + the trash block
+    prefix = np.arange(3, 15, dtype=np.int32)         # 12 tokens = 3 blocks
+    prompts = [np.concatenate([prefix, np.asarray([20 + i], np.int32)])
+               for i in range(8)]
+    pool.admit_slot(0, prompts[0], 3)
+    for j in range(3):
+        pool.register_block(0, j, prompts[0])
+    for s in range(1, 8):
+        assert pool.can_admit(s, prompts[s], 3), f"slot {s} refused"
+        assert pool.admit_slot(s, prompts[s], 3) == 12
+    assert pool.n_prefix_hits == 7
+    # all 8 resident inside the 4-dense-slot block budget
+    used = {b for blocks in pool.slot_blocks for b in blocks}
+    assert len(used) <= dense_blocks
+
+
+def test_non_shareable_families_degenerate_safely():
+    # no attention at all → nothing pages → the pool reports dense
+    ssm = make_pool(TINY_CFGS["ssm2"], 2, MAX_SEQ, pool="paged",
+                    block_size=BK)
+    assert not ssm.is_paged
+    # sliding-window ring (window < max_seq) is already bounded → dense
+    swa = make_pool(TINY_CFGS["swa"], 2, MAX_SEQ, pool="paged", block_size=BK)
+    assert not swa.is_paged
+    # hybrid pages its attention K/V but cannot SHARE (recurrent state
+    # encodes the prefix outside the blocks)
+    hyb = make_pool(TINY_CFGS["hybrid"], 2, MAX_SEQ, pool="paged",
+                    block_size=BK)
+    assert hyb.is_paged and not hyb.can_share
+    assert hyb.lookup_prefix(0, np.arange(3, 20, dtype=np.int32)) == (0, [])
+
+
+# ------------------------------------------------------------ engine
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_engine_shared_prefix_matches_dense(family):
+    """Acceptance: shared-prefix workload, staggered admission — paged token
+    streams bit-identical to dense on every family; refcounts return to
+    zero after evacuate()."""
+    dense = run_staggered(make_engine(family, slots=2),
+                          shared_prefix_requests(family, 5))
+    eng = make_engine(family, slots=2, pool="paged", block_size=BK)
+    paged = run_staggered(eng, shared_prefix_requests(family, 5))
+    assert dense == paged
+    if eng.pool.is_paged and eng.pool.can_share:
+        assert eng.pool.n_prefix_hits > 0          # the sharing actually ran
+        lt = eng.lifetime()
+        assert lt["prefill_tokens"] == (lt["prompt_tokens"]
+                                        - lt["tokens_shared"])
+    eng.evacuate()
+    if eng.pool.is_paged:
+        assert (eng.pool.refcount == 0).all()
+
+
+def test_engine_pallas_paged_matches_jnp():
+    """The Pallas block-gather decode + table-routed scatter (interpret
+    mode) must reproduce the jnp paged path's token streams end to end."""
+    jnp_streams = run_staggered(
+        make_engine("dense", slots=2, pool="paged", block_size=BK),
+        shared_prefix_requests("dense", 4))
+    pallas_streams = run_staggered(
+        make_engine("dense", slots=2, pool="paged", block_size=BK,
+                    use_pallas=True),
+        shared_prefix_requests("dense", 4))
+    assert jnp_streams == pallas_streams
+
+
+def test_router_downscale_preemption_matches_dense():
+    """Mid-run preemption: scale_to(1) evacuates a replica mid-generation;
+    the preempted requests rewind and replay on the survivor.  The paged
+    fleet's streams must equal the dense fleet's through the preemption."""
+    from repro.serving.router import ReplicaRouter
+
+    def run(pool):
+        core = core_for("dense")
+        router = ReplicaRouter.from_topology(
+            core.cfg, "inproc", slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+            n_replicas=2, max_replicas=2, pool=pool, block_size=BK)
+        reqs = shared_prefix_requests("dense", 6, gen_len=4)
+        done, now = [], 0.0
+        for r in reqs[:4]:
+            router.submit(r, now=now)
+        for _ in range(3):                        # both replicas mid-flight
+            now += 1.0
+            done.extend(router.step(now))
+        router.scale_to(1, now=now)               # preempt + requeue
+        for r in reqs[4:]:
+            router.submit(r, now=now)
+        while len(done) < len(reqs) and now < 400:
+            now += 1.0
+            done.extend(router.step(now))
+        assert len(done) == len(reqs)
+        return {r.rid: tuple(r.tokens_out) for r in done}
+
+    assert run("dense") == run("paged")
+
+
+@pytest.mark.slow
+def test_paged_streams_identical_on_proc_topology():
+    """Acceptance: the paged engine behind a subprocess worker (pool params
+    ride the init RPC) streams bit-identically to the dense inproc engine
+    on the shared-prefix workload."""
+    from repro.serving import InProcessReplica, ProcessReplica
+
+    cfg = TINY_CFGS["dense"]
+
+    def run(rep):
+        try:
+            reqs = shared_prefix_requests("dense", 5)
+            done, now, i = [], 0.0, 0
+            while len(done) < len(reqs) and now < 300:
+                if i < len(reqs):
+                    rep.submit(reqs[i], now=now)
+                    i += 1
+                now += 1.0
+                done.extend(rep.step(now))
+            assert len(done) == len(reqs), (len(done), len(reqs))
+            return {r.rid: tuple(r.tokens_out) for r in done}
+        finally:
+            rep.close()
+
+    dense = run(InProcessReplica.build(cfg, slots=2, max_seq=MAX_SEQ,
+                                       prefill_chunk=4))
+    paged = run(ProcessReplica(cfg, slots=2, max_seq=MAX_SEQ,
+                               prefill_chunk=4, pool="paged", block_size=BK))
+    assert dense == paged
+
+
+_PAGED_SHARDED_SUBPROC = r"""
+import numpy as np
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.models.config import ModelConfig
+from repro.serving import InProcessReplica, Request, ShardedReplica
+from repro.launch.mesh import make_mesh
+
+cfg = ModelConfig(name="tiny-dense", family="dense", n_layers=2, d_model=32,
+                  n_heads=4, n_kv_heads=2, d_ff=64, vocab=64, qkv_bias=True,
+                  param_dtype="float32", dtype="float32")
+MAX_SEQ, SLOTS, BK = 24, 4, 4
+
+def requests(seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(3, cfg.vocab, size=8).astype(np.int32)
+    return [Request(rid=i, prompt=np.concatenate(
+                [prefix,
+                 rng.integers(3, cfg.vocab, size=3).astype(np.int32)]),
+                gen_len=3) for i in range(5)]
+
+def run(rep):
+    reqs = requests()
+    done, now, i = [], 0.0, 0
+    while len(done) < len(reqs) and now < 300:
+        if i < len(reqs):
+            rep.submit(reqs[i], now=now)
+            i += 1
+        now += 1.0
+        done.extend(rep.step(now))
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    return {r.rid: tuple(r.tokens_out) for r in done}
+
+dense = run(InProcessReplica.build(cfg, slots=SLOTS, max_seq=MAX_SEQ,
+                                   prefill_chunk=4))
+sharded = ShardedReplica(cfg, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         mesh=make_mesh((2,), ("data",)), pool="paged",
+                         block_size=BK)
+paged = run(sharded)
+assert dense == paged, (dense, paged)
+pool = sharded.engine.pool
+assert pool.is_paged and pool.partitions == 2
+assert pool.n_prefix_hits > 0, pool.n_prefix_hits
+print("PAGED_SHARDED_EQ_OK")
+"""
+
+
+@pytest.mark.slow
+def test_paged_streams_identical_on_sharded_topology():
+    """Acceptance: the paged pool under the 2-device shard_map decode (block
+    pool split into per-partition ranges, global→local id fold) streams
+    bit-identically to the dense inproc engine, with real prefix hits on
+    both partitions' registries.  Re-execs python for the device-count
+    override, as in test_replica_fabric."""
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run([sys.executable, "-c", _PAGED_SHARDED_SUBPROC],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "PAGED_SHARDED_EQ_OK" in out.stdout
+
+
+# ------------------------------------------------- satellite bugfixes
+
+
+def test_closed_loop_scales_up_when_prefill_chunk_covers_prompt():
+    """Regression: with prefill_chunk >= prompt_len the capacity model's
+    service time went NEGATIVE (negative capacity → util pinned at 1,
+    predicted latency negative → always "meets" the SLO), so the planner
+    never scaled above one replica under a spike."""
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+    from repro.sim.serving import WorkloadSpec
+
+    lc = LoopConfig(slots=2, max_replicas=3, max_seq=32, prefill_chunk=8,
+                    steps_per_tick=6, spike_rps=8.0)
+    spec = WorkloadSpec(prompt_len=4, gen_len=3)    # chunk > prompt
+    router, logs = run_closed_loop(TINY_CFGS["dense"], autoscale=True,
+                                   ticks=8, seed=0, lc=lc, spec=spec)
+    router.close()
+    assert max(t.replicas for t in logs) > 1, \
+        [(t.replicas, t.reason) for t in logs]
+
+
+def _report(rid, tick, *, lat=(), n=0, errs=0, util=0.8, qd=0, t_ms=0.0):
+    from repro.core.monitoring.collector import ReplicaReport
+    return ReplicaReport(replica_id=rid, tick=tick,
+                         latency_ms_samples=list(lat), n_requests=n,
+                         n_errors=errs, flop_util=util, hbm_util=util,
+                         ici_util=util, mem_frac=util, queue_depth=qd,
+                         transport_ms=t_ms)
+
+
+def test_collector_stale_report_not_replayed_at_full_weight():
+    """Regression: aggregate() decayed only the four util channels — a
+    one-tick-stale report's latency samples, request counts, and queue
+    depth replayed at FULL weight, so a silent replica's last window
+    inflated fleet throughput and froze the latency percentiles."""
+    from repro.core.monitoring.collector import MetricsCollector
+
+    c = MetricsCollector()
+    c.submit(_report(0, 0, lat=[500.0] * 4, n=4, errs=2, qd=6, t_ms=8.0))
+    fresh = c.aggregate(0, n_replicas=1, max_replicas=4)
+    assert fresh["throughput"] == 4 and fresh["latency_p50"] == 500.0
+    stale = c.aggregate(1, n_replicas=1, max_replicas=4)   # 1 tick stale
+    # events happened once, in tick 0's window — not again
+    assert stale["throughput"] == 0.0
+    assert stale["error_rate"] == 0.0
+    assert stale["latency_p50"] == 0.0
+    # gauges decay like the util channels always did
+    assert stale["flop_util"] == pytest.approx(0.4)
+    assert stale["queue_depth"] == pytest.approx(3.0)
+    assert stale["transport_ms"] == pytest.approx(4.0)
+
+
+def test_collector_prunes_retired_replicas():
+    """Regression: rids past max_staleness were skipped but never DELETED —
+    reports, error flags, and latency EWMAs grew monotonically over fleet
+    churn, and a long-dead errored replica stayed on the straggler feed."""
+    from repro.core.monitoring.collector import MetricsCollector
+
+    c = MetricsCollector(max_staleness=4)
+    for rid in range(10):
+        c.submit(_report(rid, 0, lat=[100.0] * 4, n=4, errs=1))
+    assert len(c.reports) == 10 and len(c._errored) == 10
+    c.submit(_report(99, 20, lat=[100.0] * 4, n=4))
+    c.aggregate(20, n_replicas=1, max_replicas=4)
+    assert set(c.reports) == {99}
+    assert set(c._errored) == {99}
+    assert set(c._lat_ewma) == {99}
+    assert c.stragglers() == []          # the dead errored rids aged out
+
+
+def test_request_sampling_default_not_shared():
+    """Regression: the class-level ``sampling: SamplingParams()`` default
+    made every Request share ONE instance — safe only while SamplingParams
+    stays frozen, and one mutable field away from coupling the fleet."""
+    a = Request(rid=0, prompt=np.asarray([3, 4], np.int32), gen_len=1)
+    b = Request(rid=1, prompt=np.asarray([3, 4], np.int32), gen_len=1)
+    assert a.sampling is not b.sampling
+    assert a.sampling == SamplingParams()
