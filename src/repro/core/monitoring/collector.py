@@ -47,6 +47,10 @@ class MetricsCollector:
         self.fleet_records: list[dict] = []
         self._lat_ewma: dict[int, float] = {}
         self._errored: dict[int, int] = {}
+        # per-replica watermark: report ticks whose EVENT channels have been
+        # folded into an aggregate — each event is counted exactly once,
+        # even when a report lands an aggregate tick late
+        self._consumed: dict[int, int] = {}
 
     def submit(self, report: ReplicaReport):
         buf = self.reports[report.replica_id]
@@ -76,11 +80,13 @@ class MetricsCollector:
         Staleness is handled per channel KIND.  Gauges (util, queue depth,
         transport) decay by 0.5**stale — a silent replica's last level is
         still weak evidence of its current level.  EVENT channels (latency
-        samples, request/error counts) come only from fresh reports: those
-        events happened once, in the window they were reported — replaying
-        them every aggregate counted each completed request and its latency
-        once per tick of silence, inflating fleet throughput and freezing
-        the latency percentiles on whatever the stale replica last saw.
+        samples, request/error counts) are folded in exactly once, tracked
+        by a per-replica consumed-tick watermark: those events happened
+        once, in the window they were reported — replaying them every
+        aggregate counted each completed request and its latency once per
+        tick of silence, while keying on ``stale == 0`` would silently drop
+        any report that lands an aggregate tick late (transport delay, tick
+        misalignment), permanently undercounting fleet throughput/errors.
 
         Replicas silent past max_staleness are PRUNED outright — reports,
         error flags, and latency EWMAs: a retired replica's state must not
@@ -100,10 +106,18 @@ class MetricsCollector:
                 dead.append(rid)      # long-gone replica: age out entirely
                 continue
             w = 0.5 ** stale          # decay stale replicas' gauges
-            if stale == 0:
-                lat.extend(r.latency_ms_samples)
-                reqs += r.n_requests
-                errs += r.n_errors
+            last = self._consumed.get(rid)
+            fresh = [rep for rep in buf
+                     if (last is None or rep.tick > last) and rep.tick <= tick]
+            for rep in fresh:
+                lat.extend(rep.latency_ms_samples)
+                reqs += rep.n_requests
+                errs += rep.n_errors
+            if fresh:
+                # watermark = highest CONSUMED report tick (not the aggregate
+                # tick): a report delayed past an intervening aggregate is
+                # still folded in once it finally lands
+                self._consumed[rid] = max(rep.tick for rep in fresh)
             for k in util:
                 util[k].append(getattr(r, k) * w)
             qd.append(r.queue_depth * w)
@@ -112,6 +126,7 @@ class MetricsCollector:
             del self.reports[rid]
             self._errored.pop(rid, None)
             self._lat_ewma.pop(rid, None)
+            self._consumed.pop(rid, None)
         lat_arr = np.asarray(lat) if lat else np.zeros(1)
         rec = {
             "tick": tick,

@@ -24,6 +24,7 @@ launch/serve.py engine; submit()/step() add the queued-request lifecycle.
 """
 from __future__ import annotations
 
+import hashlib
 import time
 from collections import deque
 
@@ -175,6 +176,15 @@ class ServingEngine:
         self.prefill_chunk = max(chunk, 1)
         self._prompt: list[np.ndarray | None] = [None] * slots
         self._fed = np.zeros(slots, np.int64)       # prompt tokens staged
+        # vlm prefix KV depends on the vision patches, not just the token
+        # ids, so the patch content is digested into every prefix-cache key:
+        # two prompts with identical ids but different patches can never
+        # alias in the registry.  The engine feeds the same zero patches to
+        # every request today (so this is one constant per engine); if
+        # patches become request-dependent, digest them per request here.
+        self._patch_key = (hashlib.sha1(np.zeros(
+            (cfg.n_vision_patches, cfg.d_model), np.float32).tobytes()
+        ).digest() if cfg.family == "vlm" else b"")
         self.scheduler = FCFSScheduler()
         self.draining = False
         self.stats = EngineStats()
@@ -221,7 +231,7 @@ class ServingEngine:
                     head = self.scheduler.peek()
                     if not self.pool.can_admit(
                             free[0], np.asarray(head.prompt).reshape(-1),
-                            head.gen_len):
+                            head.gen_len, extra=self._patch_key):
                         break
                 req = self.scheduler.pop()
                 slot = free.pop(0)
@@ -263,7 +273,8 @@ class ServingEngine:
             gen_len = min(gen_len, self.max_seq - P)
         self.prompt_tokens += P
         if self._paged:
-            h_tok = self.pool.admit_slot(slot, prompt, gen_len)
+            h_tok = self.pool.admit_slot(slot, prompt, gen_len,
+                                         extra=self._patch_key)
             if h_tok > 0:
                 # resident prefix: the shared blocks already hold positions
                 # 0..h_tok-1, so NO prefill runs at all — the rest of the
@@ -298,7 +309,8 @@ class ServingEngine:
             # blocks fully covered by the one-shot prefill are complete
             # prompt prefixes — publish them for future admissions to share
             for j in range(c // self.pool.block_size):
-                self.pool.register_block(slot, j, prompt)
+                self.pool.register_block(slot, j, prompt,
+                                         extra=self._patch_key)
         self.pos[slot] = c
         self._prompt[slot] = prompt
         self.remaining[slot] = gen_len
@@ -338,7 +350,8 @@ class ServingEngine:
                     # a streamed block just filled with pure prompt tokens —
                     # publish it (positions pos-bk..pos-1 are prompt[:pos])
                     self.pool.register_block(
-                        slot, pos // self.pool.block_size - 1, prompt)
+                        slot, pos // self.pool.block_size - 1, prompt,
+                        extra=self._patch_key)
                 if self._fed[slot] < len(prompt):
                     self._tokens_host[slot] = int(prompt[self._fed[slot]])
                     self._fed[slot] += 1

@@ -174,8 +174,17 @@ def pool_geometry(slots: int, max_seq: int, *, block_size: int | None = None,
     """Resolve (block_size, num_blocks) defaults — shared by PagedSlotPool
     and make_sharded_decode so the spec derivation and the engine's actual
     pool always agree on the cache geometry."""
-    bk = block_size if block_size is not None else min(8, max_seq)
-    assert max_seq % bk == 0, (max_seq, bk)
+    if block_size is None:
+        # largest divisor of max_seq <= 8: the default must always yield a
+        # valid geometry (max_seq=12 → bk=6), not crash on non-multiples
+        bk = next(d for d in range(min(8, max_seq), 0, -1)
+                  if max_seq % d == 0)
+    else:
+        bk = block_size
+        if max_seq % bk != 0:
+            raise ValueError(
+                f"block_size={bk} must divide max_seq={max_seq} "
+                f"(pass a block_size that divides max_seq, or omit it)")
     assert slots % partitions == 0, (slots, partitions)
     nk = max_seq // bk
     per_part = slots // partitions
@@ -186,12 +195,15 @@ def pool_geometry(slots: int, max_seq: int, *, block_size: int | None = None,
     return bk, num_blocks
 
 
-def _prefix_key(prompt: np.ndarray, n: int) -> bytes:
+def _prefix_key(prompt: np.ndarray, n: int, extra: bytes = b"") -> bytes:
     """Content hash of the first ``n`` prompt tokens — the prefix registry
     key.  Hashing (rather than the raw token tuple) keeps key size O(1) for
-    long system prompts."""
+    long system prompts.  ``extra`` is mixed in for families whose prefix KV
+    depends on more than the token ids (VLM vision patches): two prompts
+    with identical ids but different extra content can never alias."""
     return hashlib.sha1(
-        np.ascontiguousarray(prompt[:n], dtype=np.int64).tobytes()).digest()
+        extra + np.ascontiguousarray(prompt[:n], dtype=np.int64).tobytes()
+    ).digest()
 
 
 class PagedSlotPool(SlotPool):
@@ -298,7 +310,8 @@ class PagedSlotPool(SlotPool):
     def blocks_needed(self, total_len: int) -> int:
         return -(-min(total_len, self.max_seq) // self.block_size)
 
-    def lookup_prefix(self, slot: int, prompt: np.ndarray):
+    def lookup_prefix(self, slot: int, prompt: np.ndarray, *,
+                      extra: bytes = b""):
         """→ (n_hit_blocks, [block ids]) for the longest registered
         block-aligned prefix of ``prompt`` on this slot's partition.  Capped
         at (P-1)//bk blocks so at least one prompt token always streams
@@ -310,7 +323,7 @@ class PagedSlotPool(SlotPool):
         P = len(prompt)
         hit: list[int] = []
         for j in range((P - 1) // self.block_size):
-            key = _prefix_key(prompt, (j + 1) * self.block_size)
+            key = _prefix_key(prompt, (j + 1) * self.block_size, extra)
             blk = reg.get(key)
             if blk is None:
                 break
@@ -332,30 +345,46 @@ class PagedSlotPool(SlotPool):
             self.refcount[blk] -= 1
             self.free[part].append(blk)
 
-    def can_admit(self, slot: int, prompt: np.ndarray, gen_len: int) -> bool:
+    def can_admit(self, slot: int, prompt: np.ndarray, gen_len: int, *,
+                  extra: bytes = b"") -> bool:
         part = self._partition(slot)
-        h, _ = self.lookup_prefix(slot, prompt)
+        h, hit = self.lookup_prefix(slot, prompt, extra=extra)
         need = self.blocks_needed(len(prompt) + gen_len) - h
         reg = self.registry[part]
-        evictable = sum(1 for b in reg.values() if self.refcount[b] == 1)
+        # the hit blocks are NOT evictable for this admission: admit_slot
+        # pins them before reclaiming, so the capacity promise here must
+        # match what _reclaim may actually evict
+        hit_set = set(hit)
+        evictable = sum(1 for b in reg.values()
+                        if self.refcount[b] == 1 and b not in hit_set)
         return len(self.free[part]) + evictable >= need
 
-    def admit_slot(self, slot: int, prompt: np.ndarray, gen_len: int) -> int:
+    def admit_slot(self, slot: int, prompt: np.ndarray, gen_len: int, *,
+                   extra: bytes = b"") -> int:
         """Build the slot's table row: shared prefix blocks mapped read-only
         (refcount++), private blocks allocated for the rest, remaining table
         entries parked on the trash block.  Returns the number of prompt
         TOKENS already resident (0 → caller runs a full prefill)."""
         part = self._partition(slot)
         assert not self.slot_blocks[slot], f"slot {slot} not released"
-        h, shared = self.lookup_prefix(slot, prompt)
+        h, shared = self.lookup_prefix(slot, prompt, extra=extra)
         need_total = self.blocks_needed(len(prompt) + gen_len)
         n_priv = need_total - h
+        # pin the hit blocks BEFORE reclaiming: a registry-only hit block
+        # has refcount == 1 and would otherwise be evictable, so _reclaim
+        # could push a block this admission is about to share onto the free
+        # list — and the private pops below would hand the same physical
+        # block out again as a writable block in the same table row
+        for blk in shared:
+            self.refcount[blk] += 1
         self._reclaim(part, n_priv)
-        assert len(self.free[part]) >= n_priv, \
-            f"partition {part} exhausted ({n_priv} blocks needed)"
+        if len(self.free[part]) < n_priv:
+            for blk in shared:         # roll the pins back; admission failed
+                self.refcount[blk] -= 1
+            raise AssertionError(
+                f"partition {part} exhausted ({n_priv} blocks needed)")
         row = np.full(self.nk, self.trash[part], np.int32)
         for j, blk in enumerate(shared):
-            self.refcount[blk] += 1
             row[j] = blk
         priv = [self.free[part].pop() for _ in range(n_priv)]
         for j, blk in enumerate(priv):
@@ -370,7 +399,8 @@ class PagedSlotPool(SlotPool):
             self.tokens_shared += h * self.block_size
         return h * self.block_size
 
-    def register_block(self, slot: int, j: int, prompt: np.ndarray):
+    def register_block(self, slot: int, j: int, prompt: np.ndarray, *,
+                       extra: bytes = b""):
         """Publish the slot's j-th block (fully written with
         prompt[:(j+1)·bk]) into the prefix registry — future admissions with
         the same prefix map it read-only.  The registry holds its own
@@ -381,7 +411,7 @@ class PagedSlotPool(SlotPool):
         blk = int(self.tables[slot, j])
         if blk == self.trash[part]:
             return
-        key = _prefix_key(prompt, (j + 1) * self.block_size)
+        key = _prefix_key(prompt, (j + 1) * self.block_size, extra)
         reg = self.registry[part]
         if key in reg:
             return

@@ -19,15 +19,19 @@ def poisson_arrival_times(rps: float, n: int,
 
 def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                        rng: np.random.Generator, base_rid: int = 0,
-                       sampling: SamplingParams = SamplingParams()
+                       sampling: SamplingParams | None = None
                        ) -> list[Request]:
     """n requests drawn from the spec's shape (uniform random token ids;
-    ids < 3 reserved for specials, as in the seed driver)."""
+    ids < 3 reserved for specials, as in the seed driver).  When
+    ``sampling`` is omitted, each request gets its OWN SamplingParams —
+    never a shared default instance (the class-level-default trap this
+    module's Request just shed)."""
     return [
         Request(rid=base_rid + i,
                 prompt=rng.integers(3, vocab, size=spec.prompt_len
                                     ).astype(np.int32),
-                gen_len=spec.gen_len, sampling=sampling)
+                gen_len=spec.gen_len,
+                sampling=SamplingParams() if sampling is None else sampling)
         for i in range(n)
     ]
 
@@ -35,7 +39,7 @@ def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
 def shared_prefix_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                            prefix_len: int, rng: np.random.Generator,
                            base_rid: int = 0,
-                           sampling: SamplingParams = SamplingParams()
+                           sampling: SamplingParams | None = None
                            ) -> list[Request]:
     """n requests sharing one ``prefix_len``-token system prompt; the rest
     of each prompt is private.  The shape a paged pool's prefix cache is
@@ -49,6 +53,7 @@ def shared_prefix_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                     [prefix,
                      rng.integers(3, vocab, size=spec.prompt_len - prefix_len
                                   ).astype(np.int32)]),
-                gen_len=spec.gen_len, sampling=sampling)
+                gen_len=spec.gen_len,
+                sampling=SamplingParams() if sampling is None else sampling)
         for i in range(n)
     ]

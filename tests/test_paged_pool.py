@@ -256,6 +256,69 @@ def test_registry_lru_reclaim_under_pressure():
     assert (pool.refcount == 0).all()
 
 
+def test_admit_under_pressure_never_evicts_its_own_hit_blocks():
+    """Regression: admit_slot reclaimed AFTER lookup_prefix but before
+    taking references on the hit blocks, so under pool pressure _reclaim
+    evicted the very blocks the admission was about to share — the private
+    free.pop()s then handed the same physical block out again as a WRITABLE
+    block in the same table row (and can_admit counted those hit blocks as
+    evictable, promising capacity _reclaim could only deliver by corrupting
+    the share)."""
+    cfg = TINY_CFGS["dense"]
+    max_seq, bk = 16, 4
+    # 1 trash + 4 usable blocks: exactly one full-length admission
+    pool = PagedSlotPool(cfg, 2, max_seq, block_size=bk, num_blocks=5)
+    prompt_a = np.arange(3, 15, dtype=np.int32)       # 12 tokens = 3 blocks
+    pool.admit_slot(0, prompt_a, 4)                   # 4 blocks (16 tokens)
+    for j in range(2):                                # publish 2 prefix blocks
+        pool.register_block(0, j, prompt_a)
+    pool.release(0)                  # 2 registry-only blocks + 2 free
+    pool.admit_slot(1, np.arange(40, 48, dtype=np.int32), 0)  # occupy the 2
+    hit_blocks = list(pool.lookup_prefix(0, prompt_a)[1])
+    assert len(hit_blocks) == 2 and not pool.free[0]
+    # the only "evictable" blocks ARE the hit blocks: admission must refuse
+    assert not pool.can_admit(0, prompt_a, 4)
+    with pytest.raises(AssertionError, match="exhausted"):
+        pool.admit_slot(0, prompt_a, 4)
+    # the failed admission rolled back cleanly: registry refs intact, slot
+    # row still parked on trash, slot 1 untouched
+    assert all(pool.refcount[b] == 1 for b in hit_blocks)
+    assert pool.lookup_prefix(0, prompt_a)[0] == 2
+    assert not pool.slot_blocks[0]
+    assert (pool.tables[0] == pool.trash[0]).all()
+    assert all(pool.refcount[b] == 1 for b in pool.slot_blocks[1])
+    # freeing slot 1 makes the same admission succeed with DISTINCT blocks
+    pool.release(1)
+    h = pool.admit_slot(0, prompt_a, 4)
+    assert h == 2 * bk
+    row = [int(b) for b in pool.tables[0]]
+    assert len(set(row)) == len(row), row            # no double-mapped block
+
+
+def test_reclaim_under_pinned_hits_evicts_other_registry_blocks():
+    """With the hit blocks pinned, reclaim still evicts NON-hit registry
+    blocks to make room — and a block this admission shares never transits
+    the free list."""
+    cfg = TINY_CFGS["dense"]
+    max_seq, bk = 16, 4
+    pool = PagedSlotPool(cfg, 1, max_seq, block_size=bk, num_blocks=5)
+    prompt_a = np.arange(3, 15, dtype=np.int32)       # 12 tokens
+    pool.admit_slot(0, prompt_a, 4)
+    for j in range(3):                   # register all 3 whole prompt blocks
+        pool.register_block(0, j, prompt_a)
+    pool.release(0)                      # 3 registry-only + 1 free
+    h = pool.admit_slot(0, prompt_a, 4)  # hit capped at (P-1)//bk = 2 blocks
+    assert h == 2 * bk
+    row = [int(b) for b in pool.tables[0]]
+    assert len(set(row)) == len(row), row
+    shared = pool.slot_blocks[0][:2]
+    assert all(pool.refcount[b] == 2 for b in shared)   # slot + registry
+    assert not (set(shared) & set(pool.free[0]))
+    pool.release(0)
+    pool.release_registry()
+    assert (pool.refcount == 0).all()
+
+
 def test_paged_pool_doubles_inflight_at_fixed_hbm():
     """The headline capacity claim: at the HBM budget that bounds the dense
     pool to 4 resident requests, prefix sharing holds 8 concurrently."""
@@ -535,3 +598,75 @@ def test_request_sampling_default_not_shared():
     b = Request(rid=1, prompt=np.asarray([3, 4], np.int32), gen_len=1)
     assert a.sampling is not b.sampling
     assert a.sampling == SamplingParams()
+
+
+def test_collector_counts_report_landing_one_tick_late():
+    """Regression: event channels were consumed only when ``stale == 0`` —
+    a report landing one aggregate tick late (transport delay, tick
+    misalignment) was never counted, permanently undercounting fleet
+    throughput and errors."""
+    from repro.core.monitoring.collector import MetricsCollector
+
+    c = MetricsCollector()
+    c.aggregate(0, n_replicas=1, max_replicas=4)   # report hasn't landed yet
+    c.submit(_report(0, 0, lat=[500.0] * 4, n=4, errs=2))
+    late = c.aggregate(1, n_replicas=1, max_replicas=4)
+    assert late["throughput"] == 4.0
+    assert late["error_rate"] == pytest.approx(0.5)
+    assert late["latency_p50"] == 500.0
+    # consumed exactly once — not replayed on the following tick
+    again = c.aggregate(2, n_replicas=1, max_replicas=4)
+    assert again["throughput"] == 0.0
+    assert again["latency_p50"] == 0.0
+
+
+def test_workload_sampling_default_not_shared():
+    """Regression: synthetic_requests / shared_prefix_requests kept the
+    shared default-argument ``SamplingParams()`` instance the Request fix
+    just removed — defaulted requests must each own their params."""
+    from repro.serving import workload
+    from repro.sim.serving import WorkloadSpec
+
+    spec = WorkloadSpec(prompt_len=8, gen_len=2)
+    rng = np.random.default_rng(0)
+    reqs = workload.synthetic_requests(spec, 3, 64, rng=rng)
+    assert len({id(r.sampling) for r in reqs}) == 3
+    reqs = workload.shared_prefix_requests(spec, 3, 64, prefix_len=4, rng=rng)
+    assert len({id(r.sampling) for r in reqs}) == 3
+    # an explicitly passed instance is still honored as-is
+    sp = SamplingParams(temperature=0.7, seed=1)
+    reqs = workload.synthetic_requests(spec, 2, 64, rng=rng, sampling=sp)
+    assert all(r.sampling is sp for r in reqs)
+
+
+def test_prefix_key_mixes_patch_content():
+    """Prefix KV for the VLM family depends on the vision patches, not just
+    the prompt token ids — identical token prefixes with different patch
+    content must never alias in the prefix registry."""
+    pool = PagedSlotPool(TINY_CFGS["vlm"], 2, MAX_SEQ, block_size=BK)
+    assert pool.can_share
+    prompt = np.arange(3, 14, dtype=np.int32)
+    pool.admit_slot(0, prompt, 3, extra=b"patches-a")
+    for j in range(2):
+        pool.register_block(0, j, prompt, extra=b"patches-a")
+    assert pool.lookup_prefix(1, prompt, extra=b"patches-b") == (0, [])
+    assert pool.lookup_prefix(1, prompt, extra=b"patches-a")[0] == 2
+    # the engine threads a digest of the patches it actually feeds
+    eng = make_engine("vlm", pool="paged", block_size=BK)
+    assert eng._patch_key != b""
+
+
+def test_pool_geometry_default_block_size_divides_max_seq():
+    """Regression: the default block size min(8, max_seq) was asserted to
+    divide max_seq, so pool="paged" with e.g. max_seq=12 and no explicit
+    block_size crashed at construction."""
+    from repro.serving.slots import pool_geometry
+
+    bk, _ = pool_geometry(2, 12)
+    assert bk == 6                       # largest divisor of 12 that is <= 8
+    assert pool_geometry(2, 7)[0] == 7   # prime: falls back to max_seq itself
+    pool = PagedSlotPool(TINY_CFGS["dense"], 2, 12)   # constructs fine
+    assert pool.block_size == 6
+    # an explicit non-divisor names the knob instead of a bare assert
+    with pytest.raises(ValueError, match="block_size"):
+        pool_geometry(2, 12, block_size=5)
