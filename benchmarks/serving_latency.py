@@ -393,6 +393,139 @@ def run_pool_ablation(smoke: bool = True, seed: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# learned policy A/B (the closed learning loop: trace → train → redeploy)
+# ---------------------------------------------------------------------------
+
+LEARNED_SCALES = {
+    "smoke": dict(trace_ticks=16, ab_ticks=14, max_replicas=3,
+                  epochs=4, imitation_epochs=12, dqn_steps=24),
+    "full": dict(trace_ticks=40, ab_ticks=28, max_replicas=4,
+                 epochs=10, imitation_epochs=30, dqn_steps=80),
+}
+
+
+def run_learned_policy(smoke: bool = True, seed: int = 0):
+    """The paper's learning loop, closed end-to-end on the real data plane:
+
+      1. record a planner-driven fleet trace (TraceRecorder) under a bursty
+         profile with scripted straggler injection (chaos identical across
+         every arm — same seed, same script);
+      2. offline-train a fresh allocator on the trace (supervised fit +
+         DQN replay + planner imitation — core/dnn/traces.py);
+      3. redeploy the learned policy AS the scaler (``mode="hybrid"``, DQN
+         choice inside the planner's SLO envelope, learning online) and A/B
+         it against the pure planner on the SAME seed/profile/chaos.
+
+    Acceptance bars (CI, BENCH_learned_policy.json): the learned hybrid is
+    no worse than the planner on arrivals-weighted SLO-violation rate and
+    on fleet slot utilization."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.core.dnn.traces import TraceRecorder, pretrain_on_trace
+    from repro.core.monitoring.collector import ReplicaReport
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    scale = LEARNED_SCALES["smoke" if smoke else "full"]
+    cfg = get_smoke_config("qwen2.5-3b")
+    lc = dataclasses.replace(LoopConfig(), max_replicas=scale["max_replicas"])
+
+    def bursty(tick, ticks, lc):
+        """two spikes with a calm trough between — the A/B load script."""
+        q = max(ticks // 4, 1)
+        return lc.spike_rps if (q <= tick < 2 * q or 3 * q <= tick) \
+            else lc.calm_rps
+
+    def make_chaos(ticks):
+        """scripted straggler: for ``evict_after`` consecutive mid-burst
+        windows one live replica reports 5s latencies (the rest baseline),
+        driving a real eviction + replacement through the control plane."""
+        q = max(ticks // 4, 1)
+        straggle = set(range(q, q + lc.evict_after))
+
+        def hook(tick, router, collector):
+            if tick not in straggle:
+                return
+            live = sorted(r.replica_id for r in router.serving_replicas)
+            if len(live) < 2:
+                return
+            for rid, lat in [(live[0], 5000.0)] + [(r, 100.0)
+                                                   for r in live[1:]]:
+                collector.submit(ReplicaReport(
+                    replica_id=rid, tick=tick,
+                    latency_ms_samples=[lat] * 4, n_requests=4, n_errors=0,
+                    flop_util=0.5, hbm_util=0.5, ici_util=0.0,
+                    mem_frac=0.5, queue_depth=0))
+        return hook
+
+    def arm(mode, ticks, *, recorder=None, prime=None):
+        router, logs = run_closed_loop(
+            cfg, autoscale=True, ticks=ticks, seed=seed,
+            lc=dataclasses.replace(lc, alloc_mode=mode),
+            profile=bursty, chaos_hook=make_chaos(ticks),
+            recorder=recorder, prime_allocator=prime)
+        m = router.metrics()
+        router.close()
+        arrivals = max(sum(t.arrivals for t in logs), 1)
+        viol = sum(t.arrivals for t in logs
+                   if t.latency_p95_ms > lc.slo_ms) / arrivals
+        return {
+            "slo_violation_rate": viol,
+            "slot_utilization": m["slot_utilization"],
+            "completed": m["completed"],
+            "replica_ticks": sum(t.replicas for t in logs),
+            "evictions": sum(len(t.evicted) for t in logs),
+            "dqn_decisions": sum(1 for t in logs
+                                 if t.reason.startswith("dqn")),
+            "online_train_steps": sum(1 for t in logs
+                                      if t.learn_loss is not None),
+        }
+
+    t0 = time.perf_counter()
+    rec = TraceRecorder()
+    arm("planner", scale["trace_ticks"], recorder=rec)       # 1. trace
+    curves = {}
+
+    def prime(alloc):
+        curves.update(pretrain_on_trace(                     # 2. train
+            alloc, rec.records, epochs=scale["epochs"],
+            imitation_epochs=scale["imitation_epochs"],
+            dqn_steps=scale["dqn_steps"], seed=seed))
+
+    planner = arm("planner", scale["ab_ticks"])              # 3. A/B
+    learned = arm("hybrid", scale["ab_ticks"], prime=prime)
+    wall = time.perf_counter() - t0
+    # "no worse" with a small smoke-scale tolerance: one straggler window
+    # falling on a different tick must not flip the bar
+    no_worse_slo = (learned["slo_violation_rate"]
+                    <= planner["slo_violation_rate"] + 0.02)
+    no_worse_util = (learned["slot_utilization"]
+                     >= planner["slot_utilization"] - 0.05)
+    return {
+        "name": "learned_policy_ab",
+        "no_worse_slo": bool(no_worse_slo),
+        "no_worse_util": bool(no_worse_util),
+        "derived": (f"learned(hybrid) vs planner under chaos: SLO-viol "
+                    f"{planner['slo_violation_rate']:.2f}->"
+                    f"{learned['slo_violation_rate']:.2f}, slot-util "
+                    f"{planner['slot_utilization']:.2f}->"
+                    f"{learned['slot_utilization']:.2f}, replica-ticks "
+                    f"{planner['replica_ticks']}->"
+                    f"{learned['replica_ticks']}, "
+                    f"{learned['dqn_decisions']} dqn decisions, "
+                    f"{len(rec)} trace ticks, wall {wall:.1f}s"),
+        "detail": {"planner": planner, "learned": learned,
+                   "trace_ticks": len(rec),
+                   "pretrain": {k: ([round(float(v[0]), 4),
+                                     round(float(v[-1]), 4)] if v else [])
+                                for k, v in curves.items()
+                                if isinstance(v, list)},
+                   "transitions": curves.get("transitions", 0),
+                   "scale": scale, "seed": seed, "wall_s": wall},
+    }
+
+
+# ---------------------------------------------------------------------------
 # decode-kernel ablation (pallas vs jnp reference data path)
 # ---------------------------------------------------------------------------
 
@@ -491,6 +624,12 @@ if __name__ == "__main__":
                          "HBM (either value runs BOTH variants — the flag "
                          "records which layout is under test; writes "
                          "BENCH_paged.json)")
+    ap.add_argument("--learned", action="store_true",
+                    help="learned-policy A/B: record a planner trace, "
+                         "offline-train the allocator on it, redeploy it "
+                         "as the hybrid scaler vs the pure planner under "
+                         "identical chaos (writes "
+                         "BENCH_learned_policy.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="smallest ablation scale (CI artifact)")
     ap.add_argument("--out", default=None,
@@ -519,6 +658,17 @@ if __name__ == "__main__":
         if not res["detail"]["accounting_ok"]:
             raise SystemExit("pool ablation: prefill_tokens != "
                              "prompt_tokens - tokens_shared")
+    elif args.learned:
+        res = run_learned_policy(smoke=args.smoke)
+        with open(args.out or "BENCH_learned_policy.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if not res["no_worse_slo"]:
+            raise SystemExit("learned policy: hybrid SLO-violation rate "
+                             "worse than the planner's")
+        if not res["no_worse_util"]:
+            raise SystemExit("learned policy: hybrid slot utilization "
+                             "worse than the planner's")
     elif args.topology == "pod":
         res = run_pod_smoke()
         print(res["derived"])

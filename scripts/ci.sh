@@ -12,7 +12,11 @@
 # where multi-process init is unavailable — BENCH_serving_pod.json), and the
 # KV-pool ablation (paged block tables vs dense rings at fixed cache HBM:
 # ≥2x concurrent in-flight + shared-prefix prefill savings, streams
-# bit-identical — BENCH_paged.json) — perf-trajectory artifacts the workflow
+# bit-identical — BENCH_paged.json), and the learned-policy A/B (record a
+# planner fleet trace, offline-train the allocator on it, redeploy it as
+# the hybrid scaler vs the pure planner under identical chaos; bars: no
+# worse on SLO-violation rate and slot utilization —
+# BENCH_learned_policy.json) — perf-trajectory artifacts the workflow
 # uploads — then the closed-loop serving smoke.  Mirrors .github/workflows/ci.yml so the same command
 # works locally.
 set -euo pipefail
@@ -30,4 +34,5 @@ python -m benchmarks.serving_latency --topology tcp --smoke --out BENCH_serving.
 python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving_proc.json
 python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_pod.json
 python -m benchmarks.serving_latency --pool paged --smoke --out BENCH_paged.json
+python -m benchmarks.serving_latency --learned --smoke --out BENCH_learned_policy.json
 python examples/serve_autoscale.py --smoke

@@ -56,6 +56,11 @@ class PredictiveAllocator:
         self.agent = DQNAgent(self.dnn_cfg, DQNConfig(), seed=seed)
         self.streams = StreamBuilder(window=self.dnn_cfg.window)
         self._prev = None               # (state, action_idx)
+        # the action credit-assignment chain starts defined: before the first
+        # decide() the "last action" is hold (delta 0), and every decide()
+        # path — DQN-chosen OR planner fallback — overwrites both fields
+        self._pending_action = int(ACTIONS.index(0))
+        self._pending_state = None
         self.replicas = constraints.min_replicas
 
     # ------------------------------------------------------------- tick
@@ -68,39 +73,45 @@ class PredictiveAllocator:
     def decide(self, metrics: dict) -> ScalingDecision:
         planner = self.scaler.compute_scaling_decision(
             metrics, self.constraints, current_replicas=self.replicas)
-        if self.cfg.mode == "planner":
-            decision = planner
-        else:
-            state = self.streams.streams(self.deploy_vec)
+        state = self.streams.streams(self.deploy_vec)
+        chosen = None
+        if self.cfg.mode != "planner":
             q = self.agent.q_values(state)
             explore = (self.cfg.mode == "rl"
                        and self.agent.rng.random() < self.agent.epsilon())
             order = (self.agent.rng.permutation(len(ACTIONS)) if explore
                      else np.argsort(-q))
-            chosen = None
             c = self.constraints
             for ai in order:
                 r = self.replicas + ACTIONS[ai]
                 if not (c.min_replicas <= r <= c.max_replicas):
                     continue
                 lat, util = self.perf_model(r, planner.predicted_load)
-                if lat <= c.slo_ms or ACTIONS[ai] > 0:
+                # hybrid's envelope is the SLO itself: when NO action meets
+                # it (infeasible spike), the DQN must not get to pick a
+                # smaller scale-up than the planner's max-headroom response
+                # — fall through to the planner instead.  "rl" is shielded
+                # by the min/max range only (the pure learned policy).
+                if self.cfg.mode == "rl" or lat <= c.slo_ms:
                     chosen = (int(ai), r, lat, util)
                     break
-            if chosen is None:
-                decision = planner
-            else:
-                ai, r, lat, util = chosen
-                decision = ScalingDecision(
-                    target_replicas=r, delta=r - self.replicas,
-                    reason=f"dqn:{ACTIONS[ai]}",
-                    predicted_load=planner.predicted_load,
-                    predicted_latency_ms=lat, efficiency=planner.efficiency)
-                self._pending_action = ai
-        self._pending_state = self.streams.streams(self.deploy_vec)
-        if self.cfg.mode == "planner":
+        self._pending_state = state
+        if chosen is None:
+            # planner mode, or the DQN path fell through its safety envelope:
+            # the planner's decision is what gets actuated, so the action the
+            # next reward credits is the planner's delta — NOT whatever the
+            # DQN picked on some earlier tick
+            decision = planner
             self._pending_action = int(np.argmin(
                 [abs(a - decision.delta) for a in ACTIONS]))
+        else:
+            ai, r, lat, util = chosen
+            decision = ScalingDecision(
+                target_replicas=r, delta=r - self.replicas,
+                reason=f"dqn:{ACTIONS[ai]}",
+                predicted_load=planner.predicted_load,
+                predicted_latency_ms=lat, efficiency=planner.efficiency)
+            self._pending_action = ai
         return decision
 
     def apply(self, decision: ScalingDecision):
@@ -108,6 +119,8 @@ class PredictiveAllocator:
 
     def learn(self, metrics: dict, cost_per_tick: float):
         """Reward from the realized outcome of the last action."""
+        if self._pending_state is None:
+            return None                 # no decide() yet — nothing to credit
         if self._prev is None:
             self._prev = (self._pending_state, self._pending_action)
             return None

@@ -80,14 +80,17 @@ class WorkloadForecaster:
         comps = self._components(t)
         self._comp_err = 0.95 * self._comp_err + 0.05 * np.abs(comps - value)
         tod, dow = self._phase(t)
-        self.daily[tod] = (self.alpha * value +
-                           (1 - self.alpha) * (self.daily[tod] or value))
+        # first-observation seeding is gated on the SEEN COUNTS, never on
+        # truthiness: a legitimately observed 0.0 load makes the stored EWMA
+        # 0.0, and the next value must DECAY toward it, not reset the profile
+        prev_d = self.daily[tod] if self.daily_n[tod] > 0 else value
+        self.daily[tod] = self.alpha * value + (1 - self.alpha) * prev_d
         self.daily_n[tod] += 1
-        self.weekly[dow] = (self.alpha * value +
-                            (1 - self.alpha) * (self.weekly[dow] or value))
+        prev_w = self.weekly[dow] if self.weekly_n[dow] > 0 else value
+        self.weekly[dow] = self.alpha * value + (1 - self.alpha) * prev_w
         self.weekly_n[dow] += 1
-        self.level = (self.alpha * value + (1 - self.alpha) *
-                      (self.level or value))
+        prev_l = self.level if self.t > 0 else value
+        self.level = self.alpha * value + (1 - self.alpha) * prev_l
         f = self._feat(t)
         self._A += np.outer(f, f)
         self._b += f * value

@@ -139,7 +139,11 @@ class DQNAgent:
         tau = self.cfg.target_tau
 
         def loss_fn(params, bn_state, target_params, s, a, r, s2, done):
-            q, _ = MultiStreamDNN.apply(params, bn_state, s, training=False)
+            # the gradient pass runs in TRAINING mode so the deploy-stream
+            # BatchNorm's running stats track the data the net is fitted on;
+            # the bootstrap passes (next-state / target net) are evaluation
+            q, new_bn = MultiStreamDNN.apply(params, bn_state, s,
+                                             training=True)
             q_sa = jnp.take_along_axis(q["q"], a[:, None], axis=1)[:, 0]
             q2_online, _ = MultiStreamDNN.apply(params, bn_state, s2,
                                                 training=False)
@@ -150,20 +154,27 @@ class DQNAgent:
             target = r + gamma * (1.0 - done) * jax.lax.stop_gradient(q2)
             err = q_sa - target
             return jnp.mean(jnp.where(jnp.abs(err) < 1.0, 0.5 * err ** 2,
-                                      jnp.abs(err) - 0.5))
+                                      jnp.abs(err) - 0.5)), new_bn
 
         @jax.jit
         def train_step(params, bn_state, target_params, opt_state, batch):
             s, a, r, s2, done = batch
-            loss, grads = jax.value_and_grad(loss_fn)(
+            (loss, new_bn), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(
                 params, bn_state, target_params, s, a, r, s2, done)
             updates, opt_state = self.opt_update(grads, opt_state, params)
             params = apply_updates(params, updates)
             target_params = jax.tree.map(
                 lambda t, p: (1 - tau) * t + tau * p, target_params, params)
-            return params, target_params, opt_state, loss
+            return params, target_params, opt_state, new_bn, loss
 
         return train_step
+
+    def _train_on_batch(self, batch) -> float:
+        (self.params, self.target_params, self.opt_state, self.bn_state,
+         loss) = self._train_step(self.params, self.bn_state,
+                                  self.target_params, self.opt_state, batch)
+        return float(loss)
 
     def observe(self, s, a, r, s2, done=False):
         self.buffer.push(s, a, r, s2, done)
@@ -171,10 +182,55 @@ class DQNAgent:
         loss = None
         if (self.buffer.n >= self.cfg.warmup
                 and self.step_count % self.cfg.train_every == 0):
-            batch = self.buffer.sample(self.rng, self.cfg.batch_size)
-            (self.params, self.target_params, self.opt_state,
-             loss) = self._train_step(self.params, self.bn_state,
-                                      self.target_params, self.opt_state,
-                                      batch)
-            loss = float(loss)
+            loss = self._train_on_batch(
+                self.buffer.sample(self.rng, self.cfg.batch_size))
         return loss
+
+    def train_offline(self, steps: int, *, batch_size: int = None) -> list:
+        """Replay-only training (no new transitions): used to fit the Q head
+        on a recorded trace before the agent ever acts live.  Ignores the
+        online warmup/train_every gating — the buffer IS the dataset."""
+        if self.buffer.n == 0:
+            return []
+        bs = min(batch_size or self.cfg.batch_size, self.buffer.n)
+        return [self._train_on_batch(self.buffer.sample(self.rng, bs))
+                for _ in range(steps)]
+
+    def imitate(self, streams, actions, *, epochs: int = 20, lr: float = 1e-3,
+                batch_size: int = 64) -> list:
+        """Supervised pretraining of the Q head: cross-entropy of
+        softmax(q) against recorded (planner) actions — the cold-start
+        imitation the allocator's hybrid mode relies on before enough
+        operational reward has accumulated (paper §5.3)."""
+        opt_init, opt_update = adamw(lr)
+        opt_state = opt_init(self.params)
+
+        @jax.jit
+        def step(params, bn_state, opt_state, s, a):
+            def loss_fn(p, bn):
+                out, new_bn = MultiStreamDNN.apply(p, bn, s, training=True)
+                logp = jax.nn.log_softmax(out["q"])
+                nll = -jnp.take_along_axis(logp, a[:, None], axis=1)[:, 0]
+                return jnp.mean(nll), new_bn
+
+            (loss, new_bn), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, bn_state)
+            updates, opt_state = opt_update(grads, opt_state, params)
+            return apply_updates(params, updates), new_bn, opt_state, loss
+
+        actions = np.asarray(actions, np.int32)
+        n = len(actions)
+        bs = max(1, min(batch_size, n))
+        losses = []
+        for _ in range(epochs):
+            order = self.rng.permutation(n)
+            for i in range(0, n - bs + 1, bs):
+                idx = order[i:i + bs]
+                s = {k: jnp.asarray(v[idx]) for k, v in streams.items()}
+                (self.params, self.bn_state, opt_state, loss) = step(
+                    self.params, self.bn_state, opt_state, s,
+                    jnp.asarray(actions[idx]))
+                losses.append(float(loss))
+        # the pretrained policy is the starting point for bootstrapping too
+        self.target_params = jax.tree.map(lambda x: x, self.params)
+        return losses

@@ -6,3 +6,7 @@ from repro.core.dnn.train import (
     FEATURE_GROUPS, fit, make_sgd_step, permutation_importance,
     supervised_loss,
 )
+from repro.core.dnn.traces import (
+    TraceRecorder, fill_replay, pretrain_on_trace, replay_streams,
+    supervised_dataset, transitions,
+)

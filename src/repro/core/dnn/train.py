@@ -57,10 +57,14 @@ def fit(params, state, dataset, *, epochs: int = 5, lr: float = 1e-3,
     n = len(dataset["alloc_target"])
     rng = np.random.default_rng(seed)
     losses = []
+    # clamp the batch to the dataset: a short recorded trace (n < batch_size)
+    # must still take one full-dataset step per epoch — the unclamped range
+    # was empty, silently performing ZERO optimizer steps
+    bs = max(1, min(batch_size, n))
     for ep in range(epochs):
         order = rng.permutation(n)
-        for i in range(0, n - batch_size + 1, batch_size):
-            idx = order[i:i + batch_size]
+        for i in range(0, n - bs + 1, bs):
+            idx = order[i:i + bs]
             batch = {
                 "streams": {k: jnp.asarray(v[idx])
                             for k, v in dataset["streams"].items()},

@@ -54,6 +54,12 @@ class LoopConfig:
     pool: str = "dense"          # replica KV layout: dense | paged
     block_size: int | None = None   # paged: tokens per physical block
     num_blocks: int | None = None   # paged: physical blocks per replica
+    alloc_mode: str = "planner"  # allocator: planner | rl | hybrid — hybrid
+    #                              runs the (pretrained) DQN as the scaler
+    #                              inside the planner's safety envelope
+    learn: bool = True           # feed each tick's realized outcome back
+    #                              into alloc.learn (reward credited to the
+    #                              previous tick's action) when autoscaling
 
 
 @dataclasses.dataclass
@@ -74,6 +80,8 @@ class TickLog:
     observed: list = dataclasses.field(default_factory=list)  # one status()
     #                             per observe_addrs attach (out-of-band
     #                             lifetime counters, pod rank/mode)
+    learn_loss: float | None = None   # DQN train-step loss, when the live
+    #                             learning loop took one this tick
 
 
 def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
@@ -86,7 +94,8 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     seed: int = 0, lc: LoopConfig = LoopConfig(),
                     spec: WorkloadSpec = WorkloadSpec(prompt_len=16,
                                                       gen_len=8),
-                    profile=default_profile, sink: list | None = None):
+                    profile=default_profile, sink: list | None = None,
+                    recorder=None, chaos_hook=None, prime_allocator=None):
     """→ (router, [TickLog]).  ``autoscale=False`` pins one replica (the
     static baseline).  ``lc.topology`` picks the replica backend — the loop
     is transport-agnostic, so inproc / sharded / proc / tcp / pod runs on
@@ -94,7 +103,17 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
     trajectory.  ``sink``, when given, accumulates every completed Request
     (the cross-topology equivalence tests compare these).  Callers running
     the proc/tcp/pod topologies should ``router.close()`` when done (worker
-    teardown)."""
+    teardown).
+
+    ``recorder`` (a ``core/dnn/traces.TraceRecorder``) captures one training
+    record per tick: the collector aggregate plus the actuated decision,
+    realized cost, anomaly/eviction counters, and the fleet's paged-pool
+    prefix counters — replayable offline into StreamBuilder/ReplayBuffer
+    datasets.  ``chaos_hook(tick, router, collector)`` runs after reports
+    land and before eviction/scaling — fault scripts (straggler injection,
+    worker kills) see exactly what the control plane sees.
+    ``prime_allocator(alloc)`` runs once before the first tick — the hook
+    offline-trained policies use to warm-start the live allocator."""
     router = ReplicaRouter.from_topology(
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
@@ -131,7 +150,9 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
         deploy_vector(model_params_b=cfg.n_params() / 1e9, family=cfg.family,
                       mesh_model=1, mesh_data=1, region_idx=0,
                       slo_ms=lc.slo_ms, cost_weight=0.5),
-        cfg=AllocatorConfig(mode="planner"), seed=seed)
+        cfg=AllocatorConfig(mode=lc.alloc_mode), seed=seed)
+    if prime_allocator is not None:
+        prime_allocator(alloc)
 
     now, next_rid = 0.0, 0
     logs: list[TickLog] = []
@@ -167,6 +188,11 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             reports = router.reports(tick)
             for rep in reports:
                 collector.submit(rep)
+            if chaos_hook is not None:
+                # fault scripts run on the control plane's view of the tick:
+                # injected straggler evidence lands before the eviction
+                # policy's window, scripted kills before the scaling decision
+                chaos_hook(tick, router, collector)
             # close the straggler loop: flagged K consecutive windows → the
             # replica is evicted and replaced (its work requeues through the
             # survivors), BEFORE this tick's scaling decision sees the fleet
@@ -175,13 +201,22 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                 evicted = router.evict_stragglers(
                     evictor.update(collector.stragglers(),
                                    router.replica_count), now=now)
+            replicas_before = router.replica_count
             rec = collector.aggregate(tick, n_replicas=router.replica_count,
                                       max_replicas=lc.max_replicas)
             rec["evictions"] = float(len(evicted))   # visible to the DNN/selector
-            rec["rps"] = float(n)
+            # arrivals per VIRTUAL SECOND — perf_model and the forecaster
+            # consume a rate, and the raw per-tick count only coincides with
+            # it when steps_per_tick * tick_s == 1.0 (the default shape)
+            rec["rps"] = float(n) / tick_span
             rec["rps_window"] = [rec["rps"]]
             anomalies = anomaly.update(tick, {"rps": rec["rps"]})
             reason = "static"
+            learn_loss = None
+            # realized spend for the window that produced these metrics: the
+            # fleet size that served it, priced per constraints
+            cost_per_tick = (replicas_before
+                             * alloc.constraints.cost_per_replica)
             if autoscale:
                 alloc.observe(rec)
                 alloc.replicas = router.replica_count
@@ -189,6 +224,28 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                 router.scale_to(decision.target_replicas, now=now)
                 alloc.apply(decision)
                 reason = decision.reason
+                if lc.learn:
+                    # the live learning loop: this tick's realized outcome
+                    # becomes the reward credited to the PREVIOUS action
+                    learn_loss = alloc.learn(rec, cost_per_tick)
+            if recorder is not None:
+                fleet = router.metrics()
+                recorder.record({
+                    **rec,
+                    "rps_target": float(rps), "arrivals": int(n),
+                    "served": int(served),
+                    "replicas_before": int(replicas_before),
+                    "replicas_after": int(router.replica_count),
+                    "action_delta": int(decision.delta) if autoscale else 0,
+                    "reason": reason,
+                    "cost_per_tick": float(cost_per_tick),
+                    "anomaly": float(bool(anomalies)),
+                    # paged-pool cache efficiency, fleet-wide (0 for dense)
+                    "prefix_hits": float(fleet["prefix_hits"]),
+                    "tokens_shared": float(fleet["tokens_shared"]),
+                    "prefill_tokens": float(fleet["prefill_tokens"]),
+                    "prompt_tokens": float(fleet["prompt_tokens"]),
+                })
             observed = []
             for obs in list(observers):
                 try:
@@ -206,7 +263,8 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                 queue_depth=rec["queue_depth"],
                 replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
                 replicas=router.replica_count, reason=reason, anomaly=bool(
-                    anomalies), evicted=evicted, observed=observed))
+                    anomalies), evicted=evicted, observed=observed,
+                learn_loss=learn_loss))
     except BaseException:
         # the caller never receives the router handle it is documented to
         # close — reap the fleet (spawned workers/pods included) here

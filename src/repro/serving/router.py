@@ -417,6 +417,12 @@ class ReplicaRouter:
             "off_list_spawns": getattr(self._factory, "counters",
                                        {}).get("off_list_spawns", 0),
             "replicas": self.replica_count,
+            # paged-pool cache efficiency, fleet-wide — engines only report
+            # these when running a paged KV pool, so dense fleets read 0
+            "prefix_hits": sum(lt.get("prefix_hits", 0) for lt in ever),
+            "tokens_shared": sum(lt.get("tokens_shared", 0) for lt in ever),
+            "prefill_tokens": sum(lt.get("prefill_tokens", 0) for lt in ever),
+            "prompt_tokens": sum(lt.get("prompt_tokens", 0) for lt in ever),
         }
 
     def close(self):

@@ -1,0 +1,322 @@
+"""The closed learning loop: trace recording/replay + five regressions.
+
+Satellite regressions — each verified FAILING on the pre-fix src:
+
+ 1. ``PredictiveAllocator._pending_action`` was only assigned on the DQN
+    path, so the first planner-fallback ``learn()`` died on AttributeError
+    (and a later fallback credited a STALE DQN action).
+ 2. The DQN train step ran every forward with ``training=False``:
+    BatchNorm running stats were never written, ``agent.bn_state`` stayed
+    frozen at init forever.
+ 3. ``train.fit`` silently performed ZERO optimizer steps whenever the
+    dataset was smaller than ``batch_size`` (the per-epoch range was empty).
+ 4. ``WorkloadForecaster.update`` gated first-observation seeding on
+    truthiness (``self.daily[tod] or value``), so a legitimately observed
+    0.0 load RESET the seasonal EWMA instead of being decayed toward.
+ 5. ``run_closed_loop`` recorded ``rps = arrivals-per-tick`` (a count);
+    the forecaster/perf-model consume requests per virtual second — the
+    two only coincide when ``steps_per_tick * tick_s == 1.0``.
+
+Tentpole coverage: TraceRecorder JSONL round-trip, trace → StreamBuilder /
+supervised-dataset / replay-transition shapes, offline pretraining, the
+live ``alloc.learn`` wiring in the loop tick, and the hybrid envelope's
+planner fallback under an infeasible SLO.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.allocation.allocator import AllocatorConfig, PredictiveAllocator
+from repro.core.allocation.forecaster import WorkloadForecaster
+from repro.core.allocation.rl import ACTIONS, DQNAgent, DQNConfig
+from repro.core.dnn.features import deploy_vector
+from repro.core.dnn.model import DNNConfig, MultiStreamDNN
+from repro.core.dnn.train import fit
+from repro.core.dnn.traces import (
+    TraceRecorder, action_index, pretrain_on_trace, replay_streams,
+    supervised_dataset, transitions,
+)
+from repro.core.scaling.scaler import ScalingConstraints
+from repro.serving.closed_loop import LoopConfig, run_closed_loop
+from repro.sim.serving import WorkloadSpec
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+SPEC = WorkloadSpec(prompt_len=8, gen_len=4)
+
+DEPLOY = deploy_vector(model_params_b=1.0, family="dense", mesh_model=1,
+                       mesh_data=1, region_idx=0, slo_ms=200.0,
+                       cost_weight=0.5)
+
+# a small DNN keeps every jit in this file cheap
+SMALL_DNN = DNNConfig(window=8)
+
+
+def _tick_rec(tick, *, rps=1.0, lat=100.0, util=0.5, delta=0, cost=1.0):
+    return {"tick": tick, "rps": rps, "flop_util": util, "hbm_util": util,
+            "ici_util": 0.0, "mem_frac": util, "queue_depth": 0.0,
+            "replicas_frac": 0.25, "latency_p50": lat, "latency_p95": lat,
+            "throughput": rps, "error_rate": 0.0, "transport_ms": 0.0,
+            "action_delta": delta, "cost_per_tick": cost}
+
+
+def _trace(n=8):
+    return [_tick_rec(t, rps=1.0 + t, lat=80.0 + 10 * t, util=0.3 + 0.05 * t,
+                      delta=(1 if t == 2 else 0), cost=1.0 + (t >= 3))
+            for t in range(n)]
+
+
+def _allocator(perf_model, *, mode="hybrid", max_replicas=4, slo_ms=200.0):
+    return PredictiveAllocator(
+        perf_model,
+        ScalingConstraints(min_replicas=1, max_replicas=max_replicas,
+                           slo_ms=slo_ms),
+        DEPLOY, cfg=AllocatorConfig(mode=mode), dnn_cfg=SMALL_DNN, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_planner_fallback_defines_pending_action():
+    """Regression 1: when the hybrid DQN path falls through its envelope
+    (here: SLO infeasible and no scale-up in range) learn() must credit the
+    planner's actuated delta, not blow up on a never-assigned attribute
+    (pre-fix: AttributeError on the first learn after a fallback)."""
+    alloc = _allocator(lambda r, rps: (10_000.0, 1.0), max_replicas=1,
+                       slo_ms=100.0)
+    rec = _tick_rec(0)
+    alloc.observe(rec)
+    d = alloc.decide(rec)
+    assert not d.reason.startswith("dqn")       # envelope fell through
+    assert alloc._pending_action == action_index(d.delta)
+    assert alloc.learn(rec, cost_per_tick=1.0) is None   # first: primes only
+    alloc.observe(rec)
+    alloc.decide(rec)
+    alloc.learn(rec, cost_per_tick=1.0)          # pre-fix: AttributeError
+
+
+def test_hybrid_defers_to_planner_when_slo_infeasible():
+    """Envelope regression: under an infeasible spike NO action meets the
+    SLO, and the planner's max-headroom response must win — the DQN must
+    not get to actuate a smaller scale-up just because its delta is
+    positive (pre-fix: any q-preferred scale-up was accepted)."""
+    alloc = _allocator(lambda r, rps: (10_000.0, 1.0), max_replicas=4,
+                       slo_ms=100.0)
+    rec = _tick_rec(0, rps=50.0)
+    alloc.observe(rec)
+    d = alloc.decide(rec)
+    assert not d.reason.startswith("dqn")
+    assert d.target_replicas == 4                # the planner's max headroom
+
+
+def test_learn_before_any_decide_is_a_noop():
+    alloc = _allocator(lambda r, rps: (50.0, 0.5))
+    assert alloc.learn(_tick_rec(0), cost_per_tick=1.0) is None
+
+
+def test_dqn_training_updates_batchnorm_state():
+    """Regression 2: the gradient pass now runs in training mode, so the
+    deploy-stream BatchNorm running stats track the replayed data (pre-fix
+    every forward was training=False and bn_state never moved)."""
+    agent = DQNAgent(SMALL_DNN, DQNConfig(warmup=4, train_every=1,
+                                          batch_size=4), seed=0)
+    count0 = float(agent.bn_state["bn1"]["count"])
+    mean0 = np.asarray(agent.bn_state["bn1"]["mean"]).copy()
+    rng = np.random.default_rng(0)
+    snaps = replay_streams(_trace(10), DEPLOY + 0.5, window=SMALL_DNN.window)
+    losses = [agent.observe(snaps[t], int(rng.integers(len(ACTIONS))),
+                            1.0, snaps[t + 1]) for t in range(9)]
+    assert any(l is not None for l in losses)
+    assert float(agent.bn_state["bn1"]["count"]) > count0
+    assert not np.allclose(np.asarray(agent.bn_state["bn1"]["mean"]), mean0)
+
+
+def test_fit_takes_steps_on_datasets_smaller_than_batch():
+    """Regression 3: n=7 < batch_size=64 must still take one full-dataset
+    step per epoch (pre-fix: zero steps, params returned unchanged)."""
+    ds = supervised_dataset(_trace(8), DEPLOY, window=SMALL_DNN.window)
+    assert len(ds["alloc_target"]) == 7
+    params, state = MultiStreamDNN.init(__import__("jax").random.PRNGKey(0),
+                                        SMALL_DNN)
+    before = np.asarray(params["alloc"]["w"]).copy()
+    params, state, losses = fit(params, state, ds, epochs=2, batch_size=64)
+    assert len(losses) == 2                      # one step per epoch
+    assert not np.allclose(np.asarray(params["alloc"]["w"]), before)
+
+
+def test_forecaster_decays_toward_observed_zero_load():
+    """Regression 4: an observed 0.0 is a real data point.  After seeing
+    0.0 at a time-of-day slot, the next observation must be EWMA-decayed
+    toward it (pre-fix: truthiness treated the stored 0.0 as 'unseen' and
+    reset the profile to the new value)."""
+    f = WorkloadForecaster(ticks_per_day=4, alpha=0.3)
+    f.update(0.0)                                # tod 0, day 0
+    for _ in range(3):
+        f.update(5.0)                            # tod 1..3
+    f.update(10.0)                               # tod 0 again
+    assert f.daily[0] == pytest.approx(3.0)      # 0.3*10 + 0.7*0, not 10.0
+
+
+def test_forecaster_level_survives_zero_starts():
+    f = WorkloadForecaster(ticks_per_day=4, alpha=0.3)
+    for v in (0.0, 0.0, 10.0):
+        f.update(v)
+    assert f.level == pytest.approx(3.0)         # pre-fix: reset to 10.0
+
+
+def test_recorded_rps_is_per_virtual_second():
+    """Regression 5: with steps_per_tick=5 and tick_s=0.4 a tick spans 2.0
+    virtual seconds — the recorded rate must be arrivals / 2.0 (pre-fix it
+    was the raw arrival count, 2x the true rate at this shape)."""
+    lc = dataclasses.replace(LoopConfig(), steps_per_tick=5, tick_s=0.4,
+                             max_replicas=2)
+    rec = TraceRecorder()
+    router, logs = run_closed_loop(CFG, autoscale=True, ticks=6, seed=0,
+                                   lc=lc, spec=SPEC, recorder=rec)
+    router.close()
+    assert sum(r["arrivals"] for r in rec.records) > 0
+    for r in rec.records:
+        assert r["rps"] == pytest.approx(r["arrivals"] / 2.0)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: trace recording, replay, offline training, live wiring
+# ---------------------------------------------------------------------------
+
+
+def test_trace_recorder_roundtrip(tmp_path):
+    rec = TraceRecorder()
+    for r in _trace(5):
+        rec.record(r)
+    p = tmp_path / "trace.jsonl"
+    rec.save(p)
+    assert len(TraceRecorder.load(p)) == 5
+    assert TraceRecorder.load(p).records == rec.records
+
+
+def test_recorder_copies_records():
+    rec = TraceRecorder()
+    r = _tick_rec(0)
+    rec.record(r)
+    r["rps"] = 99.0                              # later mutation by the loop
+    assert rec.records[0]["rps"] == 1.0
+
+
+def test_replay_streams_match_live_shapes():
+    snaps = replay_streams(_trace(6), DEPLOY, window=SMALL_DNN.window)
+    assert len(snaps) == 6
+    for s in snaps:
+        assert s["resource"].shape == (1, SMALL_DNN.window,
+                                       SMALL_DNN.n_resource_features)
+        assert s["perf"].shape == (1, SMALL_DNN.window,
+                                   SMALL_DNN.n_perf_features)
+        assert s["deploy"].shape == (1, SMALL_DNN.n_deploy_features)
+
+
+def test_supervised_dataset_targets_next_tick():
+    recs = _trace(6)
+    ds = supervised_dataset(recs, DEPLOY, window=SMALL_DNN.window)
+    assert len(ds["alloc_target"]) == 5
+    # row t's target is tick t+1's realized utilization
+    assert ds["alloc_target"][0][0] == pytest.approx(recs[1]["flop_util"])
+    assert ds["strategy_target"].dtype == np.int32
+    with pytest.raises(ValueError):
+        supervised_dataset(recs[:1], DEPLOY)
+
+
+def test_transitions_credit_recorded_action_with_next_reward():
+    recs = _trace(6)
+    trans = transitions(recs, DEPLOY, window=SMALL_DNN.window)
+    assert len(trans) == 5
+    s, a, r, s2, done = trans[2]                 # the tick with delta=+1
+    assert a == ACTIONS.index(1)
+    assert not done and trans[-1][4]             # only the last is terminal
+    # the reward is computed from tick t+1's realized metrics: higher next-
+    # tick utilization at equal latency/cost ⇒ strictly better reward
+    hi = [dict(x, flop_util=0.9) for x in recs]
+    assert transitions(hi, DEPLOY, window=SMALL_DNN.window)[2][2] > r
+
+
+def test_action_index_snaps_to_nearest_delta():
+    assert ACTIONS[action_index(0)] == 0
+    assert ACTIONS[action_index(3)] in (2, 4)
+    assert ACTIONS[action_index(-7)] == -4
+
+
+def test_pretrain_on_trace_trains_all_three_phases():
+    alloc = _allocator(lambda r, rps: (50.0, 0.5))
+    out = pretrain_on_trace(alloc, _trace(8), epochs=2, imitation_epochs=2,
+                            dqn_steps=3)
+    assert out["transitions"] == 7
+    assert len(out["supervised"]) == 2 and len(out["dqn"]) == 3
+    assert out["imitation"][-1] < out["imitation"][0]    # CE decreases
+    # a pretrained agent is warm: online learning no longer waits for the
+    # full cold-start warmup fill
+    assert alloc.agent.cfg.warmup <= alloc.agent.buffer.n
+    # and the warmed StreamBuilder has seen the trace
+    assert len(alloc.streams.res_hist) == 8
+
+
+def test_closed_loop_live_learning_takes_train_steps():
+    """The tentpole wiring: run_closed_loop calls alloc.learn each tick, so
+    with a warm (low-warmup) agent the TickLog carries real DQN losses."""
+    def prime(alloc):
+        alloc.agent.cfg = dataclasses.replace(
+            alloc.agent.cfg, warmup=2, train_every=1, batch_size=2)
+
+    lc = dataclasses.replace(LoopConfig(), max_replicas=2,
+                             alloc_mode="planner")
+    router, logs = run_closed_loop(CFG, autoscale=True, ticks=6, seed=0,
+                                   lc=lc, spec=SPEC, prime_allocator=prime)
+    router.close()
+    assert any(t.learn_loss is not None for t in logs)
+
+
+def test_closed_loop_learn_flag_off_means_no_updates():
+    lc = dataclasses.replace(LoopConfig(), max_replicas=2, learn=False)
+    router, logs = run_closed_loop(CFG, autoscale=True, ticks=4, seed=0,
+                                   lc=lc, spec=SPEC)
+    router.close()
+    assert all(t.learn_loss is None for t in logs)
+
+
+def test_chaos_hook_sees_control_plane_state():
+    seen = []
+
+    def hook(tick, router, collector):
+        seen.append((tick, router.replica_count))
+
+    lc = dataclasses.replace(LoopConfig(), max_replicas=2)
+    router, logs = run_closed_loop(CFG, autoscale=True, ticks=4, seed=0,
+                                   lc=lc, spec=SPEC, chaos_hook=hook)
+    router.close()
+    assert [t for t, _ in seen] == [0, 1, 2, 3]
+    assert all(n >= 1 for _, n in seen)
+
+
+def test_recorded_trace_pretrains_and_redeploys_hybrid():
+    """End-to-end smoke of the loop the benchmark A/Bs: record a planner
+    trace on the live data plane, offline-train on it, then run the learned
+    policy as the hybrid scaler on the same seed."""
+    lc = dataclasses.replace(LoopConfig(), max_replicas=2)
+    rec = TraceRecorder()
+    router, _ = run_closed_loop(CFG, autoscale=True, ticks=6, seed=0, lc=lc,
+                                spec=SPEC, recorder=rec)
+    router.close()
+    assert len(rec) == 6
+
+    def prime(alloc):
+        pretrain_on_trace(alloc, rec.records, epochs=1, imitation_epochs=1,
+                          dqn_steps=2)
+
+    router, logs = run_closed_loop(
+        CFG, autoscale=True, ticks=4, seed=0,
+        lc=dataclasses.replace(lc, alloc_mode="hybrid"),
+        spec=SPEC, prime_allocator=prime)
+    router.close()
+    assert len(logs) == 4
+    assert all(1 <= t.replicas <= 2 for t in logs)
