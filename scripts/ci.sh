@@ -5,7 +5,11 @@
 # (the `chaos` marker: scripted kills + straggler evictions over a mixed
 # proc/TCP fleet), then the docs job (intra-repo links in docs/*.md +
 # README must resolve — stdlib checker, no new deps).  Record the
-# decode-kernel ablation (BENCH_decode.json) and the replica-fabric smokes:
+# decode-kernel ablation plus the speculative-decoding tokens/s ablation
+# (spec-on vs spec-off × pallas/ref × dense/paged on a prompt-echo workload;
+# exits nonzero if a greedy stream diverges from plain decode, a greedy arm
+# pulls host logits, or speculation regresses tokens/s — both merged into
+# BENCH_decode.json) and the replica-fabric smokes:
 # TCP (2 local workers + the submit-batching RPC before/after —
 # BENCH_serving.json), proc (BENCH_serving_proc.json), and the gated
 # ≥2-process pod smoke (jax.distributed ranks via --pod-rank; skips cleanly
@@ -29,7 +33,7 @@ python -m pytest -x -q -m kernels
 python -m pytest -x -q -m "not kernels and not chaos"
 python -m pytest -x -q -m chaos
 python scripts/check_docs_links.py
-python -m benchmarks.serving_latency --kernel both --smoke --out BENCH_decode.json
+python -m benchmarks.serving_latency --kernel both --speculative --smoke --out BENCH_decode.json
 python -m benchmarks.serving_latency --topology tcp --smoke --out BENCH_serving.json
 python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving_proc.json
 python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_pod.json

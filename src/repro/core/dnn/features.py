@@ -10,9 +10,14 @@ from __future__ import annotations
 import numpy as np
 
 RESOURCE_KEYS = ("flop_util", "hbm_util", "ici_util", "mem_frac",
-                 "queue_depth", "replicas_frac")
+                 "queue_depth", "replicas_frac",
+                 # paged-pool cache efficiency (0 on dense fleets): shared-
+                 # prefix admissions and the prompt tokens they saved
+                 "prefix_hits", "tokens_shared")
 PERF_KEYS = ("latency_p50", "latency_p95", "throughput", "error_rate",
-             "rps")
+             "rps",
+             # speculative-decode acceptance this window (0 with spec off)
+             "accept_rate")
 
 
 class RunningNorm:

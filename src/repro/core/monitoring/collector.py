@@ -31,6 +31,11 @@ class ReplicaReport:
     # the control plane's view of how remote the replica is.  Streamed
     # reports carry it so the scaler/selector can budget for it.
     transport_ms: float = 0.0
+    # speculative decoding events this window: draft tokens proposed and
+    # accepted (defaulted so report producers without speculation — older
+    # workers, hand-built test reports — keep constructing cleanly)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
 
 class MetricsCollector:
@@ -93,6 +98,7 @@ class MetricsCollector:
         hold collector memory (or a straggler flag) for the rest of the
         run."""
         lat, reqs, errs = [], 0, 0
+        spec_prop, spec_acc = 0, 0
         util = {"flop_util": [], "hbm_util": [], "ici_util": [], "mem_frac": []}
         qd, transport = [], []
         dead = []
@@ -113,6 +119,10 @@ class MetricsCollector:
                 lat.extend(rep.latency_ms_samples)
                 reqs += rep.n_requests
                 errs += rep.n_errors
+                # EVENT channel, same exactly-once fold: speculation counts
+                # happened once, in the window they were reported
+                spec_prop += rep.spec_proposed
+                spec_acc += rep.spec_accepted
             if fresh:
                 # watermark = highest CONSUMED report tick (not the aggregate
                 # tick): a report delayed past an intervening aggregate is
@@ -138,6 +148,9 @@ class MetricsCollector:
             "rps": float(reqs),
             "queue_depth": float(np.mean(qd)) if qd else 0.0,
             "transport_ms": float(np.mean(transport)) if transport else 0.0,
+            # acceptance this tick; a fleet with speculation off (or no
+            # drafts found) reads 0.0, never NaN
+            "accept_rate": spec_acc / max(spec_prop, 1),
             "replicas_frac": n_replicas / max(max_replicas, 1),
             **{k: float(np.mean(v)) if v else 0.0 for k, v in util.items()},
         }

@@ -19,6 +19,7 @@ from repro.kernels.decode_attention import (
     decode_attention_bkgd,
     decode_attention_paged_bkgd,
 )
+from repro.kernels.sample import fused_sample_bv
 from repro.kernels.ssm_scan import ssm_scan_ssd
 
 
@@ -99,6 +100,23 @@ def cache_ring_update(cache, new, slot, *, interpret=None):
     slot: (B,) int32 (already reduced mod Smax)."""
     interpret = _interpret_default() if interpret is None else interpret
     return cache_ring_update_bs(cache, new, slot, interpret=interpret)
+
+
+def fused_sample(logits, seed, rid, pos, temperature, *, top_k: int = 0,
+                 interpret=None):
+    """logits: (B, V) float; seed/rid/pos: (B,) int32 stateless RNG
+    counters; temperature: (B,) float32 (0 → greedy argmax, bit-compatible
+    with the host ``sampling.sample_token``) → (B,) int32 tokens.
+
+    ``top_k`` is static per call (0 = full vocabulary); ``top_k > 0``
+    needs a per-row k-th order statistic, which the kernel doesn't tile —
+    it dispatches to the jnp reference, still entirely on device."""
+    interpret = _interpret_default() if interpret is None else interpret
+    if top_k > 0:
+        return ref.fused_sample_ref(logits, seed, rid, pos, temperature,
+                                    top_k=top_k)
+    return fused_sample_bv(logits, seed, rid, pos, temperature,
+                           interpret=interpret)
 
 
 def ssm_scan(x, dt, A, B, C, *, chunk: int = 128, interpret=None):

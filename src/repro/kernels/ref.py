@@ -87,6 +87,49 @@ def cache_ring_update_ref(cache, new, slot):
         new.astype(cache.dtype))
 
 
+def fused_sample_ref(logits, seed, rid, pos, temperature, *,
+                     top_k: int = 0):
+    """logits: (B, V); seed/rid/pos: (B,) int32 counters; temperature:
+    (B,) float32 → (B,) int32 sampled tokens.
+
+    Gumbel-max over a murmur3-finalizer counter hash of (seed, rid, pos,
+    column) — written independently of the kernel (tests pin the two
+    BITWISE equal on the shared ``top_k == 0`` space).  ``temperature == 0``
+    rows take a plain f32 argmax, bit-compatible with the host
+    ``sampling.sample_token`` greedy path.  ``top_k > 0`` masks scaled
+    logits below the per-row k-th largest before the Gumbel perturbation —
+    the sort is why this path lives in the reference only.
+    """
+    B, V = logits.shape
+    x = jnp.asarray(logits, jnp.float32)
+
+    def mix(v):
+        v = v ^ (v >> jnp.uint32(16))
+        v = v * jnp.uint32(0x85EBCA6B)
+        v = v ^ (v >> jnp.uint32(13))
+        v = v * jnp.uint32(0xC2B2AE35)
+        return v ^ (v >> jnp.uint32(16))
+
+    def u32(v):
+        return jnp.asarray(v, jnp.int32).astype(jnp.uint32)
+
+    key = mix(jnp.uint32(0x9E3779B9) ^ u32(seed))
+    key = mix(key ^ u32(rid))
+    key = mix(key ^ u32(pos))                                  # (B,)
+    bits = mix(key[:, None] ^ jnp.arange(V, dtype=jnp.uint32)[None, :])
+    u = ((bits >> jnp.uint32(8)).astype(jnp.float32) + 0.5) \
+        * (1.0 / (1 << 24))
+    g = -jnp.log(-jnp.log(u))
+    t = jnp.asarray(temperature, jnp.float32)[:, None]
+    scaled = x / jnp.maximum(t, 1e-30)
+    if top_k > 0:
+        k = min(top_k, V)
+        kth = jnp.sort(scaled, axis=1)[:, V - k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -jnp.inf)
+    score = jnp.where(t > 0.0, scaled + g, x)
+    return jnp.argmax(score, axis=1).astype(jnp.int32)
+
+
 def ssm_scan_ref(x, dt, A, B, C):
     """SSD (Mamba2) recurrence, step by step.
 

@@ -1,0 +1,91 @@
+"""Fused in-kernel token sampling — the decode tail.
+
+One grid row per batch element: greedy argmax or Gumbel-max temperature
+sampling over that row's (V,) logits, with a counter-based RNG hashed from
+scalar-prefetched ``(seed, rid, pos)`` — Philox-style stateless counters:
+no RNG state lives on device, every (request, position) pair draws an
+independent stream, and replays/retraces are bit-reproducible.
+
+Greedy (``temperature == 0``) is bit-compatible with the host path
+(``serving.sampling.sample_token``): both reduce to first-index argmax
+over the f32 logits row (the host's f32→f64 cast is monotonic and
+injective, so the winning index agrees), which is what lets a serving tick
+keep its sampled tokens on device — the engine pulls (B,) int32 tokens
+instead of (B, 1, V) logits.
+
+Top-k thresholding needs a per-row k-th order statistic (a sort); that
+lives in the jnp reference (``ref.fused_sample_ref``) and ``ops.
+fused_sample`` routes ``top_k > 0`` there — the same "shapes the kernel
+doesn't tile fall back to ref" contract the attention wrappers use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# murmur3 finalizer constants — the avalanche the jnp oracle reimplements
+# independently; tests pin kernel == ref BITWISE on the shared space
+M1 = 0x85EBCA6B
+M2 = 0xC2B2AE35
+GOLDEN = 0x9E3779B9
+
+
+def _mix(x):
+    """uint32 → uint32 avalanche (murmur3 fmix32)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(M1)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(M2)
+    return x ^ (x >> jnp.uint32(16))
+
+
+def _u32(v):
+    return jnp.asarray(v, jnp.int32).astype(jnp.uint32)
+
+
+def _sample_kernel(seed_ref, rid_ref, pos_ref, logits_ref, temp_ref,
+                   out_ref, *, V: int):
+    b = pl.program_id(0)
+    x = logits_ref[0].astype(jnp.float32)[None, :]            # (1, V)
+    t = temp_ref[0, 0]
+    key = _mix(jnp.uint32(GOLDEN) ^ _u32(seed_ref[b]))
+    key = _mix(key ^ _u32(rid_ref[b]))
+    key = _mix(key ^ _u32(pos_ref[b]))
+    col = jax.lax.broadcasted_iota(jnp.uint32, (1, V), 1)
+    bits = _mix(key ^ col)
+    u = ((bits >> jnp.uint32(8)).astype(jnp.float32) + 0.5) \
+        * (1.0 / (1 << 24))                                   # (0, 1)
+    g = -jnp.log(-jnp.log(u))
+    score = jnp.where(t > 0.0, x / jnp.maximum(t, 1e-30) + g, x)
+    out_ref[0, 0] = jnp.argmax(score, axis=1).astype(jnp.int32)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_sample_bv(logits, seed, rid, pos, temperature, *,
+                    interpret: bool = False):
+    """logits: (B, V) float; seed/rid/pos: (B,) int32 RNG counters;
+    temperature: (B,) float32 (0 → greedy argmax) → (B,) int32 tokens."""
+    B, V = logits.shape
+    kernel = functools.partial(_sample_kernel, V=V)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda b, s, r, p: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, s, r, p: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, s, r, p: (b, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.int32), jnp.asarray(rid, jnp.int32),
+      jnp.asarray(pos, jnp.int32), logits,
+      jnp.asarray(temperature, jnp.float32)[:, None])
+    return out[:, 0]

@@ -54,6 +54,9 @@ class LoopConfig:
     pool: str = "dense"          # replica KV layout: dense | paged
     block_size: int | None = None   # paged: tokens per physical block
     num_blocks: int | None = None   # paged: physical blocks per replica
+    spec_k: int = 0              # speculative decode: draft tokens per tick
+    #                              (0 disables; streams are bit-identical)
+    spec_ngram: int = 3          # prompt-lookup n-gram order for drafting
     alloc_mode: str = "planner"  # allocator: planner | rl | hybrid — hybrid
     #                              runs the (pretrained) DQN as the scaler
     #                              inside the planner's safety envelope
@@ -119,7 +122,8 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas, addrs=list(lc.addrs),
         pod_size=lc.pod_size, batch_submits=lc.batch_submits,
-        pool=lc.pool, block_size=lc.block_size, num_blocks=lc.num_blocks)
+        pool=lc.pool, block_size=lc.block_size, num_blocks=lc.num_blocks,
+        spec_k=lc.spec_k, spec_ngram=lc.spec_ngram)
     rng = np.random.default_rng(seed)
     evictor = (EvictionPolicy(k_windows=lc.evict_after)
                if lc.evict_after > 0 else None)

@@ -18,6 +18,23 @@ from a naive batched decoder:
 
 * **Sampling layer.**  Greedy argmax is just the default SamplingParams;
   temperature/top-k sampling is seeded per request (scheduler.Request).
+  Sampling is FUSED into the decode tail (steps.make_fused_decode_step):
+  greedy rows take the device-sampled token, so a greedy tick pulls (B,)
+  int32s instead of (B, 1, V) logits — only temperature rows pull their
+  one logits row to keep their stateful per-request host RNG.
+
+* **Speculative decoding** (``spec_k > 0``).  A model-free prompt-lookup
+  draft (serving/draft.py) proposes up to k tokens per decode slot from
+  the slot's own prompt+generated history; the target model verifies the
+  whole window in ONE jitted multi-position decode (steps.make_verify_step)
+  and the engine accepts the longest exact-match prefix — emitting a+1
+  tokens per tick where the plain path emits 1.  Rejected tails rewind via
+  the pool index vector (the same mechanism preemption uses), so rejected
+  K/V is simply re-covered.  PREFILL rows ride the same window: up to W
+  upcoming prompt tokens stream per tick.  Acceptance is exact-match on
+  sampled tokens, so streams are bit-identical to the plain path for ANY
+  sampling mode; families whose state can't rewind (SSM/hybrid recurrence,
+  sliding-window rings that wrap) silently serve the plain path.
 
 The low-level admit()/tick() surface is kept compatible with the seed's
 launch/serve.py engine; submit()/step() add the queued-request lifecycle.
@@ -33,7 +50,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LM
-from repro.models.steps import make_decode_step, make_prefill_step
+from repro.models.attention import Attention
+from repro.models.steps import (
+    make_decode_step, make_fused_decode_step, make_prefill_step,
+    make_verify_step,
+)
+from repro.serving.draft import ngram_propose
 from repro.serving.scheduler import FCFSScheduler, Request
 from repro.serving.slots import make_pool
 
@@ -51,6 +73,11 @@ class EngineCore:
         self.params = params
         self.prefill = jax.jit(make_prefill_step(cfg, max_seq))
         self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+        # compiled lazily on first use: a fused-sampling decode tick and the
+        # multi-position verify step (one retrace per distinct window width)
+        self.fused_decode = jax.jit(make_fused_decode_step(cfg),
+                                    donate_argnums=(2,))
+        self.verify = jax.jit(make_verify_step(cfg), donate_argnums=(2,))
 
 
 class EngineStats:
@@ -62,6 +89,8 @@ class EngineStats:
         self.total_tokens = 0
         self.total_ticks = 0
         self.total_busy = 0.0
+        self.total_spec_proposed = 0
+        self.total_spec_accepted = 0
         self.latencies_ms = deque(maxlen=4096)
         self.queue_depth = 0
         self._reset_window()
@@ -72,6 +101,8 @@ class EngineStats:
         self._win_tokens = 0
         self._win_ticks = 0
         self._win_busy = 0.0
+        self._win_spec_prop = 0
+        self._win_spec_acc = 0
 
     def on_tick(self, busy_slots: int, slots: int, queue_depth: int):
         self.total_ticks += 1
@@ -90,6 +121,12 @@ class EngineStats:
         self._win_completed += 1
         self._win_tokens += len(request.tokens_out)
 
+    def on_speculate(self, proposed: int, accepted: int):
+        self.total_spec_proposed += proposed
+        self.total_spec_accepted += accepted
+        self._win_spec_prop += proposed
+        self._win_spec_acc += accepted
+
     @property
     def slot_utilization(self) -> float:
         return self.total_busy / max(self.total_ticks, 1)
@@ -102,6 +139,8 @@ class EngineStats:
             "n_tokens": self._win_tokens,
             "slot_util": self._win_busy / max(self._win_ticks, 1),
             "queue_depth": self.queue_depth,
+            "spec_proposed": self._win_spec_prop,
+            "spec_accepted": self._win_spec_acc,
         }
         self._reset_window()
         return out
@@ -143,7 +182,8 @@ class ServingEngine:
                  prefill_chunk: int | None = None,
                  core: EngineCore | None = None, replica_id: int = 0,
                  pool: str = "dense", block_size: int | None = None,
-                 num_blocks: int | None = None, partitions: int = 1):
+                 num_blocks: int | None = None, partitions: int = 1,
+                 spec_k: int = 0, spec_ngram: int = 3):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -164,6 +204,11 @@ class ServingEngine:
         self.prompt_tokens = 0       # prompt tokens admitted (incl. shared)
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
         self._tokens_host = np.zeros(slots, np.int32)
+        # host-side token truth may run ahead of the staged device copy:
+        # verify ticks build their window from _tokens_host directly, so
+        # they defer the (slots, 1) device put until a fused/legacy tick
+        # (or admission) actually needs self.tokens
+        self._tokens_dirty = False
         self.pos = np.zeros(slots, np.int64)        # per-slot position
         self.remaining = np.zeros(slots, np.int64)  # tokens left to generate
         self.active = np.zeros(slots, bool)
@@ -185,6 +230,19 @@ class ServingEngine:
         self._patch_key = (hashlib.sha1(np.zeros(
             (cfg.n_vision_patches, cfg.d_model), np.float32).tobytes()
         ).digest() if cfg.family == "vlm" else b"")
+        self.spec_k = max(int(spec_k), 0)
+        self.spec_ngram = max(int(spec_ngram), 1)
+        # speculation needs a rewindable cache: recurrent state (SSM towers,
+        # hybrid interleaves) can't roll back, and a sliding-window ring
+        # shorter than max_seq wraps — speculative writes would clobber live
+        # context that rewinding the index cannot restore.  Ineligible
+        # families silently serve the plain path; the knob is never an error.
+        self._spec_ok = (
+            self.spec_k > 0
+            and cfg.ssm is None and getattr(cfg, "hybrid", None) is None
+            and not cfg.enc_dec and not cfg.attn_free
+            and Attention.cache_len(cfg, max_seq) == max_seq)
+        self.logits_pulls = 0        # host (·, V) logits materializations
         self.scheduler = FCFSScheduler()
         self.draining = False
         self.stats = EngineStats()
@@ -291,7 +349,7 @@ class ServingEngine:
                 self._tokens_host[slot] = int(prompt[h_tok])
                 self._fed[slot] = h_tok + 1      # h_tok shared + 1 staged
                 self.phase[slot] = PHASE_PREFILL
-                self.tokens = jnp.asarray(self._tokens_host[:, None])
+                self._stage_tokens()
                 return
         c = P if self.prefill_chunk >= P else self.prefill_chunk
         self.prefill_tokens += P
@@ -327,16 +385,63 @@ class ServingEngine:
             self._tokens_host[slot] = int(prompt[c])
             self._fed[slot] = c + 1              # c cached + 1 staged
             self.phase[slot] = PHASE_PREFILL
-        self.tokens = jnp.asarray(self._tokens_host[:, None])
+        self._stage_tokens()
 
     def tick(self, now: float | None = None) -> list[int]:
         """One decode step for all slots (inactive slots decode garbage that
-        is simply ignored).  Returns slots that finished this tick."""
+        is simply ignored).  Returns slots that finished this tick.
+
+        Three paths, one contract (bit-identical token streams):
+
+        * **legacy** — ``self.decode`` was replaced (sharded topologies
+          install their own compiled step; tests monkeypatch): bulk-pull the
+          (slots, 1, V) logits and sample on host, as the seed did.
+        * **fused** — sampling runs in the decode tail on device; greedy
+          rows never materialize logits on host (the engine pulls (slots,)
+          int32 tokens), temperature rows pull only their one (V,) row.
+        * **verify** — when speculation is on and a draft (or a streamable
+          prompt tail) exists, ONE multi-position decode verifies a whole
+          (slots, W) window and the engine emits the accepted prefix.
+        """
         if not self.active.any():
             return []
-        logits, cache = self.decode(self.params, self.tokens, self.pool.cache)
-        self.pool.cache = cache
-        rows = np.asarray(logits[:, 0], np.float32)     # (slots, V)
+        if self.decode is not self.core.decode:
+            if self._tokens_dirty:
+                self._stage_tokens()
+            logits, cache = self.decode(self.params, self.tokens,
+                                        self.pool.cache)
+            self.pool.cache = cache
+            rows = np.asarray(logits[:, 0], np.float32)     # (slots, V)
+            self.logits_pulls += 1
+            toks = np.argmax(rows, axis=1).astype(np.int32)
+            return self._advance(toks, lambda s: rows[s], now)
+        if self._spec_ok:
+            drafts, window_w = self._plan_window()
+            if window_w >= 2:
+                return self._tick_verify(drafts, window_w, now)
+        return self._tick_fused(now)
+
+    # -------------------------------------------------- shared tick plumbing
+
+    def _stage_tokens(self):
+        """Materialize the device copy of every slot's next input token."""
+        self.tokens = jnp.asarray(self._tokens_host[:, None])
+        self._tokens_dirty = False
+
+    def _emit(self, slot: int, req, tok_dev: int, fetch_row) -> int:
+        """One sampled token for a slot, device-first: greedy rows take the
+        device-sampled token (bit-equal to host argmax), temperature rows
+        pull their one logits row and keep their stateful host RNG."""
+        if isinstance(req, Request) and req.sampling.temperature > 0.0:
+            return req.sample(fetch_row(slot))
+        tok = int(tok_dev)
+        if isinstance(req, Request):
+            req.tokens_out.append(tok)
+        return tok
+
+    def _advance(self, toks_host, fetch_row, now) -> list[int]:
+        """Single-position tick bookkeeping: per-slot host state advance
+        given the device-sampled tokens and a lazy logits-row getter."""
         done: list[int] = []
         for slot in np.nonzero(self.active)[0]:
             slot = int(slot)
@@ -357,9 +462,8 @@ class ServingEngine:
                     self._fed[slot] += 1
                 else:
                     # last prompt token just decoded → first generated token
-                    tok = (req.sample(rows[slot]) if isinstance(req, Request)
-                           else int(np.argmax(rows[slot])))
-                    self._tokens_host[slot] = tok
+                    self._tokens_host[slot] = self._emit(
+                        slot, req, toks_host[slot], fetch_row)
                     self.phase[slot] = PHASE_DECODE
                     if (isinstance(req, Request) and req.t_first_token is None
                             and now is not None):
@@ -370,11 +474,196 @@ class ServingEngine:
                     self.active[slot] = False
                     done.append(slot)
                 else:
-                    tok = (req.sample(rows[slot]) if isinstance(req, Request)
-                           else int(np.argmax(rows[slot])))
-                    self._tokens_host[slot] = tok
-        self.tokens = jnp.asarray(self._tokens_host[:, None])
+                    self._tokens_host[slot] = self._emit(
+                        slot, req, toks_host[slot], fetch_row)
+        self._stage_tokens()
         return done
+
+    def _tick_fused(self, now) -> list[int]:
+        """One decode step with sampling fused into the decode tail: the
+        kernel draws from stateless (seed, rid, pos) counters per row, and a
+        greedy tick pulls (slots,) int32 tokens — zero host logits traffic."""
+        B = self.slots
+        seed = np.zeros(B, np.int32)
+        rid = np.zeros(B, np.int32)
+        pos = np.zeros(B, np.int32)
+        temp = np.zeros(B, np.float32)
+        for slot, req in self.slot_owner.items():
+            if isinstance(req, Request):
+                seed[slot] = req.sampling.seed
+                rid[slot] = req.rid
+                pos[slot] = len(req.tokens_out)
+                temp[slot] = req.sampling.temperature
+        if self._tokens_dirty:
+            self._stage_tokens()
+        toks, logits, cache = self.core.fused_decode(
+            self.params, self.tokens, self.pool.cache,
+            jnp.asarray(seed), jnp.asarray(rid), jnp.asarray(pos),
+            jnp.asarray(temp))
+        self.pool.cache = cache
+        toks_host = np.asarray(toks)                    # (slots,) int32
+
+        def fetch_row(s):
+            self.logits_pulls += 1
+            return np.asarray(logits[s, 0], np.float32)
+
+        return self._advance(toks_host, fetch_row, now)
+
+    # ------------------------------------------------------- speculative path
+
+    def _plan_window(self) -> tuple[dict[int, np.ndarray], int]:
+        """Collect n-gram drafts and size this tick's verify window.
+
+        Returns (drafts, W).  W is clamped so no ACTIVE row's window writes
+        past ``max_seq - 1``: the multi-position decode advances EVERY row's
+        index by W, writes wrap modulo the ring, and a wrapped garbage write
+        would clobber valid context (or, paged, a shared prefix block) that
+        rewinding the index cannot restore.  Inactive rows only ever write
+        their own garbage slot, so they don't constrain W.  W < 2 means a
+        window buys nothing this tick — caller falls back to the fused tick.
+        """
+        drafts: dict[int, np.ndarray] = {}
+        w_cap = self.spec_k + 1
+        streamable = False
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            w_cap = min(w_cap, self.max_seq - int(self.pos[slot]))
+            if self.phase[slot] == PHASE_PREFILL:
+                if self._fed[slot] < len(self._prompt[slot]):
+                    streamable = True
+                continue
+            req = self.slot_owner.get(slot)
+            lim = min(self.spec_k, int(self.remaining[slot]) - 1)
+            if not isinstance(req, Request) or lim <= 0:
+                continue
+            # plain-int history: tokens_out already holds python ints, and
+            # the list path through ngram_propose is tick-critical
+            hist = np.asarray(req.prompt).ravel().tolist() + \
+                list(req.tokens_out)
+            d = ngram_propose(hist, k=lim, ngram=self.spec_ngram)
+            if d.size:
+                drafts[slot] = d
+        if not drafts and not streamable:
+            return {}, 0
+        return drafts, max(w_cap, 0)
+
+    def _tick_verify(self, drafts: dict[int, np.ndarray], W: int,
+                     now) -> list[int]:
+        """One multi-position decode over a (slots, W) window.
+
+        Lane 0 is every slot's staged token (what the plain tick would have
+        fed); decode lanes 1.. carry that slot's draft, prefill lanes carry
+        upcoming prompt tokens.  After the device pass the engine accepts
+        the longest exact-match draft prefix per slot and REWINDS the pool
+        index vector to the authoritative host positions — unconsumed lanes
+        simply get re-covered by later writes, the same mechanism preemption
+        relies on.
+        """
+        B = self.slots
+        window = np.zeros((B, W), np.int32)
+        window[:, 0] = self._tokens_host
+        n_extra = np.zeros(B, np.int64)      # prompt tokens fed in lanes 1..
+        n_draft = np.zeros(B, np.int64)      # draft tokens staged in lanes 1..
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            if self.phase[slot] == PHASE_PREFILL:
+                prompt = self._prompt[slot]
+                m = min(W - 1, len(prompt) - int(self._fed[slot]))
+                if m > 0:
+                    lo = int(self._fed[slot])
+                    window[slot, 1:1 + m] = prompt[lo:lo + m]
+                    n_extra[slot] = m
+            elif slot in drafts:
+                d = drafts[slot][:W - 1]
+                window[slot, 1:1 + len(d)] = d
+                n_draft[slot] = len(d)
+        toks, logits, cache = self.core.verify(
+            self.params, jnp.asarray(window), self.pool.cache)
+        self.pool.cache = cache
+        toks_host = np.asarray(toks)                    # (slots, W) int32
+
+        done: list[int] = []
+        for slot in np.nonzero(self.active)[0]:
+            slot = int(slot)
+            req = self.slot_owner.get(slot)
+
+            def fetch_row(lane, slot=slot):
+                self.logits_pulls += 1
+                return np.asarray(logits[slot, lane], np.float32)
+
+            if self.phase[slot] == PHASE_PREFILL:
+                done.extend(self._advance_prefill_window(
+                    slot, req, int(n_extra[slot]), toks_host, fetch_row, now))
+            else:
+                done.extend(self._advance_decode_window(
+                    slot, req, window, int(n_draft[slot]), toks_host,
+                    fetch_row))
+        # authoritative rewind: host positions are truth, rejected (and
+        # padding) lanes' device writes fall past the new horizon.  The
+        # next-token device copy is NOT re-staged here — the next verify
+        # window reads _tokens_host directly, so the put is deferred until
+        # a fused/legacy tick (or admission) needs it.
+        self.pool.set_index(self.pos.astype(np.int32))
+        self._tokens_dirty = True
+        return done
+
+    def _advance_prefill_window(self, slot, req, m, toks_host, fetch_row,
+                                now) -> list[int]:
+        """A PREFILL slot consumed lanes 0..m: the staged prompt token plus
+        m more.  Publish every prompt block the window crossed, then either
+        stage the next prompt token or transition to DECODE off the last
+        consumed lane's logits."""
+        prompt = self._prompt[slot]
+        pos_old = int(self.pos[slot])
+        self.pos[slot] += 1 + m
+        self._fed[slot] += m
+        pos_new = int(self.pos[slot])
+        if self._paged:
+            bs = self.pool.block_size
+            q = (pos_old // bs + 1) * bs
+            while q <= min(pos_new, len(prompt)):
+                self.pool.register_block(slot, q // bs - 1, prompt,
+                                         extra=self._patch_key)
+                q += bs
+        if self._fed[slot] < len(prompt):
+            self._tokens_host[slot] = int(prompt[self._fed[slot]])
+            self._fed[slot] += 1
+        else:
+            self._tokens_host[slot] = self._emit(
+                slot, req, toks_host[slot, m], lambda s: fetch_row(m))
+            self.phase[slot] = PHASE_DECODE
+            if (isinstance(req, Request) and req.t_first_token is None
+                    and now is not None):
+                req.t_first_token = now
+        return []
+
+    def _advance_decode_window(self, slot, req, window, m, toks_host,
+                               fetch_row) -> list[int]:
+        """A DECODE slot with m draft lanes: accept the longest prefix where
+        the model's sampled token equals the draft, emit a+1 tokens.  Exact-
+        match acceptance keeps streams bit-identical for ANY sampling mode —
+        temperature rows sample each lane with their stateful host RNG (one
+        draw per emitted token, same as the plain path) and accept iff the
+        sample agrees with the draft."""
+        a = 0
+        for j in range(m + 1):
+            # one simulated plain tick per lane: decrement, maybe complete
+            # (the plain path's completing tick samples NOTHING — neither
+            # may this one, or temperature RNG streams would diverge)
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0:
+                self.stats.on_speculate(m, a)
+                self.active[slot] = False
+                return [slot]
+            tok = self._emit(slot, req, toks_host[slot, j],
+                             lambda s, j=j: fetch_row(j))
+            self._tokens_host[slot] = tok
+            if not (j < m and tok == int(window[slot, j + 1])):
+                break
+            a += 1
+        self.stats.on_speculate(m, a)
+        return []
 
     def release_slot(self, slot: int):
         """Free a finished slot: owner cleared here — a stale owner must
@@ -428,6 +717,9 @@ class ServingEngine:
             "queue_depth": int(self.scheduler.depth),
             "prefill_tokens": int(self.prefill_tokens),
             "prompt_tokens": int(self.prompt_tokens),
+            "spec_proposed": int(self.stats.total_spec_proposed),
+            "spec_accepted": int(self.stats.total_spec_accepted),
+            "logits_pulls": int(self.logits_pulls),
         }
         if self._paged:
             out["prefix_hits"] = int(self.pool.n_prefix_hits)

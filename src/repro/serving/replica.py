@@ -139,6 +139,10 @@ def _report_from_window(replica_id: int, tick: int, w: dict, *,
         ici_util=0.0,                     # stands in for chip signals
         mem_frac=w["slot_util"],
         queue_depth=w["queue_depth"],
+        # .get: pre-speculation windows (the empty-window tombstone, a
+        # worker running older code) simply report zero speculation
+        spec_proposed=int(w.get("spec_proposed", 0)),
+        spec_accepted=int(w.get("spec_accepted", 0)),
         transport_ms=transport_ms)
 
 
@@ -174,12 +178,14 @@ class InProcessReplica:
               core: EngineCore | None = None,
               replica_id: int = 0, pool: str = "dense",
               block_size: int | None = None,
-              num_blocks: int | None = None) -> "InProcessReplica":
+              num_blocks: int | None = None, spec_k: int = 0,
+              spec_ngram: int = 3) -> "InProcessReplica":
         return cls(ServingEngine(cfg, slots=slots, max_seq=max_seq,
                                  seed=seed, prefill_chunk=prefill_chunk,
                                  core=core, replica_id=replica_id,
                                  pool=pool, block_size=block_size,
-                                 num_blocks=num_blocks))
+                                 num_blocks=num_blocks, spec_k=spec_k,
+                                 spec_ngram=spec_ngram))
 
     # ------------------------------------------------------------- protocol
 
@@ -341,7 +347,8 @@ class ShardedReplica(InProcessReplica):
                  core: EngineCore | None = None, replica_id: int = 0,
                  decode_fn=None, pool: str = "dense",
                  block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, spec_k: int = 0,
+                 spec_ngram: int = 3):
         if mesh is None:
             import jax
 
@@ -354,11 +361,15 @@ class ShardedReplica(InProcessReplica):
         # paged allocator partitions track the mesh: slot s draws blocks
         # only from its own shard's contiguous block range, so the sharded
         # decode body's global→local block-id fold stays exact
+        # spec knobs are accepted but inert here: replacing engine.decode
+        # below routes every tick down the legacy bulk-pull path (the
+        # sharded step is compiled for (slots, 1) decode only)
         engine = ServingEngine(cfg, slots=slots, max_seq=max_seq, seed=seed,
                                prefill_chunk=prefill_chunk, core=core,
                                replica_id=replica_id, pool=pool,
                                block_size=block_size, num_blocks=num_blocks,
-                               partitions=n_dev)
+                               partitions=n_dev, spec_k=spec_k,
+                               spec_ngram=spec_ngram)
         engine.decode = (decode_fn if decode_fn is not None
                          else make_sharded_decode(cfg, mesh, slots, max_seq,
                                                   pool=pool,
@@ -404,7 +415,8 @@ class SocketReplica:
                  init_timeout_s: float = 600.0,
                  batch_submits: bool = True, pool: str = "dense",
                  block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, spec_k: int = 0,
+                 spec_ngram: int = 3):
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
@@ -441,7 +453,8 @@ class SocketReplica:
                    "max_seq": max_seq, "seed": seed,
                    "prefill_chunk": prefill_chunk,
                    "replica_id": replica_id, "pool": pool,
-                   "block_size": block_size, "num_blocks": num_blocks},
+                   "block_size": block_size, "num_blocks": num_blocks,
+                   "spec_k": spec_k, "spec_ngram": spec_ngram},
                   timeout=init_timeout_s)
 
     # ------------------------------------------------------------- plumbing
@@ -800,7 +813,8 @@ class ProcessReplica(SocketReplica):
                  init_timeout_s: float = 600.0,
                  batch_submits: bool = True, pool: str = "dense",
                  block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, spec_k: int = 0,
+                 spec_ngram: int = 3):
         parent_sock, child_sock = socket.socketpair()
         child_sock.set_inheritable(True)
         proc = subprocess.Popen(
@@ -814,7 +828,8 @@ class ProcessReplica(SocketReplica):
                          proc=proc, rpc_timeout_s=rpc_timeout_s,
                          init_timeout_s=init_timeout_s,
                          batch_submits=batch_submits, pool=pool,
-                         block_size=block_size, num_blocks=num_blocks)
+                         block_size=block_size, num_blocks=num_blocks,
+                         spec_k=spec_k, spec_ngram=spec_ngram)
 
 
 class TcpReplica(SocketReplica):
@@ -835,7 +850,8 @@ class TcpReplica(SocketReplica):
                  connect_timeout_s: float = 10.0,
                  batch_submits: bool = True, pool: str = "dense",
                  block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, spec_k: int = 0,
+                 spec_ngram: int = 3):
         proc = None
         if addr is None:
             addr, proc = spawn_worker()
@@ -851,7 +867,8 @@ class TcpReplica(SocketReplica):
                              rpc_timeout_s=rpc_timeout_s,
                              init_timeout_s=init_timeout_s,
                              batch_submits=batch_submits, pool=pool,
-                             block_size=block_size, num_blocks=num_blocks)
+                             block_size=block_size, num_blocks=num_blocks,
+                             spec_k=spec_k, spec_ngram=spec_ngram)
         except TransportError:
             # dial or handshake died before the stub owned the worker's
             # lifetime — do not leak a locally-spawned process
@@ -884,7 +901,8 @@ class DistributedPodReplica(TcpReplica):
                  connect_timeout_s: float = 10.0,
                  batch_submits: bool = True, pool: str = "dense",
                  block_size: int | None = None,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, spec_k: int = 0,
+                 spec_ngram: int = 3):
         from repro.serving.fleet import launch_pod
 
         self.pod_size = int(pod_size)
@@ -900,7 +918,8 @@ class DistributedPodReplica(TcpReplica):
                              init_timeout_s=init_timeout_s,
                              connect_timeout_s=connect_timeout_s,
                              batch_submits=batch_submits, pool=pool,
-                             block_size=block_size, num_blocks=num_blocks)
+                             block_size=block_size, num_blocks=num_blocks,
+                             spec_k=spec_k, spec_ngram=spec_ngram)
         except Exception:
             if self._pod_handle is not None:
                 self._pod_handle.close()

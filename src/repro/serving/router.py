@@ -115,7 +115,8 @@ class ReplicaRouter:
                       mesh=None, addrs=None, pod_size: int = 2,
                       batch_submits: bool = True, pool: str = "dense",
                       block_size: int | None = None,
-                      num_blocks: int | None = None) -> "ReplicaRouter":
+                      num_blocks: int | None = None, spec_k: int = 0,
+                      spec_ngram: int = 3) -> "ReplicaRouter":
         """Build the fleet for one of the five replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
@@ -144,12 +145,20 @@ class ReplicaRouter:
         (serving/slots.py); ``block_size``/``num_blocks`` tune the paged
         pool's geometry.  The layout is observationally invisible — token
         streams match the dense pool bit-for-bit on every topology.
+
+        ``spec_k``/``spec_ngram`` turn on speculative decoding inside each
+        replica's engine (serving/engine.py) — also observationally
+        invisible: accepted drafts are exact matches, so token streams are
+        bit-identical with speculation on or off.  The sharded topology
+        accepts the knobs but serves the plain path (its decode step is
+        compiled for single-position ticks).
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
                              f"(expected one of {TOPOLOGIES})")
         pool_kw = dict(pool=pool, block_size=block_size,
-                       num_blocks=num_blocks)
+                       num_blocks=num_blocks, spec_k=spec_k,
+                       spec_ngram=spec_ngram)
         if topology == "proc":
             from repro.serving.replica import ProcessReplica
 
@@ -182,7 +191,8 @@ class ReplicaRouter:
                 mesh = make_mesh((len(jax.devices()),), ("data",))
             core = EngineCore(cfg, max_seq, seed=seed)
             decode_fn = make_sharded_decode(cfg, mesh, slots, max_seq,
-                                            **pool_kw)
+                                            pool=pool, block_size=block_size,
+                                            num_blocks=num_blocks)
 
             def factory(replica_id: int):
                 return ShardedReplica(cfg, slots=slots, max_seq=max_seq,
@@ -423,6 +433,10 @@ class ReplicaRouter:
             "tokens_shared": sum(lt.get("tokens_shared", 0) for lt in ever),
             "prefill_tokens": sum(lt.get("prefill_tokens", 0) for lt in ever),
             "prompt_tokens": sum(lt.get("prompt_tokens", 0) for lt in ever),
+            # speculative decoding, fleet-wide: draft tokens proposed and
+            # accepted over every engine's lifetime (0 with speculation off)
+            "spec_proposed": sum(lt.get("spec_proposed", 0) for lt in ever),
+            "spec_accepted": sum(lt.get("spec_accepted", 0) for lt in ever),
         }
 
     def close(self):

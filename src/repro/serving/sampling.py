@@ -26,13 +26,22 @@ GREEDY = SamplingParams()
 
 
 def sample_token(logits: np.ndarray, params: SamplingParams,
-                 rng: np.random.Generator | None = None) -> int:
-    """logits: (V,) float — one slot's next-token distribution."""
+                 rng: np.random.Generator | None = None, *,
+                 position: int = 0) -> int:
+    """logits: (V,) float — one slot's next-token distribution.
+
+    Callers holding a stateful per-request generator (Request.sample) pass
+    ``rng`` and ignore ``position``.  Stateless callers must pass the
+    token position instead: the fallback stream is derived from
+    ``(seed, position)``, so successive positions draw fresh randomness —
+    seeding from ``seed`` alone would rebuild the identical generator every
+    call and emit the same token forever.
+    """
     logits = np.asarray(logits, np.float64)
     if params.temperature <= 0.0:
         return int(np.argmax(logits))
     if rng is None:
-        rng = np.random.default_rng(params.seed)
+        rng = np.random.default_rng((params.seed, position))
     scaled = logits / params.temperature
     if params.top_k > 0:
         k = min(params.top_k, scaled.size)

@@ -44,7 +44,8 @@ class Request:
         (sampling.seed, rid) so replays are per-request deterministic."""
         if self._rng is None:
             self._rng = np.random.default_rng((self.sampling.seed, self.rid))
-        tok = sample_token(logits, self.sampling, self._rng)
+        tok = sample_token(logits, self.sampling, self._rng,
+                           position=len(self.tokens_out))
         self.tokens_out.append(tok)
         return tok
 

@@ -258,7 +258,9 @@ class PodRuntime:
                                replica_id=int(msg.get("replica_id", 0)),
                                pool=pool, block_size=block_size,
                                num_blocks=num_blocks,
-                               partitions=int(mesh.devices.size))
+                               partitions=int(mesh.devices.size),
+                               spec_k=int(msg.get("spec_k", 0) or 0),
+                               spec_ngram=int(msg.get("spec_ngram", 3) or 3))
         engine.decode = make_sharded_decode(cfg, mesh, slots, max_seq,
                                             pool=pool, block_size=block_size,
                                             num_blocks=num_blocks)
@@ -296,7 +298,9 @@ def handle(engine, msg: dict, pod: PodRuntime | None = None):
                                replica_id=int(msg.get("replica_id", 0)),
                                pool=msg.get("pool") or "dense",
                                block_size=msg.get("block_size"),
-                               num_blocks=msg.get("num_blocks"))
+                               num_blocks=msg.get("num_blocks"),
+                               spec_k=int(msg.get("spec_k", 0) or 0),
+                               spec_ngram=int(msg.get("spec_ngram", 3) or 3))
         return {"ok": True, "engine": engine}
     if op == "status":
         # observer-safe: reads accumulators, drains nothing.  The lifetime

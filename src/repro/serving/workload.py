@@ -36,6 +36,30 @@ def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
     ]
 
 
+def repetitive_requests(spec: WorkloadSpec, n: int, vocab: int, *,
+                        period: int, rng: np.random.Generator,
+                        base_rid: int = 0,
+                        sampling: SamplingParams | None = None
+                        ) -> list[Request]:
+    """n requests whose prompt cycles one random ``period``-token phrase
+    (prompt-echo shape: extraction, templated boilerplate, code with
+    repeated idioms).  The suffix n-gram of such a prompt recurs earlier in
+    the history, so a prompt-lookup draft (serving/draft.py) keeps finding
+    continuations — the workload speculative decoding is built for, and the
+    one the tokens/s ablation measures acceptance on."""
+    assert 1 <= period <= spec.prompt_len, (period, spec.prompt_len)
+    out = []
+    for i in range(n):
+        phrase = rng.integers(3, vocab, size=period).astype(np.int32)
+        reps = -(-spec.prompt_len // period)
+        out.append(Request(
+            rid=base_rid + i,
+            prompt=np.tile(phrase, reps)[:spec.prompt_len],
+            gen_len=spec.gen_len,
+            sampling=SamplingParams() if sampling is None else sampling))
+    return out
+
+
 def shared_prefix_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                            prefix_len: int, rng: np.random.Generator,
                            base_rid: int = 0,

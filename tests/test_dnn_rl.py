@@ -105,7 +105,8 @@ def test_stream_builder_window_and_padding():
     assert s["deploy"].shape == (1, 12)
     for _ in range(20):
         sb.push({k: 1.0 for k in RESOURCE_KEYS + PERF_KEYS})
-    assert sb.streams(np.zeros(12, np.float32))["resource"].shape == (1, 8, 6)
+    assert sb.streams(np.zeros(12, np.float32))["resource"].shape == \
+        (1, 8, len(RESOURCE_KEYS))
 
 
 def test_deploy_vector_one_hot_family():
