@@ -532,6 +532,125 @@ def run_learned_policy(smoke: bool = True, seed: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# heterogeneous fleet + SLO tiers (profile-aware vs blind planner)
+# ---------------------------------------------------------------------------
+
+TIER_SCALES = {
+    "smoke": dict(ticks=10, max_replicas=3, reserved=1, batch_frac=0.4),
+    "full": dict(ticks=16, max_replicas=4, reserved=2, batch_frac=0.4),
+}
+TIER_SLO_MS = 2000.0
+
+
+def _tier_arm(aware: bool, *, ticks, max_replicas, reserved, batch_frac,
+              seed: int = 0):
+    """One mixed-tier calm→spike→calm run.  ``aware`` runs the heterogeneous
+    fleet (FleetPlan: ``reserved`` on-demand ids, the rest spot) with the
+    profile-aware planner AND scripted preemptions of the highest-id spot
+    replica during the spike; blind runs the same workload on a flat
+    all-on-demand fleet (no profiles, no preemptions).  After the run the
+    batch gate is released and the fleet drained, so "absorbs churn" is
+    measured as every submitted request actually completing."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.core.dnn.traces import TraceRecorder
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+    from repro.sim.serving import WorkloadSpec
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    lc = dataclasses.replace(
+        LoopConfig(), max_replicas=max_replicas, batch_frac=batch_frac,
+        slo_ms=TIER_SLO_MS, reserved_replicas=reserved if aware else 0)
+    # short requests keep the base service time well under the SLO, so the
+    # interactive bar measures tier protection, not raw model speed
+    spec = WorkloadSpec(prompt_len=8, gen_len=4)
+    lo, hi = ticks * 2 // 7, ticks * 9 // 14   # default_profile's spike
+    preempt_at = set(range(lo + 1, hi, 2)) if aware else set()
+
+    def chaos(tick, router, collector):
+        # spot reclaim, scripted: the highest-id preemptible replica
+        # vanishes mid-spike (no replacement — that's the scaler's job)
+        if tick not in preempt_at:
+            return
+        spot = sorted(r.replica_id for r in router.serving_replicas
+                      if router.profile(r.replica_id).preemptible)
+        if spot:
+            router.preempt(spot[-1])
+
+    rec = TraceRecorder()
+    router, logs = run_closed_loop(cfg, autoscale=True, ticks=ticks,
+                                   seed=seed, lc=lc, spec=spec,
+                                   recorder=rec, chaos_hook=chaos)
+    try:
+        total = sum(t.arrivals for t in logs)
+        drained = sum(t.served for t in logs)
+        now = ticks * lc.steps_per_tick * lc.tick_s
+        router.gate_batch(False)             # release: let batch finish
+        steps = 0
+        while drained < total and steps < 2000:
+            now += lc.tick_s
+            drained += len(router.step(now))
+            steps += 1
+        m = router.metrics()
+    finally:
+        router.close()
+    w = [(r["latency_p95_interactive"], r["arrivals"]) for r in rec.records
+         if r["latency_p95_interactive"] > 0.0]
+    tw_p95_i = (sum(p * a for p, a in w) / max(sum(a for _, a in w), 1)
+                if w else 0.0)
+    return {
+        "tw_p95_interactive_ms": tw_p95_i,
+        "cost_total": float(sum(r["cost_per_tick"] for r in rec.records)),
+        "arrivals": int(total),
+        "completed": int(m["completed"]),
+        "completed_interactive": int(m["completed_interactive"]),
+        "completed_batch": int(m["completed_batch"]),
+        "preemptions": int(m["preemptions"]),
+        "tier_spills": int(m["tier_spills"]),
+        "gated_ticks": int(sum(1 for t in logs if t.batch_gated)),
+        "replica_ticks": int(sum(t.replicas for t in logs)),
+        "drain_steps": steps,
+    }
+
+
+def run_tiers(smoke: bool = True, seed: int = 0):
+    """SLO-tiered admission on a heterogeneous fleet, profile-aware vs
+    blind.  Acceptance bars (CI, BENCH_tiers.json): the aware arm keeps the
+    traffic-weighted interactive p95 inside the SLO while spot replicas are
+    being reclaimed under it; every submitted request (batch included)
+    still completes — the batch lane absorbs the churn; and the realized
+    fleet spend is strictly below the blind all-on-demand arm's."""
+    scale = TIER_SCALES["smoke" if smoke else "full"]
+    t0 = time.perf_counter()
+    aware = _tier_arm(True, seed=seed, **scale)
+    blind = _tier_arm(False, seed=seed, **scale)
+    wall = time.perf_counter() - t0
+    interactive_ok = aware["tw_p95_interactive_ms"] <= TIER_SLO_MS
+    absorbed = (aware["preemptions"] > 0
+                and aware["completed"] == aware["arrivals"])
+    cheaper = aware["cost_total"] < blind["cost_total"]
+    return {
+        "name": "tiered_fleet",
+        "interactive_slo_ok": bool(interactive_ok),
+        "churn_absorbed": bool(absorbed),
+        "aware_cheaper": bool(cheaper),
+        "derived": (f"aware vs blind: interactive tw-p95 "
+                    f"{aware['tw_p95_interactive_ms']:.0f}ms (SLO "
+                    f"{TIER_SLO_MS:.0f}ms) under "
+                    f"{aware['preemptions']} preemptions, "
+                    f"{aware['completed']}/{aware['arrivals']} completed "
+                    f"({aware['completed_batch']} batch), cost "
+                    f"{aware['cost_total']:.1f} vs {blind['cost_total']:.1f} "
+                    f"({aware['cost_total'] / max(blind['cost_total'], 1e-9):.0%}), "
+                    f"{aware['gated_ticks']} gated ticks, "
+                    f"wall {wall:.1f}s"),
+        "detail": {"aware": aware, "blind": blind, "slo_ms": TIER_SLO_MS,
+                   "scale": scale, "seed": seed, "wall_s": wall},
+    }
+
+
+# ---------------------------------------------------------------------------
 # decode-kernel ablation (pallas vs jnp reference data path)
 # ---------------------------------------------------------------------------
 
@@ -784,6 +903,11 @@ if __name__ == "__main__":
                          "HBM (either value runs BOTH variants — the flag "
                          "records which layout is under test; writes "
                          "BENCH_paged.json)")
+    ap.add_argument("--tiers", action="store_true",
+                    help="heterogeneous-fleet tier ablation: profile-aware "
+                         "planner + laned admission + scripted spot "
+                         "preemptions vs a blind flat fleet on the same "
+                         "seed (writes BENCH_tiers.json)")
     ap.add_argument("--learned", action="store_true",
                     help="learned-policy A/B: record a planner trace, "
                          "offline-train the allocator on it, redeploy it "
@@ -841,6 +965,21 @@ if __name__ == "__main__":
         if not res["detail"]["accounting_ok"]:
             raise SystemExit("pool ablation: prefill_tokens != "
                              "prompt_tokens - tokens_shared")
+    elif args.tiers:
+        res = run_tiers(smoke=args.smoke)
+        with open(args.out or "BENCH_tiers.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if not res["interactive_slo_ok"]:
+            raise SystemExit("tiered fleet: interactive tw-p95 blew the "
+                             "SLO despite the batch gate")
+        if not res["churn_absorbed"]:
+            raise SystemExit("tiered fleet: preemption churn was not "
+                             "absorbed (no preemptions fired, or submitted "
+                             "work was lost)")
+        if not res["aware_cheaper"]:
+            raise SystemExit("tiered fleet: the profile-aware plan should "
+                             "cost less than the blind all-on-demand fleet")
     elif args.learned:
         res = run_learned_policy(smoke=args.smoke)
         with open(args.out or "BENCH_learned_policy.json", "w") as f:

@@ -20,7 +20,11 @@
 # planner fleet trace, offline-train the allocator on it, redeploy it as
 # the hybrid scaler vs the pure planner under identical chaos; bars: no
 # worse on SLO-violation rate and slot utilization —
-# BENCH_learned_policy.json) — perf-trajectory artifacts the workflow
+# BENCH_learned_policy.json), and the heterogeneous-fleet tier ablation
+# (profile-aware planner + laned admission + scripted spot preemptions vs
+# a blind flat fleet; bars: interactive tw-p95 inside the SLO under
+# preemptions, every submitted request completes, aware spend below blind —
+# BENCH_tiers.json) — perf-trajectory artifacts the workflow
 # uploads — then the closed-loop serving smoke.  Mirrors .github/workflows/ci.yml so the same command
 # works locally.
 set -euo pipefail
@@ -39,4 +43,5 @@ python -m benchmarks.serving_latency --topology proc --smoke --out BENCH_serving
 python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_pod.json
 python -m benchmarks.serving_latency --pool paged --smoke --out BENCH_paged.json
 python -m benchmarks.serving_latency --learned --smoke --out BENCH_learned_policy.json
+python -m benchmarks.serving_latency --tiers --smoke --out BENCH_tiers.json
 python examples/serve_autoscale.py --smoke

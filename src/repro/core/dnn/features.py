@@ -17,7 +17,10 @@ RESOURCE_KEYS = ("flop_util", "hbm_util", "ici_util", "mem_frac",
 PERF_KEYS = ("latency_p50", "latency_p95", "throughput", "error_rate",
              "rps",
              # speculative-decode acceptance this window (0 with spec off)
-             "accept_rate")
+             "accept_rate",
+             # per-tier SLO pressure (0 on single-tier fleets): the DNN
+             # sees interactive-lane risk separately from batch queueing
+             "latency_p95_interactive", "latency_p95_batch")
 
 
 class RunningNorm:

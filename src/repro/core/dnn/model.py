@@ -31,7 +31,7 @@ from repro.nn import MLP, BatchNorm, Conv1D, GRU, Linear
 @dataclasses.dataclass(frozen=True)
 class DNNConfig:
     n_resource_features: int = 8    # must equal len(features.RESOURCE_KEYS)
-    n_perf_features: int = 6        # must equal len(features.PERF_KEYS)
+    n_perf_features: int = 8        # must equal len(features.PERF_KEYS)
     n_deploy_features: int = 12
     window: int = 32              # T: sliding-window length fed to the nets
     conv_channels: int = 32

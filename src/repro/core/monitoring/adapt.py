@@ -39,7 +39,7 @@ class AdaptiveOptimizer:
         self.window = eval_window
         self._records: list[dict] = []
         self._last_obj: float | None = None
-        self._knobs = ("horizon", "cooldown", "util_hi")
+        self._knobs = ("horizon", "cooldown", "util_hi", "util_lo")
         self._knob_idx = 0
         self._last_dir = {k: +1 for k in self._knobs}
 
@@ -73,8 +73,14 @@ class AdaptiveOptimizer:
             s.horizon = int(np.clip(s.horizon + direction, 1, 12))
         elif knob == "cooldown":
             s.cooldown = int(np.clip(s.cooldown + direction, 1, 12))
-        else:
+        elif knob == "util_hi":
             s.util_hi = float(np.clip(s.util_hi + 0.05 * direction, 0.6, 0.95))
+        else:
+            # the consolidation floor: live since the optimizer's key ranks
+            # feasible under-utilized fleets behind in-band ones — the knob
+            # stays strictly below util_hi so the band never inverts
+            s.util_lo = float(np.clip(s.util_lo + 0.05 * direction,
+                                      0.3, s.util_hi - 0.1))
         self._last_obj = obj
         return s
 

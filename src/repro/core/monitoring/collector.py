@@ -36,6 +36,10 @@ class ReplicaReport:
     # workers, hand-built test reports — keep constructing cleanly)
     spec_proposed: int = 0
     spec_accepted: int = 0
+    # the window's latency samples keyed by admission tier ("interactive" /
+    # "batch") — the per-tier SLO channels aggregate from these; None from
+    # report producers that predate tiers (single-tier fleets lose nothing)
+    lat_tiers: dict | None = None
 
 
 class MetricsCollector:
@@ -99,6 +103,7 @@ class MetricsCollector:
         run."""
         lat, reqs, errs = [], 0, 0
         spec_prop, spec_acc = 0, 0
+        lat_tiers: dict[str, list] = {"interactive": [], "batch": []}
         util = {"flop_util": [], "hbm_util": [], "ici_util": [], "mem_frac": []}
         qd, transport = [], []
         dead = []
@@ -117,6 +122,8 @@ class MetricsCollector:
                      if (last is None or rep.tick > last) and rep.tick <= tick]
             for rep in fresh:
                 lat.extend(rep.latency_ms_samples)
+                for t, samples in (rep.lat_tiers or {}).items():
+                    lat_tiers.setdefault(t, []).extend(samples)
                 reqs += rep.n_requests
                 errs += rep.n_errors
                 # EVENT channel, same exactly-once fold: speculation counts
@@ -151,6 +158,14 @@ class MetricsCollector:
             # acceptance this tick; a fleet with speculation off (or no
             # drafts found) reads 0.0, never NaN
             "accept_rate": spec_acc / max(spec_prop, 1),
+            # per-tier SLO channels: 0.0 when a tier completed nothing this
+            # tick (a single-tier fleet reads a flat 0 on the other lane)
+            "latency_p95_interactive": (
+                float(np.percentile(np.asarray(lat_tiers["interactive"]), 95))
+                if lat_tiers["interactive"] else 0.0),
+            "latency_p95_batch": (
+                float(np.percentile(np.asarray(lat_tiers["batch"]), 95))
+                if lat_tiers["batch"] else 0.0),
             "replicas_frac": n_replicas / max(max_replicas, 1),
             **{k: float(np.mean(v)) if v else 0.0 for k, v in util.items()},
         }

@@ -38,6 +38,11 @@ class ScalingConstraints:
     target_util: tuple[float, float] = (0.55, 0.85)
     cooldown_ticks: int = 3         # min ticks between scale-downs
     cost_per_replica: float = 1.0
+    # per-tier SLOs: the batch lane tolerates queueing the interactive one
+    # must not; the gate trips when interactive p95 crosses this fraction
+    # of its SLO (and releases with hysteresis — see batch_gate_decision)
+    slo_batch_ms: float = 2000.0
+    batch_gate_frac: float = 0.9
     # replica-fabric transport latency below this fraction of the SLO is
     # ignored (deadband): loopback-socket noise must not flip a knife-edge
     # feasibility test, but a genuinely remote fleet's round-trip cost
@@ -56,10 +61,17 @@ class ScalingDecision:
 
 
 class ScalingOptimizer:
-    """Constrained optimizer: min cost s.t. predicted latency ≤ SLO."""
+    """Constrained optimizer: min cost s.t. predicted latency ≤ SLO.
 
-    def __init__(self, perf_model: PerfModel):
+    ``cost_fn(replicas) -> cost`` replaces the flat per-replica price when
+    the fleet is heterogeneous (serving/profiles.py FleetPlan.cost_of:
+    reserved capacity at the on-demand rate, headroom past it at the spot
+    rate) — the profile-aware planner buys batch headroom cheap."""
+
+    def __init__(self, perf_model: PerfModel,
+                 cost_fn: Callable[[int], float] | None = None):
         self.perf_model = perf_model
+        self.cost_fn = cost_fn
 
     def optimize(self, *, current_load: dict, predicted_load: float,
                  efficiency: float, constraints: ScalingConstraints,
@@ -77,8 +89,14 @@ class ScalingOptimizer:
         for r in range(lo, hi + 1):
             lat, util = self.perf_model(r, predicted_load)
             feasible = lat <= budget_ms and util <= c.target_util[1]
-            cost = r * c.cost_per_replica
-            key = (not feasible, cost, lat)
+            cost = (self.cost_fn(r) if self.cost_fn is not None
+                    else r * c.cost_per_replica)
+            # the LOW water mark ranks ahead of cost: of the feasible
+            # points, those keeping the fleet inside the utilization band
+            # beat under-utilized ones — without this term the adaptation
+            # engine's util_lo knob never influences a decision and a flat
+            # cost curve lets the latency tie-break overprovision forever
+            key = (not feasible, util < c.target_util[0], cost, lat)
             if best is None or key < best[0]:
                 best = (key, r, lat, util, feasible)
         _, r, lat, util, feasible = best
@@ -130,14 +148,16 @@ class EvictionPolicy:
 
 class DynamicScaler:
     def __init__(self, forecaster, perf_model: PerfModel, *,
-                 horizon_ticks: int = 3, down_sustain: int = 3):
+                 horizon_ticks: int = 3, down_sustain: int = 3,
+                 cost_fn: Callable[[int], float] | None = None):
         self.forecaster = forecaster
-        self.optimizer = ScalingOptimizer(perf_model)
+        self.optimizer = ScalingOptimizer(perf_model, cost_fn=cost_fn)
         self.horizon = horizon_ticks
         self.down_sustain = down_sustain
         self._last_downscale = -10**9
         self._below_count = 0
         self._tick = 0
+        self._batch_gated = False
 
     # --- the paper's three analysis phases -------------------------------
 
@@ -162,6 +182,19 @@ class DynamicScaler:
         chans = [metrics.get(k, 0.0)
                  for k in ("flop_util", "hbm_util", "ici_util", "mem_frac")]
         return float(np.mean([c for c in chans if c is not None]))
+
+    def batch_gate_decision(self, metrics: dict,
+                            constraints: ScalingConstraints) -> bool:
+        """Should the fleet's batch lane be gated this tick?  Trips when
+        the interactive lane's p95 (the collector's per-tier channel)
+        crosses ``batch_gate_frac`` of its SLO; releases with 2:1
+        hysteresis so a knife-edge tick doesn't flap the gate — batch
+        requests stay queued while gated, they are never dropped."""
+        p95_i = float(metrics.get("latency_p95_interactive", 0.0))
+        trip = constraints.batch_gate_frac * constraints.slo_ms
+        self._batch_gated = (p95_i > 0.5 * trip if self._batch_gated
+                             else p95_i > trip)
+        return self._batch_gated
 
     # --- the decision step (paper pseudocode shape) ----------------------
 

@@ -26,9 +26,14 @@ Layout:
                   multi-process pods for demos/CI
   chaos.py      — fault-injection harness (FaultyConnection, ChaosProxy)
                   pinning that faults surface typed, never as hangs
-  router.py     — N replicas behind the protocol: least-loaded routing,
+  profiles.py   — ReplicaProfile / FleetPlan: heterogeneous capacity
+                  (cost per tick, relative speed, preemptible) and the
+                  profile-aware planner's marginal-cost model
+  router.py     — N replicas behind the protocol: least-loaded routing
+                  (speed/cost-normalized when profiled, tier placement),
                   scale up/down mid-run (evacuate + requeue), straggler
-                  eviction, ReplicaReport stream for core/monitoring
+                  eviction + preemption absorption, ReplicaReport stream
+                  for core/monitoring
   workload.py   — synthetic request generation (shares sim.WorkloadSpec)
   closed_loop.py— the full control loop (router + collector + allocator),
                   shared by examples/serve_autoscale.py and the serving
@@ -55,9 +60,10 @@ from repro.serving.replica import (
     SocketReplica,
     TcpReplica,
 )
+from repro.serving.profiles import FleetPlan, ReplicaProfile
 from repro.serving.router import ReplicaRouter, TOPOLOGIES
 from repro.serving.sampling import SamplingParams, sample_token
-from repro.serving.scheduler import FCFSScheduler, Request
+from repro.serving.scheduler import FCFSScheduler, Request, TIERS
 from repro.serving.slots import (
     PagedSlotPool, SlotPool, make_pool, paged_cache_spec, write_slot,
 )
@@ -71,6 +77,7 @@ from repro.serving.transport import (
 )
 from repro.serving.workload import (
     poisson_arrival_times, shared_prefix_requests, synthetic_requests,
+    tiered_requests,
 )
 
 __all__ = [
@@ -82,8 +89,10 @@ __all__ = [
     "Connection", "Listener", "TransportError", "WorkerBusyError",
     "dial", "parse_addr",
     "SamplingParams", "sample_token",
-    "FCFSScheduler", "Request",
+    "FCFSScheduler", "Request", "TIERS",
+    "FleetPlan", "ReplicaProfile",
     "SlotPool", "PagedSlotPool", "make_pool", "paged_cache_spec",
     "write_slot",
     "poisson_arrival_times", "shared_prefix_requests", "synthetic_requests",
+    "tiered_requests",
 ]

@@ -19,6 +19,7 @@ router.scale_to.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import numpy as np
 
@@ -63,6 +64,19 @@ class LoopConfig:
     learn: bool = True           # feed each tick's realized outcome back
     #                              into alloc.learn (reward credited to the
     #                              previous tick's action) when autoscaling
+    batch_frac: float = 0.0      # fraction of arrivals on the batch tier
+    #                              (0 keeps the workload single-tier and the
+    #                              run bit-identical to the pre-tier loop)
+    slo_batch_ms: float = 8000.0    # batch lane's (lenient) latency SLO
+    batch_gate_frac: float = 0.9    # gate batch at this frac of the
+    #                              interactive SLO (scaler hysteresis)
+    reserved_replicas: int = 0   # >0 → heterogeneous fleet: this many
+    #                              on-demand replica ids, every id past
+    #                              them preemptible (FleetPlan)
+    cost_on_demand: float = 1.0  # cost/tick of a reserved replica
+    cost_preemptible: float = 0.35  # cost/tick of a spot replica
+    rps_window: int = 8          # ticks of rps history published to the
+    #                              scaler's burstiness analysis
 
 
 @dataclasses.dataclass
@@ -85,6 +99,10 @@ class TickLog:
     #                             lifetime counters, pod rank/mode)
     learn_loss: float | None = None   # DQN train-step loss, when the live
     #                             learning loop took one this tick
+    batch_gated: bool = False    # batch lane gated during this tick's
+    #                             scaling window (SLO protection)
+    cost_per_tick: float = 0.0   # realized fleet spend for the window
+    preemptions: int = 0         # lifetime spot reclaims absorbed so far
 
 
 def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
@@ -117,13 +135,19 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
     worker kills) see exactly what the control plane sees.
     ``prime_allocator(alloc)`` runs once before the first tick — the hook
     offline-trained policies use to warm-start the live allocator."""
+    plan = None
+    if lc.reserved_replicas > 0:
+        from repro.serving.profiles import FleetPlan
+        plan = FleetPlan(reserved=lc.reserved_replicas,
+                         cost_on_demand=lc.cost_on_demand,
+                         cost_preemptible=lc.cost_preemptible)
     router = ReplicaRouter.from_topology(
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas, addrs=list(lc.addrs),
         pod_size=lc.pod_size, batch_submits=lc.batch_submits,
         pool=lc.pool, block_size=lc.block_size, num_blocks=lc.num_blocks,
-        spec_k=lc.spec_k, spec_ngram=lc.spec_ngram)
+        spec_k=lc.spec_k, spec_ngram=lc.spec_ngram, profile_fn=plan)
     rng = np.random.default_rng(seed)
     evictor = (EvictionPolicy(k_windows=lc.evict_after)
                if lc.evict_after > 0 else None)
@@ -150,16 +174,26 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
     alloc = PredictiveAllocator(
         perf_model,
         ScalingConstraints(min_replicas=1, max_replicas=lc.max_replicas,
-                           slo_ms=lc.slo_ms),
+                           slo_ms=lc.slo_ms, slo_batch_ms=lc.slo_batch_ms,
+                           batch_gate_frac=lc.batch_gate_frac),
         deploy_vector(model_params_b=cfg.n_params() / 1e9, family=cfg.family,
                       mesh_model=1, mesh_data=1, region_idx=0,
                       slo_ms=lc.slo_ms, cost_weight=0.5),
         cfg=AllocatorConfig(mode=lc.alloc_mode), seed=seed)
+    if plan is not None:
+        # the profile-AWARE planner: scale-up past the reserved pool is
+        # priced at the spot rate, so batch headroom is bought cheap —
+        # exactly the aware-vs-blind delta BENCH_tiers measures
+        alloc.scaler.optimizer.cost_fn = plan.cost_of
     if prime_allocator is not None:
         prime_allocator(alloc)
 
     now, next_rid = 0.0, 0
     logs: list[TickLog] = []
+    # rolling multi-tick rps history: publishing a single-sample window
+    # made analyze_current_load's std/peak degenerate (std == 0, peak ==
+    # mean), so burstiness never reached the planner
+    rps_hist: deque[float] = deque(maxlen=max(int(lc.rps_window), 1))
     tick_span = lc.steps_per_tick * lc.tick_s
     try:
         if lc.observe_addrs:
@@ -176,13 +210,23 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             reqs = synthetic_requests(spec, n, cfg.vocab, rng=rng,
                                       base_rid=next_rid)
             next_rid += n
-            arrivals = [(now + (i / max(n, 1)) * tick_span, r)
-                        for i, r in enumerate(reqs)]
+            if lc.batch_frac > 0.0:
+                # tier draw only when the workload is actually mixed: a
+                # single-tier run must consume the same rng stream as a
+                # pre-tier one (bit-identical logs on a fixed seed)
+                is_batch = rng.random(n) < lc.batch_frac
+                for r, b in zip(reqs, is_batch):
+                    if b:
+                        r.tier = "batch"
+            # deque: the old list.pop(0) drain was O(n²) per tick at high
+            # rps (every pop shifted the whole remaining tail)
+            arrivals = deque((now + (i / max(n, 1)) * tick_span, r)
+                             for i, r in enumerate(reqs))
             served = 0
             for _ in range(lc.steps_per_tick):
                 now += lc.tick_s
                 while arrivals and arrivals[0][0] <= now:
-                    t_arr, r = arrivals.pop(0)
+                    t_arr, r = arrivals.popleft()
                     router.submit(r, now=t_arr)
                 done = router.step(now)
                 served += len(done)
@@ -213,14 +257,24 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             # consume a rate, and the raw per-tick count only coincides with
             # it when steps_per_tick * tick_s == 1.0 (the default shape)
             rec["rps"] = float(n) / tick_span
-            rec["rps_window"] = [rec["rps"]]
+            rps_hist.append(rec["rps"])
+            rec["rps_window"] = list(rps_hist)
             anomalies = anomaly.update(tick, {"rps": rec["rps"]})
             reason = "static"
             learn_loss = None
             # realized spend for the window that produced these metrics: the
-            # fleet size that served it, priced per constraints
-            cost_per_tick = (replicas_before
+            # fleet that served it — profile rates when heterogeneous, the
+            # flat constraints price otherwise
+            cost_per_tick = (router.cost_per_tick if plan is not None
+                             else replicas_before
                              * alloc.constraints.cost_per_replica)
+            gated = router.batch_gated
+            if lc.batch_frac > 0.0:
+                # interactive SLO protection runs even without autoscaling:
+                # the gate is admission policy, not capacity actuation
+                gated = alloc.scaler.batch_gate_decision(
+                    rec, alloc.constraints)
+                router.gate_batch(gated)
             if autoscale:
                 alloc.observe(rec)
                 alloc.replicas = router.replica_count
@@ -244,6 +298,12 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     "reason": reason,
                     "cost_per_tick": float(cost_per_tick),
                     "anomaly": float(bool(anomalies)),
+                    # heterogeneous-fleet economics this tick (flat-fleet
+                    # runs read cost at the constraints price, zero churn)
+                    "fleet_cost_per_tick": float(fleet["fleet_cost_per_tick"]),
+                    "preemptions": float(fleet["preemptions"]),
+                    "tier_spills": float(fleet["tier_spills"]),
+                    "batch_gated": float(gated),
                     # paged-pool cache efficiency, fleet-wide (0 for dense)
                     "prefix_hits": float(fleet["prefix_hits"]),
                     "tokens_shared": float(fleet["tokens_shared"]),
@@ -268,7 +328,9 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                 replica_util=[(rep.replica_id, rep.flop_util) for rep in reports],
                 replicas=router.replica_count, reason=reason, anomaly=bool(
                     anomalies), evicted=evicted, observed=observed,
-                learn_loss=learn_loss))
+                learn_loss=learn_loss, batch_gated=gated,
+                cost_per_tick=float(cost_per_tick),
+                preemptions=router.preemptions))
     except BaseException:
         # the caller never receives the router handle it is documented to
         # close — reap the fleet (spawned workers/pods included) here

@@ -91,12 +91,14 @@ class EngineStats:
         self.total_busy = 0.0
         self.total_spec_proposed = 0
         self.total_spec_accepted = 0
+        self.completed_by_tier: dict[str, int] = {}
         self.latencies_ms = deque(maxlen=4096)
         self.queue_depth = 0
         self._reset_window()
 
     def _reset_window(self):
         self._win_lat: list[float] = []
+        self._win_lat_tiers: dict[str, list[float]] = {}
         self._win_completed = 0
         self._win_tokens = 0
         self._win_ticks = 0
@@ -112,11 +114,14 @@ class EngineStats:
         self.queue_depth = queue_depth
 
     def on_complete(self, request: Request):
+        tier = getattr(request, "tier", "interactive")
         lat = request.latency_s
         if lat is not None:
             self.latencies_ms.append(lat * 1e3)
             self._win_lat.append(lat * 1e3)
+            self._win_lat_tiers.setdefault(tier, []).append(lat * 1e3)
         self.total_completed += 1
+        self.completed_by_tier[tier] = self.completed_by_tier.get(tier, 0) + 1
         self.total_tokens += len(request.tokens_out)
         self._win_completed += 1
         self._win_tokens += len(request.tokens_out)
@@ -135,6 +140,10 @@ class EngineStats:
         """Window metrics since the last drain (one ReplicaReport's worth)."""
         out = {
             "latency_ms_samples": list(self._win_lat),
+            # the same samples keyed by tier — the collector's per-tier SLO
+            # channels (latency_p95_interactive / _batch) fold these
+            "lat_tiers": {t: list(v)
+                          for t, v in self._win_lat_tiers.items() if v},
             "n_requests": self._win_completed,
             "n_tokens": self._win_tokens,
             "slot_util": self._win_busy / max(self._win_ticks, 1),
@@ -713,6 +722,13 @@ class ServingEngine:
             "latencies_ms": [float(v) for v in self.stats.latencies_ms],
             "total_tokens": int(self.stats.total_tokens),
             "total_completed": int(self.stats.total_completed),
+            "completed_interactive": int(
+                self.stats.completed_by_tier.get("interactive", 0)),
+            "completed_batch": int(
+                self.stats.completed_by_tier.get("batch", 0)),
+            # served ticks: the weight the router's fleet-mean utilization
+            # uses (a two-tick replacement must not weigh like a survivor)
+            "total_ticks": int(self.stats.total_ticks),
             "slot_utilization": float(self.stats.slot_utilization),
             "queue_depth": int(self.scheduler.depth),
             "prefill_tokens": int(self.prefill_tokens),

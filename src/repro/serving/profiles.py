@@ -1,0 +1,86 @@
+"""Replica profiles: what makes one replica NOT interchangeable with another.
+
+The fleet's capacity is heterogeneous on two axes the router must see:
+
+* **economics** — an on-demand replica and a preemptible (spot) one differ
+  in cost per tick, and the provider may reclaim the spot one without
+  notice mid-decode;
+* **capability** — replicas on different hardware serve different relative
+  tokens/s, so "least loaded" is wrong unless load is normalized by speed.
+
+``ReplicaProfile`` is the router's static prior for one replica: its cost
+per tick, its relative speed (1.0 = the fleet baseline), and whether the
+capacity is volatile.  In simulation the prior is seeded from the roofline
+DB's ``ServiceProfile`` (``ReplicaProfile.from_service``); live, the router
+refines the speed axis from each replica's measured lifetime tokens/tick —
+the profile is a prior, the measurement wins once there is enough of it.
+
+``FleetPlan`` is the deployment shape the operator actually buys: the first
+``reserved`` replica ids are on-demand (stable, expensive), every id past
+them is preemptible (cheap, volatile).  It doubles as the planner's cost
+model — ``cost_of(n)`` is what the profile-aware ScalingOptimizer minimizes
+instead of a flat per-replica price, which is exactly the difference the
+BENCH_tiers benchmark measures between the aware and blind arms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaProfile:
+    """Static prior for one replica's economics and capability."""
+    cost_per_tick: float = 1.0
+    # relative throughput vs the fleet baseline (2.0 = twice the tokens/s);
+    # routing divides load by it, so a fast replica looks emptier
+    speed: float = 1.0
+    # volatile capacity: may be reclaimed without notice.  The router never
+    # places interactive-tier work here and does not replace it on loss —
+    # the scaler re-provisions when the forecast still needs the capacity
+    preemptible: bool = False
+
+    @classmethod
+    def from_service(cls, service, baseline=None, *,
+                     cost_per_tick: float = 1.0,
+                     preemptible: bool = False) -> "ReplicaProfile":
+        """Seed a profile from a sim ServiceProfile (repro.sim.serving):
+        speed is the service's tokens/s relative to ``baseline`` (another
+        ServiceProfile, default: itself → 1.0)."""
+        base = baseline if baseline is not None else service
+        return cls(cost_per_tick=cost_per_tick,
+                   speed=service.relative_speed(base),
+                   preemptible=preemptible)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPlan:
+    """The capacity mix the operator buys: ``reserved`` on-demand replicas
+    (ids 0..reserved-1), preemptible ones past that.  Serves as the
+    router's profile_fn AND the optimizer's marginal-cost model."""
+    reserved: int = 1
+    cost_on_demand: float = 1.0
+    cost_preemptible: float = 0.35
+    speed_on_demand: float = 1.0
+    speed_preemptible: float = 1.0
+
+    def profile_for(self, replica_id: int) -> ReplicaProfile:
+        if replica_id < self.reserved:
+            return ReplicaProfile(cost_per_tick=self.cost_on_demand,
+                                  speed=self.speed_on_demand,
+                                  preemptible=False)
+        return ReplicaProfile(cost_per_tick=self.cost_preemptible,
+                              speed=self.speed_preemptible,
+                              preemptible=True)
+
+    # FleetPlan IS callable as a router profile_fn
+    __call__ = profile_for
+
+    def cost_of(self, n: int) -> float:
+        """Cost per tick of running ``n`` replicas under this plan — the
+        profile-aware ScalingOptimizer's cost term.  Scale-up past the
+        reserved pool is priced at the SPOT rate: cheap volatile capacity
+        is exactly what batch headroom should be bought with."""
+        n = max(int(n), 0)
+        on_demand = min(n, self.reserved)
+        return (on_demand * self.cost_on_demand
+                + (n - on_demand) * self.cost_preemptible)

@@ -77,7 +77,7 @@ import numpy as np
 from repro.core.monitoring.collector import ReplicaReport
 from repro.serving.engine import EngineCore, ServingEngine, validate_request
 from repro.serving.fleet import spawn_worker, worker_env
-from repro.serving.scheduler import Request
+from repro.serving.scheduler import Request, validate_tier
 from repro.serving.transport import (
     Connection,
     TransportError,
@@ -108,6 +108,9 @@ class Replica(Protocol):
     def lifetime(self) -> dict: ...
     def evacuate(self) -> list[Request]: ...
     def resume(self) -> None: ...
+    # control-plane lane gate: while on, the engine admits no batch-tier
+    # work (queued batch requests stay queued) — interactive SLO protection
+    def gate_batch(self, on: bool) -> None: ...
     def lost_requests(self) -> list[Request]: ...
     def close(self) -> None: ...
 
@@ -143,6 +146,8 @@ def _report_from_window(replica_id: int, tick: int, w: dict, *,
         # worker running older code) simply report zero speculation
         spec_proposed=int(w.get("spec_proposed", 0)),
         spec_accepted=int(w.get("spec_accepted", 0)),
+        # .get → None: pre-tier windows feed the untiered channels only
+        lat_tiers=w.get("lat_tiers") or None,
         transport_ms=transport_ms)
 
 
@@ -223,6 +228,9 @@ class InProcessReplica:
 
     def resume(self):
         self.engine.draining = False
+
+    def gate_batch(self, on: bool):
+        self.engine.scheduler.batch_gated = bool(on)
 
     def lost_requests(self) -> list[Request]:
         return []                      # an in-process replica cannot crash
@@ -438,9 +446,12 @@ class SocketReplica:
         self._late: list[Request] = []    # completions drained out-of-band
         self._rpc_timeout_s = rpc_timeout_s
         self._init_timeout_s = init_timeout_s
+        self._batch_gated = False
+        self._gate_dirty = False          # gate change awaiting a step msg
         self._lifetime_cache = {
             "latencies_ms": [], "total_tokens": 0, "total_completed": 0,
-            "slot_utilization": 0.0, "queue_depth": 0}
+            "completed_interactive": 0, "completed_batch": 0,
+            "total_ticks": 0, "slot_utilization": 0.0, "queue_depth": 0}
         self._conn = conn
         self._proc = proc
         # two-step handshake: claim the worker's single mutating session
@@ -560,6 +571,7 @@ class SocketReplica:
             # the submit rides the NEXT step message (one RPC per round,
             # not per request); the engine's own validation runs locally so
             # a malformed request still bounces at the submit call
+            validate_tier(request.tier)
             validate_request(self.cfg, self.max_seq,
                              np.asarray(request.prompt).reshape(-1),
                              frames=request.frames)
@@ -589,6 +601,11 @@ class SocketReplica:
         if self.failed:
             return
         msg: dict = {"op": "step", "now": now}
+        if self._gate_dirty:
+            # the gate rides the step message like batched submits do: one
+            # RPC per round, applied worker-side before this round admits
+            msg["batch_gate"] = self._batch_gated
+            self._gate_dirty = False
         if self._outbox:
             msg["submits"], self._outbox = self._outbox, []
         # jax.jit is lazy: the worker's prefill/decode COMPILE inside its
@@ -658,8 +675,11 @@ class SocketReplica:
         fleet metrics; the authoritative 'lifetime' RPC simply replaces the
         mirror when the worker is reachable."""
         lc = self._lifetime_cache
+        lc["total_ticks"] = lc.get("total_ticks", 0) + 1
         for r in completed:
             lc["total_completed"] += 1
+            key = f"completed_{getattr(r, 'tier', 'interactive')}"
+            lc[key] = lc.get(key, 0) + 1
             lc["total_tokens"] += len(r.tokens_out)
             if r.latency_s is not None:
                 lc["latencies_ms"].append(r.latency_s * 1e3)
@@ -727,6 +747,12 @@ class SocketReplica:
                 self._rpc({"op": "resume"})
             except TransportError:
                 pass
+
+    def gate_batch(self, on: bool):
+        on = bool(on)
+        if on != self._batch_gated:
+            self._batch_gated = on
+            self._gate_dirty = True
 
     def lost_requests(self) -> list[Request]:
         self._outbox.clear()           # their originals are in _requests too

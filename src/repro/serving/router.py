@@ -28,6 +28,25 @@ Failure semantics: a replica whose transport dies mid-step is reaped on the
 next ``step`` — its lost requests are rewound and requeued, a replacement
 is built to restore the actuated replica count, and its final ``n_errors``
 report has already marked it a straggler in the collector.
+
+Heterogeneous fleets (``profile_fn``): when the operator supplies a
+``profile_fn(replica_id) -> ReplicaProfile`` (serving/profiles.py), replicas
+stop being interchangeable —
+
+* routing normalizes load by each replica's speed (prior from the profile,
+  replaced by the MEASURED lifetime tokens/tick once a replica has served
+  enough rounds) and tie-breaks toward cheaper capacity;
+* interactive-tier requests are never placed on ``preemptible`` replicas
+  while any stable one serves (``tier_spills`` counts forced fallbacks);
+* a failed preemptible replica is NOT replaced on reap (``preempt()`` is
+  the chaos/provider-reclaim injection point) — batch absorbs the churn and
+  the scaler re-provisions when the forecast still wants the capacity;
+* ``metrics()`` reports the fleet's realized cost per tick, and downscale
+  victims are highest-id first, which under a FleetPlan sheds spot
+  capacity before reserved.
+
+Without a profile_fn every profile is the default (equal speed/cost, not
+preemptible) and routing is bit-identical to the legacy least-loaded key.
 """
 from __future__ import annotations
 
@@ -35,11 +54,16 @@ import numpy as np
 
 from repro.core.monitoring.collector import ReplicaReport
 from repro.serving.engine import EngineCore
+from repro.serving.profiles import ReplicaProfile
 from repro.serving.replica import (
     InProcessReplica, Replica, ServingEngine, empty_report,
 )
 from repro.serving.scheduler import Request
 from repro.serving.transport import TransportError
+
+# measured speed needs this many served rounds before it replaces the
+# profile's prior — a two-tick sample must not reroute the fleet
+MIN_SPEED_TICKS = 16
 
 TOPOLOGIES = ("inproc", "sharded", "proc", "tcp", "pod")
 
@@ -77,11 +101,25 @@ def _coerce(obj) -> Replica:
 
 class ReplicaRouter:
     def __init__(self, replica_factory, *, n_replicas: int = 1,
-                 max_replicas: int = 8):
+                 max_replicas: int = 8, profile_fn=None):
         """replica_factory(replica_id) -> Replica (or a bare ServingEngine,
-        which is wrapped in-process for backward compatibility)."""
+        which is wrapped in-process for backward compatibility).
+
+        ``profile_fn(replica_id) -> ReplicaProfile`` declares the fleet
+        heterogeneous (see module docstring); None keeps every replica
+        interchangeable and routing bit-identical to the legacy key."""
         self._factory = replica_factory
         self.max_replicas = max_replicas
+        self._profile_fn = profile_fn
+        self._profiled = profile_fn is not None
+        self._profiles: dict[int, ReplicaProfile] = {}
+        # router-side speed measurement: completions and served rounds per
+        # replica id (transport-free — no lifetime RPC on the hot path)
+        self._tok_served: dict[int, int] = {}
+        self._ticks_served: dict[int, int] = {}
+        self.preemptions = 0          # preemptible replicas lost/reclaimed
+        self.tier_spills = 0          # interactive forced onto volatile cap
+        self._batch_gated = False
         self.replicas: list[Replica] = []
         self._parked: list[Replica] = []
         self._retired: list[Replica] = []     # failed, kept for accounting
@@ -116,7 +154,8 @@ class ReplicaRouter:
                       batch_submits: bool = True, pool: str = "dense",
                       block_size: int | None = None,
                       num_blocks: int | None = None, spec_k: int = 0,
-                      spec_ngram: int = 3) -> "ReplicaRouter":
+                      spec_ngram: int = 3,
+                      profile_fn=None) -> "ReplicaRouter":
         """Build the fleet for one of the five replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
@@ -152,6 +191,11 @@ class ReplicaRouter:
         bit-identical with speculation on or off.  The sharded topology
         accepts the knobs but serves the plain path (its decode step is
         compiled for single-position ticks).
+
+        ``profile_fn(replica_id) -> ReplicaProfile`` (e.g. a
+        serving/profiles.py FleetPlan) declares the fleet heterogeneous —
+        cost/speed-aware routing, tier placement, preemptible semantics;
+        see the module docstring.
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
@@ -209,7 +253,8 @@ class ReplicaRouter:
                     prefill_chunk=prefill_chunk, core=core,
                     replica_id=replica_id, **pool_kw)
 
-        return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas)
+        return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas,
+                   profile_fn=profile_fn)
 
     # ------------------------------------------------------------- topology
 
@@ -220,7 +265,34 @@ class ReplicaRouter:
         else:
             rep = _coerce(self._factory(self._next_replica_id))
             self._next_replica_id += 1
+        rid = rep.replica_id
+        if rid not in self._profiles:
+            self._profiles[rid] = (self._profile_fn(rid) if self._profiled
+                                   else ReplicaProfile())
+        # a replica joining a gated fleet must not open a batch side door
+        if self._batch_gated:
+            rep.gate_batch(True)
         self.replicas.append(rep)
+
+    def profile(self, replica_id: int) -> ReplicaProfile:
+        return self._profiles.get(replica_id) or ReplicaProfile()
+
+    def effective_speed(self, replica_id: int) -> float:
+        """The speed the routing key divides load by: the profile's prior
+        until the replica has served MIN_SPEED_TICKS rounds, then its
+        measured tokens/tick relative to the fleet's measured mean — live
+        hardware truth replaces the operator's catalog number."""
+        prior = self.profile(replica_id).speed
+        ticks = self._ticks_served.get(replica_id, 0)
+        if ticks < MIN_SPEED_TICKS:
+            return prior
+        rates = [self._tok_served.get(rid, 0) / t
+                 for rid, t in self._ticks_served.items()
+                 if t >= MIN_SPEED_TICKS]
+        base = sum(rates) / len(rates) if rates else 0.0
+        if base <= 0.0:
+            return prior               # an idle fleet has measured nothing
+        return max(self._tok_served.get(replica_id, 0) / ticks / base, 1e-3)
 
     @property
     def serving_replicas(self) -> list[Replica]:
@@ -238,6 +310,9 @@ class ReplicaRouter:
             self._add_replica()
         extra = self.replica_count - n
         if extra > 0:
+            # highest id first: under a FleetPlan the ids past the reserved
+            # pool are the preemptible ones, so downscale sheds spot
+            # capacity before touching stable replicas
             victims = sorted(self.serving_replicas,
                              key=lambda r: -r.replica_id)[:extra]
             displaced: list[Request] = []
@@ -277,6 +352,8 @@ class ReplicaRouter:
         rep.close()
         self._retired.append(rep)
         if rep.failed:
+            if self.profile(replica_id).preemptible:
+                self.preemptions += 1      # provider reclaimed spot capacity
             self._dying.append((0, rep))   # crash report, then tombstone
         else:
             # healthy straggler: one clean tombstone prunes its collector
@@ -320,7 +397,26 @@ class ReplicaRouter:
                 for rep in failed:
                     self.evict(rep.replica_id, now=now)
                 continue
-            rep = min(candidates, key=lambda r: (r.load, r.replica_id))
+            if self._profiled:
+                # interactive work never rides volatile capacity while any
+                # stable replica serves; when the whole fleet is spot, the
+                # forced fallback is counted rather than refused
+                if getattr(request, "tier", "interactive") == "interactive":
+                    stable = [r for r in candidates
+                              if not self.profile(r.replica_id).preemptible]
+                    if stable:
+                        candidates = stable
+                    else:
+                        self.tier_spills += 1
+                # least NORMALIZED load: a 2× replica at load 0.8 is as
+                # admittable as a baseline one at 0.4; ties go to cheaper
+                # capacity, so batch headroom lands on spot replicas
+                rep = min(candidates, key=lambda r: (
+                    r.load / self.effective_speed(r.replica_id),
+                    self.profile(r.replica_id).cost_per_tick,
+                    r.replica_id))
+            else:
+                rep = min(candidates, key=lambda r: (r.load, r.replica_id))
             try:
                 rep.submit(request, now=now)
                 return
@@ -348,7 +444,20 @@ class ReplicaRouter:
             self._undelivered = completed
             raise
         for rep in [r for r in self.replicas if r.failed]:
-            self.evict(rep.replica_id, now=now)
+            # a lost PREEMPTIBLE replica is not replaced: the spot capacity
+            # is gone, batch absorbs the churn, and the scaler re-provisions
+            # if the forecast still wants it — auto-rebuilding here would
+            # bill on-demand work as if spot never vanished
+            self.evict(rep.replica_id, now=now,
+                       replace=not self.profile(rep.replica_id).preemptible)
+        for rep in self.serving_replicas:
+            self._ticks_served[rep.replica_id] = \
+                self._ticks_served.get(rep.replica_id, 0) + 1
+        for req in completed:
+            if req.replica_id is not None:
+                self._tok_served[req.replica_id] = \
+                    self._tok_served.get(req.replica_id, 0) \
+                    + len(req.tokens_out)
         self._last_now = max(self._last_now, now)
         return completed
 
@@ -356,6 +465,42 @@ class ReplicaRouter:
     def pending(self) -> int:
         """Requests somewhere in the system (queued or in a slot)."""
         return sum(r.pending for r in self.replicas)
+
+    # ------------------------------------------------------ tiers & capacity
+
+    def gate_batch(self, on: bool) -> bool:
+        """Fleet-wide batch-lane gate (the scaler's SLO-protection
+        actuator): while on, no replica admits batch-tier work — queued
+        batch requests wait, interactive drains at full capacity.
+        Replicas added while gated come up gated.  Returns the new state."""
+        self._batch_gated = bool(on)
+        for rep in self.replicas:
+            rep.gate_batch(self._batch_gated)
+        return self._batch_gated
+
+    @property
+    def batch_gated(self) -> bool:
+        return self._batch_gated
+
+    def preempt(self, replica_id: int, now: float = 0.0) -> bool:
+        """Provider-reclaim injection: the replica vanishes WITHOUT notice
+        (no graceful drain — in-flight work is rewound and requeued through
+        the survivors, exactly once).  Not replaced: the capacity is gone
+        until the scaler buys more.  Refuses to take the last serving
+        replica — a fleet of zero cannot absorb anything."""
+        rep = next((r for r in self.replicas if r.replica_id == replica_id),
+                   None)
+        if rep is None or len(self.serving_replicas) <= 1:
+            return False
+        rep.failed = True              # the reclaim is not a clean drain
+        return self.evict(replica_id, now=now, replace=False)
+
+    @property
+    def cost_per_tick(self) -> float:
+        """Realized fleet cost this tick: sum of serving replicas' profile
+        rates (parked/dead capacity is not billed)."""
+        return sum(self.profile(r.replica_id).cost_per_tick
+                   for r in self.serving_replicas)
 
     # ------------------------------------------------------------- metrics
 
@@ -389,7 +534,12 @@ class ReplicaRouter:
                 self._dying.append((1, rep))
         for phase, rep in dying_now:        # one owed report per round
             if phase == 0:                  # crash report (parent-side stub)
-                out.append(rep.report(tick))
+                rpt = rep.report(tick)
+                # phase 0 IS the crash report by definition: an in-process
+                # replica preempted by fiat dies with a clean window, but
+                # the collector must still see the loss as an error
+                rpt.n_errors = max(rpt.n_errors, 1)
+                out.append(rpt)
                 self._dying.append((1, rep))
             else:                           # clean-up for the crash report
                 out.append(empty_report(rep.replica_id, tick))
@@ -405,14 +555,24 @@ class ReplicaRouter:
         tokens = sum(lt["total_tokens"] for lt in ever)
         completed = sum(lt["total_completed"] for lt in ever)
         wall = max(self._last_now - (self._t0 or 0.0), 1e-9)
+        # tick-weighted mean: every lifetime is an AVERAGE over that
+        # replica's served rounds, so a two-tick replacement must weigh
+        # two ticks, not as much as a run-long survivor.  Lifetimes without
+        # a tick count (older remote mirrors) fall back to weight 1.
+        tick_w = [max(int(lt.get("total_ticks", 0)), 0) or 1 for lt in ever]
+        util_num = sum(lt["slot_utilization"] * w
+                       for lt, w in zip(ever, tick_w))
         return {
             "latency_p50_ms": float(np.percentile(lat, 50)),
             "latency_p95_ms": float(np.percentile(lat, 95)),
             "throughput_tok_s": tokens / wall,
             "completed": completed,
             "completed_tokens": tokens,
-            "slot_utilization": float(np.mean(
-                [lt["slot_utilization"] for lt in ever])),
+            "completed_interactive": sum(
+                lt.get("completed_interactive", 0) for lt in ever),
+            "completed_batch": sum(
+                lt.get("completed_batch", 0) for lt in ever),
+            "slot_utilization": (util_num / sum(tick_w)) if ever else 0.0,
             "queue_depth": sum(r.queue_depth for r in self.replicas),
             "transport_ms": float(np.mean(
                 [r.transport_ms for r in self.replicas])) if self.replicas
@@ -427,6 +587,13 @@ class ReplicaRouter:
             "off_list_spawns": getattr(self._factory, "counters",
                                        {}).get("off_list_spawns", 0),
             "replicas": self.replica_count,
+            # heterogeneous-fleet economics: realized cost of the serving
+            # set, spot losses absorbed, and interactive requests forced
+            # onto volatile capacity (0 / default-priced when unprofiled)
+            "fleet_cost_per_tick": self.cost_per_tick,
+            "preemptions": self.preemptions,
+            "tier_spills": self.tier_spills,
+            "batch_gated": self._batch_gated,
             # paged-pool cache efficiency, fleet-wide — engines only report
             # these when running a paged KV pool, so dense fleets read 0
             "prefix_hits": sum(lt.get("prefix_hits", 0) for lt in ever),

@@ -219,6 +219,7 @@ def encode_request(req: Request) -> dict:
         "rid": req.rid,
         "prompt": np.asarray(req.prompt).astype(int).tolist(),
         "gen_len": int(req.gen_len),
+        "tier": req.tier,
         "sampling": dataclasses.asdict(req.sampling),
         "t_submit": req.t_submit,
         "t_admit": req.t_admit,
@@ -235,6 +236,8 @@ def decode_request(d: dict) -> Request:
     req = Request(rid=int(d["rid"]),
                   prompt=np.asarray(d["prompt"], np.int32),
                   gen_len=int(d["gen_len"]),
+                  # .get: frames from pre-tier peers default interactive
+                  tier=d.get("tier", "interactive"),
                   sampling=SamplingParams(**d["sampling"]),
                   frames=(None if d.get("frames") is None
                           else np.asarray(d["frames"], np.float32)))

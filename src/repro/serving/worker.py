@@ -327,6 +327,10 @@ def handle(engine, msg: dict, pod: PodRuntime | None = None):
         engine.submit(decode_request(msg["request"]), now=msg.get("now", 0.0))
         return {"ok": True}
     if op == "step":
+        if "batch_gate" in msg:
+            # gate changes ride the step message (like batched submits) and
+            # apply BEFORE this round's submits/admission
+            engine.scheduler.batch_gated = bool(msg["batch_gate"])
         submit_errors = []
         for d in msg.get("submits", ()):
             # enqueue BEFORE the round runs — identical ordering to the

@@ -19,8 +19,8 @@ def poisson_arrival_times(rps: float, n: int,
 
 def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
                        rng: np.random.Generator, base_rid: int = 0,
-                       sampling: SamplingParams | None = None
-                       ) -> list[Request]:
+                       sampling: SamplingParams | None = None,
+                       tier: str = "interactive") -> list[Request]:
     """n requests drawn from the spec's shape (uniform random token ids;
     ids < 3 reserved for specials, as in the seed driver).  When
     ``sampling`` is omitted, each request gets its OWN SamplingParams —
@@ -30,10 +30,29 @@ def synthetic_requests(spec: WorkloadSpec, n: int, vocab: int, *,
         Request(rid=base_rid + i,
                 prompt=rng.integers(3, vocab, size=spec.prompt_len
                                     ).astype(np.int32),
-                gen_len=spec.gen_len,
+                gen_len=spec.gen_len, tier=tier,
                 sampling=SamplingParams() if sampling is None else sampling)
         for i in range(n)
     ]
+
+
+def tiered_requests(spec: WorkloadSpec, n: int, vocab: int, *,
+                    batch_frac: float, rng: np.random.Generator,
+                    base_rid: int = 0,
+                    sampling: SamplingParams | None = None
+                    ) -> list[Request]:
+    """A mixed-tier stream: each request lands on the batch lane with
+    probability ``batch_frac`` (drawn AFTER the prompts, so the prompt
+    stream matches a same-seed synthetic_requests call token-for-token —
+    only the tier labels differ)."""
+    reqs = synthetic_requests(spec, n, vocab, rng=rng, base_rid=base_rid,
+                              sampling=sampling)
+    if batch_frac > 0.0:
+        is_batch = rng.random(n) < batch_frac
+        for r, b in zip(reqs, is_batch):
+            if b:
+                r.tier = "batch"
+    return reqs
 
 
 def repetitive_requests(spec: WorkloadSpec, n: int, vocab: int, *,

@@ -64,6 +64,11 @@ class ServiceProfile:
     def tokens_per_s(self) -> float:
         return self.slots / self.decode_step_s
 
+    def relative_speed(self, baseline: "ServiceProfile") -> float:
+        """Decode throughput relative to another service — the seed for a
+        heterogeneous fleet's ReplicaProfile.speed (serving/profiles.py)."""
+        return self.tokens_per_s() / max(baseline.tokens_per_s(), 1e-12)
+
     def requests_per_s(self, w: WorkloadSpec) -> float:
         """Steady-state request service rate per replica."""
         t_req = self.request_service_s(w)

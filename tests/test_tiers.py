@@ -1,0 +1,504 @@
+"""SLO tiers + heterogeneous fleets: laned admission, tier-aware routing,
+preemptible capacity, and the control-plane satellites.
+
+Satellite regressions — each verified FAILING on the pre-fix src:
+
+ 1. ``ScalingOptimizer.optimize`` built its ranking key as
+    ``(not feasible, cost, lat)`` — ``target_util[0]`` (the low water mark
+    the adaptation engine tunes) was never consulted, so under a flat cost
+    curve the latency tie-break overprovisioned forever.
+ 2. The closed loop published a single-sample ``rps_window`` every tick, so
+    ``analyze_current_load``'s std was always 0 and peak always equaled
+    mean — burstiness never reached the planner.
+ 3. ``ReplicaRouter.metrics()["slot_utilization"]`` was an unweighted mean
+    over every replica that EVER existed: under evict-replace churn each
+    short-lived replacement's near-zero lifetime average diluted the fleet
+    number as much as a run-long survivor's.
+
+The tier equivalence suite pins the compatibility contract: a single-tier
+workload on the laned scheduler is bit-identical to the pre-tier system
+(same pop order, same rng stream, same token streams across inproc/proc),
+and only profiled fleets route any differently.
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+MAX_SEQ = 24
+SLOTS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def shared_core():
+    from repro.serving.engine import EngineCore
+    return EngineCore(CFG, MAX_SEQ, seed=0)
+
+
+def make_router(n_replicas=1, max_replicas=4, profile_fn=None):
+    from repro.serving import ReplicaRouter, ServingEngine
+
+    core = shared_core()
+
+    def factory(replica_id):
+        return ServingEngine(CFG, slots=SLOTS, max_seq=MAX_SEQ,
+                             prefill_chunk=4, core=core,
+                             replica_id=replica_id)
+
+    # profile_fn only when given: the satellite regression tests run this
+    # helper against the pre-fix src, which predates the kwarg
+    kw = {} if profile_fn is None else {"profile_fn": profile_fn}
+    return ReplicaRouter(factory, n_replicas=n_replicas,
+                         max_replicas=max_replicas, **kw)
+
+
+def req(rid, *, tier="interactive", prompt_len=6, gen_len=3, seed=None):
+    from repro.serving import Request
+    rng = np.random.default_rng(rid if seed is None else seed)
+    # tier kwarg only when non-default, so the satellite regression tests
+    # construct pre-fix Requests (which predate the field) unchanged
+    kw = {} if tier == "interactive" else {"tier": tier}
+    return Request(rid=rid,
+                   prompt=rng.integers(3, CFG.vocab,
+                                       size=prompt_len).astype(np.int32),
+                   gen_len=gen_len, **kw)
+
+
+# ----------------------------------------------------------- scheduler lanes
+
+
+def test_single_tier_pop_order_is_fcfs():
+    """Lanes on, one tier in play: the laned scheduler IS the old FCFS
+    queue — submit order in, submit order out."""
+    from repro.serving.scheduler import FCFSScheduler
+
+    sched = FCFSScheduler()
+    for i in range(5):
+        sched.submit(req(i))
+    assert sched.depth == 5
+    assert sched.lane_depth("interactive") == 5
+    assert [sched.pop().rid for _ in range(5)] == list(range(5))
+    assert not sched
+
+
+def test_interactive_lane_has_priority_fcfs_within_lane():
+    from repro.serving.scheduler import FCFSScheduler
+
+    sched = FCFSScheduler()
+    sched.submit(req(0, tier="batch"))
+    sched.submit(req(1))
+    sched.submit(req(2, tier="batch"))
+    sched.submit(req(3))
+    # interactive drains first (FCFS within the lane), then batch FCFS
+    assert [sched.pop().rid for _ in range(4)] == [1, 3, 0, 2]
+
+
+def test_batch_gate_hides_lane_but_counts_depth():
+    from repro.serving.scheduler import FCFSScheduler
+
+    sched = FCFSScheduler()
+    sched.submit(req(0, tier="batch"))
+    sched.submit(req(1))
+    sched.batch_gated = True
+    assert sched.depth == 2                  # gated work still queues
+    assert sched.pop().rid == 1
+    assert not sched                         # only gated batch left
+    assert sched.depth == 1
+    with pytest.raises(IndexError):
+        sched.pop()
+    sched.batch_gated = False
+    assert sched
+    assert sched.pop().rid == 0
+
+
+def test_drain_empties_gated_lanes_too():
+    from repro.serving.scheduler import FCFSScheduler
+
+    sched = FCFSScheduler()
+    sched.submit(req(0, tier="batch"))
+    sched.submit(req(1))
+    sched.batch_gated = True
+    drained = sched.drain()
+    assert sorted(r.rid for r in drained) == [0, 1]
+    assert sched.depth == 0
+
+
+def test_unknown_tier_rejected():
+    from repro.serving.scheduler import validate_tier
+
+    with pytest.raises(ValueError):
+        validate_tier("bulk")
+
+
+# ------------------------------------------------------------ tier workloads
+
+
+def test_tiered_requests_prompt_stream_identity():
+    """The tier draw comes AFTER the prompts: a tiered stream's prompts are
+    token-for-token the single-tier stream's on the same seed."""
+    from repro.serving.workload import synthetic_requests, tiered_requests
+    from repro.sim.serving import WorkloadSpec
+
+    spec = WorkloadSpec(prompt_len=8, gen_len=4)
+    plain = synthetic_requests(spec, 12, CFG.vocab,
+                               rng=np.random.default_rng(7))
+    mixed = tiered_requests(spec, 12, CFG.vocab, batch_frac=0.5,
+                            rng=np.random.default_rng(7))
+    for a, b in zip(plain, mixed):
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+    assert {r.tier for r in mixed} == {"interactive", "batch"}
+    # batch_frac=0 consumes NO extra rng: the next draw matches
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    synthetic_requests(spec, 12, CFG.vocab, rng=rng_a)
+    tiered_requests(spec, 12, CFG.vocab, batch_frac=0.0, rng=rng_b)
+    assert rng_a.random() == rng_b.random()
+
+
+# -------------------------------------------------- profiled fleet routing
+
+
+def test_interactive_never_lands_on_preemptible():
+    from repro.serving import ReplicaProfile
+
+    def profiles(rid):
+        return ReplicaProfile(cost_per_tick=0.35, preemptible=True) \
+            if rid >= 1 else ReplicaProfile()
+
+    router = make_router(n_replicas=2, profile_fn=profiles)
+    for i in range(4):
+        router.submit(req(i), now=0.0)
+    # unprofiled least-loaded would spread 2/2; tier placement pins all
+    # interactive work to the one stable replica
+    depths = [r.queue_depth for r in router.replicas]
+    assert depths == [4, 0]
+    # batch is free to take the cheap volatile capacity (and does: zero
+    # load + lower cost_per_tick beats the loaded on-demand replica)
+    router.submit(req(10, tier="batch"), now=0.0)
+    assert router.replicas[1].queue_depth == 1
+    assert router.tier_spills == 0
+
+
+def test_interactive_spills_when_fleet_is_all_spot():
+    from repro.serving import ReplicaProfile
+
+    router = make_router(
+        n_replicas=2,
+        profile_fn=lambda rid: ReplicaProfile(preemptible=True))
+    router.submit(req(0), now=0.0)
+    assert router.tier_spills == 1           # admitted, but recorded
+    assert router.pending == 1
+
+
+def test_cheaper_replica_wins_load_ties():
+    from repro.serving import ReplicaProfile
+
+    def profiles(rid):
+        return ReplicaProfile(cost_per_tick=0.35, preemptible=True) \
+            if rid >= 1 else ReplicaProfile()
+
+    router = make_router(n_replicas=2, profile_fn=profiles)
+    router.submit(req(0, tier="batch"), now=0.0)
+    # both empty: the spot replica (id 1) is cheaper and takes the work —
+    # the unprofiled tie-break (lowest id) would have picked replica 0
+    assert [r.queue_depth for r in router.replicas] == [0, 1]
+
+
+def test_unprofiled_router_keeps_legacy_placement():
+    router = make_router(n_replicas=2)
+    for i in range(4):
+        router.submit(req(i), now=0.0)
+    assert [r.queue_depth for r in router.replicas] == [2, 2]
+
+
+# ----------------------------------------------------------- preemption
+
+
+def _preempt_run():
+    """2-replica profiled fleet; replica 1 (spot) is reclaimed mid-decode.
+    Returns (router, {rid: tokens})."""
+    from repro.serving import ReplicaProfile
+
+    def profiles(rid):
+        return ReplicaProfile(cost_per_tick=0.35, preemptible=True) \
+            if rid >= 1 else ReplicaProfile()
+
+    router = make_router(n_replicas=2, profile_fn=profiles)
+    reqs = [req(i, tier="batch" if i % 2 else "interactive", gen_len=4)
+            for i in range(6)]
+    for r in reqs:
+        router.submit(r, now=0.0)
+    done, now = [], 0.0
+    for _ in range(2):                       # decode is genuinely mid-flight
+        now += 0.5
+        done.extend(router.step(now))
+    assert router.preempt(1, now=now)
+    while len(done) < len(reqs) and now < 500:
+        now += 0.5
+        done.extend(router.step(now))
+    return router, reqs, done
+
+
+def test_preemption_mid_decode_completes_exactly_once():
+    router, reqs, done = _preempt_run()
+    rids = [r.rid for r in done]
+    assert sorted(rids) == sorted(r.rid for r in reqs)   # no loss, no dup
+    for r in done:
+        assert len(r.tokens_out) == 4
+    assert router.preemptions == 1
+    # spot capacity is NOT auto-replaced: the fleet shrank
+    assert router.replica_count == 1
+    # the reclaim must surface to the control plane as an error even though
+    # an in-process replica dies with a clean metric window
+    reports = router.reports(0)
+    assert any(rep.n_errors > 0 for rep in reports)
+
+
+def test_preemption_replay_is_deterministic():
+    _, _, a = _preempt_run()
+    _, _, b = _preempt_run()
+    assert {r.rid: list(r.tokens_out) for r in a} \
+        == {r.rid: list(r.tokens_out) for r in b}
+
+
+def test_preempt_refuses_last_serving_replica():
+    router = make_router(n_replicas=1)
+    router.submit(req(0), now=0.0)
+    assert not router.preempt(0)
+    assert router.replica_count == 1
+    done, now = [], 0.0
+    while len(done) < 1 and now < 100:
+        now += 0.5
+        done.extend(router.step(now))
+    assert len(done) == 1
+
+
+# ----------------------------------------------------------- batch gate
+
+
+def test_gate_blocks_batch_admission_until_released():
+    router = make_router(n_replicas=1)
+    router.gate_batch(True)
+    router.submit(req(0, tier="batch"), now=0.0)
+    router.submit(req(1), now=0.0)
+    done, now = [], 0.0
+    for _ in range(40):
+        now += 0.5
+        done.extend(router.step(now))
+    assert [r.rid for r in done] == [1]      # interactive drained alone
+    assert router.pending == 1               # batch queued, not lost
+    router.gate_batch(False)
+    while len(done) < 2 and now < 200:
+        now += 0.5
+        done.extend(router.step(now))
+    assert sorted(r.rid for r in done) == [0, 1]
+
+
+@pytest.mark.slow
+def test_gate_rides_step_rpc_to_remote_worker():
+    """ProcessReplica: the gate change travels inside the next step message
+    (no dedicated RPC) and lands before that round's admission."""
+    from repro.serving.replica import ProcessReplica
+
+    rep = ProcessReplica(CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+                         batch_submits=True)
+    try:
+        rep.gate_batch(True)
+        rep.submit(req(0, tier="batch"), now=0.0)
+        rep.submit(req(1), now=0.0)
+        done, now = [], 0.0
+        for _ in range(40):
+            now += 0.5
+            done.extend(rep.step(now))
+        assert [r.rid for r in done] == [1]
+        assert rep.pending == 1
+        rep.gate_batch(False)
+        while len(done) < 2 and now < 200:
+            now += 0.5
+            done.extend(rep.step(now))
+        assert sorted(r.rid for r in done) == [0, 1]
+    finally:
+        rep.close()
+
+
+def test_batch_gate_decision_hysteresis():
+    """Trips at batch_gate_frac x SLO on the INTERACTIVE p95 channel,
+    releases only once the lane recovers to half the trip point."""
+    from repro.core.scaling.scaler import DynamicScaler, ScalingConstraints
+
+    s = DynamicScaler(None, lambda r, load: (0.0, 0.0))
+    c = ScalingConstraints(slo_ms=1000.0, batch_gate_frac=0.9)
+    assert not s.batch_gate_decision({"latency_p95_interactive": 800.0}, c)
+    assert s.batch_gate_decision({"latency_p95_interactive": 950.0}, c)
+    # inside the hysteresis band: stays gated
+    assert s.batch_gate_decision({"latency_p95_interactive": 600.0}, c)
+    assert not s.batch_gate_decision({"latency_p95_interactive": 400.0}, c)
+    # and re-arming needs a full trip again
+    assert not s.batch_gate_decision({"latency_p95_interactive": 600.0}, c)
+
+
+# ------------------------------------------- per-tier latency channels
+
+
+def test_collector_publishes_per_tier_p95():
+    from repro.core.monitoring.collector import (
+        MetricsCollector, ReplicaReport,
+    )
+
+    col = MetricsCollector()
+    col.submit(ReplicaReport(
+        replica_id=0, tick=0, latency_ms_samples=[100.0, 120.0, 900.0],
+        n_requests=3, n_errors=0, flop_util=0.5, hbm_util=0.5, ici_util=0.0,
+        mem_frac=0.5, queue_depth=0,
+        lat_tiers={"interactive": [100.0, 120.0], "batch": [900.0]}))
+    rec = col.aggregate(0, n_replicas=1, max_replicas=2)
+    assert rec["latency_p95_interactive"] < 200.0
+    assert rec["latency_p95_batch"] == pytest.approx(900.0)
+    # empty tiers read 0.0, not NaN
+    col2 = MetricsCollector()
+    col2.submit(ReplicaReport(
+        replica_id=0, tick=0, latency_ms_samples=[], n_requests=0,
+        n_errors=0, flop_util=0.0, hbm_util=0.0, ici_util=0.0,
+        mem_frac=0.0, queue_depth=0))
+    rec2 = col2.aggregate(0, n_replicas=1, max_replicas=2)
+    assert rec2["latency_p95_interactive"] == 0.0
+    assert rec2["latency_p95_batch"] == 0.0
+
+
+# ------------------------------------------------- closed-loop equivalence
+
+
+def _loop(topology, batch_frac, *, reserved=0, ticks=5, seed=0):
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+    from repro.sim.serving import WorkloadSpec
+
+    lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                    steps_per_tick=6, topology=topology,
+                    batch_frac=batch_frac, reserved_replicas=reserved)
+    sink = []
+    router, logs = run_closed_loop(
+        TINY_CFGS["dense"], autoscale=True, ticks=ticks, seed=seed, lc=lc,
+        spec=WorkloadSpec(prompt_len=6, gen_len=3), sink=sink)
+    router.close()
+    return sink, logs
+
+
+@pytest.mark.slow
+def test_single_tier_closed_loop_matches_across_topologies():
+    """batch_frac=0: the laned loop is the pre-tier loop — same arrivals,
+    same token streams, inproc and proc alike."""
+    sink_i, logs_i = _loop("inproc", 0.0)
+    sink_p, logs_p = _loop("proc", 0.0)
+    assert {r.rid: list(r.tokens_out) for r in sink_i} \
+        == {r.rid: list(r.tokens_out) for r in sink_p}
+    assert [t.arrivals for t in logs_i] == [t.arrivals for t in logs_p]
+    assert all(r.tier == "interactive" for r in sink_i)
+
+
+@pytest.mark.slow
+def test_mixed_tier_closed_loop_matches_across_topologies():
+    """Tier labels survive the wire: a mixed-tier heterogeneous run on proc
+    completes the same streams with the same tiers as inproc."""
+    sink_i, _ = _loop("inproc", 0.5, reserved=1)
+    sink_p, _ = _loop("proc", 0.5, reserved=1)
+    assert {r.rid: (r.tier, list(r.tokens_out)) for r in sink_i} \
+        == {r.rid: (r.tier, list(r.tokens_out)) for r in sink_p}
+    assert {r.tier for r in sink_i} == {"interactive", "batch"}
+
+
+def test_closed_loop_fixed_seed_is_deterministic():
+    """Satellite 4 (deque arrival drain): same seed, stream-identical logs
+    and token streams — the O(n) drain changed nothing observable."""
+    sink_a, logs_a = _loop("inproc", 0.0, ticks=4)
+    sink_b, logs_b = _loop("inproc", 0.0, ticks=4)
+    assert {r.rid: list(r.tokens_out) for r in sink_a} \
+        == {r.rid: list(r.tokens_out) for r in sink_b}
+    assert [(t.arrivals, t.served, t.replicas, t.latency_p95_ms)
+            for t in logs_a] \
+        == [(t.arrivals, t.served, t.replicas, t.latency_p95_ms)
+            for t in logs_b]
+
+
+# --------------------------------------------------- satellite regressions
+
+
+def test_optimizer_consults_low_water_mark():
+    """Regression 1 (verified FAILING on the pre-fix src): with a flat cost
+    curve the pre-fix key ``(not feasible, cost, lat)`` let the latency
+    tie-break pick the BIGGEST feasible fleet (util far below the band);
+    the low-water-mark term must prefer the in-band point."""
+    from repro.core.scaling.scaler import (
+        ScalingConstraints, ScalingOptimizer,
+    )
+
+    def perf(r, load):
+        util = min(load / (r * 10.0), 1.0)
+        return 100.0 * util, util
+
+    opt = ScalingOptimizer(perf)
+    c = ScalingConstraints(min_replicas=1, max_replicas=4, max_step=4,
+                           slo_ms=1000.0, target_util=(0.55, 0.85),
+                           cost_per_replica=0.0)
+    d = opt.optimize(current_load={}, predicted_load=14.0, efficiency=1.0,
+                     constraints=c, current_replicas=2)
+    # r=2 → util 0.70 (in band); r=3,4 → under the low water mark with
+    # lower latency — pre-fix the key picked r=4
+    assert d.target_replicas == 2
+
+
+def test_rps_window_is_a_rolling_multi_tick_history():
+    """Regression 2 (verified FAILING on the pre-fix src): a bursty profile
+    must produce a published window with real spread (pre-fix every tick's
+    window was the single current sample: std 0, peak == mean)."""
+    from repro.core.dnn.traces import TraceRecorder
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+    from repro.sim.serving import WorkloadSpec
+
+    # plain pre-fix-constructible LoopConfig (no rps_window kwarg): the
+    # regression must fail on the OLD behavior, not on a missing field
+    lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                    steps_per_tick=6)
+    rec = TraceRecorder()
+
+    def bursty(tick, ticks, lc):
+        return lc.spike_rps if tick % 2 else lc.calm_rps
+
+    router, _ = run_closed_loop(TINY_CFGS["dense"], autoscale=True, ticks=5,
+                                seed=0, lc=lc, profile=bursty,
+                                spec=WorkloadSpec(prompt_len=6, gen_len=3),
+                                recorder=rec)
+    router.close()
+    windows = [r["rps_window"] for r in rec.records]
+    assert max(len(w) for w in windows) > 1      # pre-fix: every len == 1
+    assert max(len(w) for w in windows) <= LoopConfig().rps_window
+    spreads = [np.std(w) for w in windows]
+    assert max(spreads) > 0.0
+    last = windows[-1]
+    assert np.max(last) != np.mean(last)
+
+
+def test_slot_utilization_is_tick_weighted():
+    """Regression 3 (verified FAILING on the pre-fix src): a short-lived
+    scale-up must weigh its few ticks, not count like a run-long survivor
+    (pre-fix: unweighted mean over every replica ever → churn halved the
+    fleet number)."""
+    router = make_router(n_replicas=1, max_replicas=4)
+    for i in range(8):
+        router.submit(req(i, gen_len=3), now=0.0)
+    now = 0.0
+    while router.pending and now < 100:
+        now += 0.5
+        router.step(now)
+    busy_util = router.serving_replicas[0].lifetime()["slot_utilization"]
+    assert busy_util > 0.5
+    # one churn cycle: a replica that serves ~one idle tick then parks
+    router.scale_to(2, now=now)
+    now += 0.5
+    router.step(now)
+    router.scale_to(1, now=now)
+    got = router.metrics()["slot_utilization"]
+    # unweighted: (busy + ~0)/2 ≈ busy/2 — far below this bar
+    assert got > 0.75 * busy_util
