@@ -10,10 +10,11 @@ from benchmarks.common import N_TICKS, run_fleet, traffic_weighted_p95
 from repro.sim.workload import REGIONS
 
 
-def run():
+def run(n_ticks: int | None = None):
     t0 = time.perf_counter()
     per_region = {}
-    n_ticks = N_TICKS // 2                      # one simulated day per region
+    if n_ticks is None:
+        n_ticks = N_TICKS // 2                  # one simulated day per region
     for region in REGIONS:
         t = run_fleet(controller="traditional", region=region,
                       n_ticks=n_ticks, seed=0)
@@ -42,9 +43,24 @@ def run():
 
 
 if __name__ == "__main__":
-    r = run()
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quarter-day per region (CI smoke scale)")
+    ap.add_argument("--out", default=None,
+                    help="write the result record as JSON")
+    args = ap.parse_args()
+    r = run(n_ticks=N_TICKS // 8 if args.smoke else None)
     print(r["derived"])
     for region, v in r["detail"]["per_region"].items():
         print(f"  {region:5s} util {v['util_traditional']:.2f}->"
               f"{v['util_dnn']:.2f}  cost -{v['cost_reduction']*100:.0f}%  "
               f"lat -{v['latency_reduction']*100:.0f}%")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(r, f, indent=2, sort_keys=True)
+    if not r["detail"]["all_improve"]:
+        raise SystemExit("multi-region bar failed: a region regressed on "
+                         "utilization or cost")

@@ -651,6 +651,123 @@ def run_tiers(smoke: bool = True, seed: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# multi-region geo ablation (region-aware vs region-blind placement)
+# ---------------------------------------------------------------------------
+
+REGION_SCALES = {
+    # slots is kept small so the steady calm load already needs >1 replica
+    # — geography only matters when there is more than one place to route
+    "smoke": dict(ticks=12, max_replicas=4, reserved=2, batch_frac=0.4,
+                  slots=4, calm_rps=5.0, spike_rps=12.0),
+    "full": dict(ticks=16, max_replicas=4, reserved=2, batch_frac=0.4,
+                 slots=4, calm_rps=5.0, spike_rps=12.0),
+}
+REGION_SLO_MS = 2000.0
+# two-region stripe: even ids NA, odd ids APAC; traffic originates in NA,
+# so every odd-id placement pays the NA↔APAC RTT (150 ms ≈ 1.5 decode
+# ticks — big enough that placement shows up in the p95)
+REGION_STRIPE = ("apac", "sa")   # the matrix's longest leg: 280 ms RTT
+
+
+def _region_arm(aware: bool, *, ticks, max_replicas, reserved, batch_frac,
+                slots, calm_rps, spike_rps, seed: int = 0):
+    """One mixed-tier calm→spike→calm run on a GEOGRAPHIC fleet: replicas
+    striped across two regions (reserved on-demand ids first, spot past
+    them), the plan's RTT matrix injected into the fabric as deterministic
+    virtual-clock delay, and the spot leg priced by the seeded market.
+    Both arms run the SAME plan, seed, and injected latency — the only
+    difference is ``region_aware``: whether the router prefers in-region
+    capacity for interactive traffic or stays region-blind."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.core.dnn.traces import TraceRecorder
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+    from repro.sim.serving import WorkloadSpec
+
+    cfg = get_smoke_config("qwen2.5-3b")
+    lc = dataclasses.replace(
+        LoopConfig(), max_replicas=max_replicas, batch_frac=batch_frac,
+        slots=slots, calm_rps=calm_rps, spike_rps=spike_rps,
+        slo_ms=REGION_SLO_MS, reserved_replicas=reserved,
+        regions=REGION_STRIPE, home_region=REGION_STRIPE[0],
+        region_aware=aware, spot_market=True)
+    spec = WorkloadSpec(prompt_len=8, gen_len=4)
+    rec = TraceRecorder()
+    router, logs = run_closed_loop(cfg, autoscale=True, ticks=ticks,
+                                   seed=seed, lc=lc, spec=spec, recorder=rec)
+    try:
+        total = sum(t.arrivals for t in logs)
+        drained = sum(t.served for t in logs)
+        now = ticks * lc.steps_per_tick * lc.tick_s
+        router.gate_batch(False)             # release: let batch finish
+        steps = 0
+        while drained < total and steps < 2000:
+            now += lc.tick_s
+            drained += len(router.step(now))
+            steps += 1
+        m = router.metrics()
+    finally:
+        router.close()
+    w = [(r["latency_p95_interactive"], r["arrivals"]) for r in rec.records
+         if r["latency_p95_interactive"] > 0.0]
+    tw_p95_i = (sum(p * a for p, a in w) / max(sum(a for _, a in w), 1)
+                if w else 0.0)
+    return {
+        "tw_p95_interactive_ms": tw_p95_i,
+        "cost_total": float(sum(r["cost_per_tick"] for r in rec.records)),
+        "arrivals": int(total),
+        "completed": int(m["completed"]),
+        "region_spills": int(m["region_spills"]),
+        "tier_spills": int(m["tier_spills"]),
+        "transport_ms_mean": float(np.mean(
+            [r["transport_ms"] for r in rec.records])) if rec.records else 0.0,
+        "spot_price_mean": float(np.mean(
+            [r["spot_price"] for r in rec.records])) if rec.records else 0.0,
+        "drain_steps": steps,
+    }
+
+
+def run_regions(smoke: bool = True, seed: int = 0):
+    """Geographic fleet under a spot-price market, region-aware vs
+    region-blind routing on the same seed.  Acceptance bars (CI,
+    BENCH_regions.json): the aware arm beats blind on interactive
+    traffic-weighted p95 under the injected inter-region RTT, at no higher
+    realized cost, and every submitted request completes in both arms."""
+    scale = REGION_SCALES["smoke" if smoke else "full"]
+    t0 = time.perf_counter()
+    aware = _region_arm(True, seed=seed, **scale)
+    blind = _region_arm(False, seed=seed, **scale)
+    wall = time.perf_counter() - t0
+    latency_better = (aware["tw_p95_interactive_ms"]
+                      < blind["tw_p95_interactive_ms"])
+    # "no higher cost": same plan + market both arms, so this bars the
+    # aware arm's scaling trajectory from buying its latency win
+    cost_ok = aware["cost_total"] <= blind["cost_total"] * 1.001
+    all_completed = (aware["completed"] == aware["arrivals"]
+                     and blind["completed"] == blind["arrivals"])
+    return {
+        "name": "multi_region_fleet",
+        "latency_better": bool(latency_better),
+        "cost_ok": bool(cost_ok),
+        "all_completed": bool(all_completed),
+        "derived": (f"geo aware vs blind ({'+'.join(REGION_STRIPE)}): "
+                    f"interactive tw-p95 {aware['tw_p95_interactive_ms']:.0f}"
+                    f"ms vs {blind['tw_p95_interactive_ms']:.0f}ms "
+                    f"({aware['tw_p95_interactive_ms'] / max(blind['tw_p95_interactive_ms'], 1e-9):.0%}), "
+                    f"cost {aware['cost_total']:.1f} vs "
+                    f"{blind['cost_total']:.1f}, "
+                    f"{aware['region_spills']} region spills, "
+                    f"spot mean {aware['spot_price_mean']:.2f}, "
+                    f"{aware['completed']}/{aware['arrivals']} completed, "
+                    f"wall {wall:.1f}s"),
+        "detail": {"aware": aware, "blind": blind, "slo_ms": REGION_SLO_MS,
+                   "regions": list(REGION_STRIPE), "scale": scale,
+                   "seed": seed, "wall_s": wall},
+    }
+
+
+# ---------------------------------------------------------------------------
 # decode-kernel ablation (pallas vs jnp reference data path)
 # ---------------------------------------------------------------------------
 
@@ -908,6 +1025,12 @@ if __name__ == "__main__":
                          "planner + laned admission + scripted spot "
                          "preemptions vs a blind flat fleet on the same "
                          "seed (writes BENCH_tiers.json)")
+    ap.add_argument("--regions", action="store_true",
+                    help="multi-region geo ablation: region-striped fleet "
+                         "under a seeded spot-price market with injected "
+                         "inter-region RTT, region-aware vs region-blind "
+                         "routing on the same seed (writes "
+                         "BENCH_regions.json)")
     ap.add_argument("--learned", action="store_true",
                     help="learned-policy A/B: record a planner trace, "
                          "offline-train the allocator on it, redeploy it "
@@ -980,6 +1103,20 @@ if __name__ == "__main__":
         if not res["aware_cheaper"]:
             raise SystemExit("tiered fleet: the profile-aware plan should "
                              "cost less than the blind all-on-demand fleet")
+    elif args.regions:
+        res = run_regions(smoke=args.smoke)
+        with open(args.out or "BENCH_regions.json", "w") as f:
+            json.dump(res, f, indent=2, sort_keys=True)
+        print(res["derived"])
+        if not res["latency_better"]:
+            raise SystemExit("regions: region-aware placement should beat "
+                             "region-blind on interactive tw-p95 under "
+                             "injected inter-region RTT")
+        if not res["cost_ok"]:
+            raise SystemExit("regions: the aware arm must not buy its "
+                             "latency win (realized cost above blind)")
+        if not res["all_completed"]:
+            raise SystemExit("regions: submitted work was lost")
     elif args.learned:
         res = run_learned_policy(smoke=args.smoke)
         with open(args.out or "BENCH_learned_policy.json", "w") as f:

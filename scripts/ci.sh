@@ -24,8 +24,14 @@
 # (profile-aware planner + laned admission + scripted spot preemptions vs
 # a blind flat fleet; bars: interactive tw-p95 inside the SLO under
 # preemptions, every submitted request completes, aware spend below blind —
-# BENCH_tiers.json) — perf-trajectory artifacts the workflow
-# uploads — then the closed-loop serving smoke.  Mirrors .github/workflows/ci.yml so the same command
+# BENCH_tiers.json), the multi-region geo ablation (replicas striped
+# across two regions with the plan's RTT matrix injected as virtual-clock
+# delay and the spot leg priced by the seeded market; bars: region-aware
+# beats region-blind on interactive traffic-weighted p95 at no higher
+# realized cost, every request completes — BENCH_regions.json), and the
+# sim-side five-region sweep (util gain + cost reduction must hold in
+# every region — BENCH_multi_region.json) — perf-trajectory artifacts the
+# workflow uploads — then the closed-loop serving smoke.  Mirrors .github/workflows/ci.yml so the same command
 # works locally.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -44,4 +50,6 @@ python -m benchmarks.serving_latency --topology pod --smoke --out BENCH_serving_
 python -m benchmarks.serving_latency --pool paged --smoke --out BENCH_paged.json
 python -m benchmarks.serving_latency --learned --smoke --out BENCH_learned_policy.json
 python -m benchmarks.serving_latency --tiers --smoke --out BENCH_tiers.json
+python -m benchmarks.serving_latency --regions --smoke --out BENCH_regions.json
+python -m benchmarks.multi_region --smoke --out BENCH_multi_region.json
 python examples/serve_autoscale.py --smoke

@@ -13,14 +13,23 @@ RESOURCE_KEYS = ("flop_util", "hbm_util", "ici_util", "mem_frac",
                  "queue_depth", "replicas_frac",
                  # paged-pool cache efficiency (0 on dense fleets): shared-
                  # prefix admissions and the prompt tokens they saved
-                 "prefix_hits", "tokens_shared")
+                 "prefix_hits", "tokens_shared",
+                 # capacity volatility: spot replicas reclaimed this tick
+                 # (the collector's fleet event channel; 0 on homogeneous
+                 # fleets) — the model sees supply disappearing, not just
+                 # the latency it causes
+                 "preemptions")
 PERF_KEYS = ("latency_p50", "latency_p95", "throughput", "error_rate",
              "rps",
              # speculative-decode acceptance this window (0 with spec off)
              "accept_rate",
              # per-tier SLO pressure (0 on single-tier fleets): the DNN
              # sees interactive-lane risk separately from batch queueing
-             "latency_p95_interactive", "latency_p95_batch")
+             "latency_p95_interactive", "latency_p95_batch",
+             # placement pressure this tick (fleet event channels, 0 when
+             # unprofiled/region-less): interactive work forced onto
+             # volatile capacity, and forced out of its origin region
+             "tier_spills", "region_spills")
 
 
 class RunningNorm:

@@ -25,13 +25,16 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.dnn.features import PERF_KEYS, RESOURCE_KEYS
 from repro.nn import MLP, BatchNorm, Conv1D, GRU, Linear
 
 
 @dataclasses.dataclass(frozen=True)
 class DNNConfig:
-    n_resource_features: int = 8    # must equal len(features.RESOURCE_KEYS)
-    n_perf_features: int = 8        # must equal len(features.PERF_KEYS)
+    # stream widths default to the feature registry — adding a channel to
+    # features.py widens every freshly-built model with it
+    n_resource_features: int = len(RESOURCE_KEYS)
+    n_perf_features: int = len(PERF_KEYS)
     n_deploy_features: int = 12
     window: int = 32              # T: sliding-window length fed to the nets
     conv_channels: int = 32

@@ -42,6 +42,13 @@ class ReplicaReport:
     lat_tiers: dict | None = None
 
 
+# router-level lifetime counters the collector turns into per-tick EVENT
+# channels (delta vs the previous aggregate): spot reclaims, interactive
+# work forced onto volatile capacity, interactive work forced out of its
+# region.  These ride the fleet record into the DNN feature streams.
+FLEET_EVENT_KEYS = ("preemptions", "tier_spills", "region_spills")
+
+
 class MetricsCollector:
     def __init__(self, *, window: int = 512, straggler_factor: float = 1.8,
                  max_staleness: int = 8):
@@ -60,6 +67,22 @@ class MetricsCollector:
         # folded into an aggregate — each event is counted exactly once,
         # even when a report lands an aggregate tick late
         self._consumed: dict[int, int] = {}
+        # fleet-level lifetime counters (observe_fleet) and the totals
+        # already folded into an aggregate — same exactly-once contract as
+        # the per-replica event watermark, but for router-side counters
+        # that no single replica can report
+        self._fleet_totals: dict[str, float] = {}
+        self._fleet_consumed: dict[str, float] = {}
+
+    def observe_fleet(self, counters: dict):
+        """Publish router-level LIFETIME counters (monotonic totals —
+        preemptions, tier_spills, region_spills).  The next ``aggregate``
+        emits each as a per-tick event count: total minus what previous
+        aggregates already consumed, never re-counting and never negative
+        (a counter reset after a router swap just re-bases)."""
+        for k in FLEET_EVENT_KEYS:
+            if k in counters:
+                self._fleet_totals[k] = float(counters[k])
 
     def submit(self, report: ReplicaReport):
         buf = self.reports[report.replica_id]
@@ -169,6 +192,13 @@ class MetricsCollector:
             "replicas_frac": n_replicas / max(max_replicas, 1),
             **{k: float(np.mean(v)) if v else 0.0 for k, v in util.items()},
         }
+        # fleet-level event channels: per-tick deltas of the router's
+        # lifetime counters (0.0 when observe_fleet was never called — old
+        # traces and bare-collector tests read flat zeros)
+        for k in FLEET_EVENT_KEYS:
+            total = self._fleet_totals.get(k, 0.0)
+            rec[k] = max(total - self._fleet_consumed.get(k, 0.0), 0.0)
+            self._fleet_consumed[k] = total
         self.fleet_records.append(rec)
         if len(self.fleet_records) > 4 * self.window:
             del self.fleet_records[:-2 * self.window]

@@ -25,15 +25,20 @@ Layout:
   fleet.py      — launch_fleet / launch_pod: local listening workers and
                   multi-process pods for demos/CI
   chaos.py      — fault-injection harness (FaultyConnection, ChaosProxy)
-                  pinning that faults surface typed, never as hangs
-  profiles.py   — ReplicaProfile / FleetPlan: heterogeneous capacity
-                  (cost per tick, relative speed, preemptible) and the
-                  profile-aware planner's marginal-cost model
+                  pinning that faults surface typed, never as hangs, plus
+                  DelayedReplica: deterministic virtual-clock transport
+                  RTT in front of any replica (the inter-region latency
+                  injection shim)
+  profiles.py   — ReplicaProfile / FleetPlan / SpotMarket: heterogeneous
+                  capacity (cost per tick, relative speed, preemptible,
+                  region + RTT matrix) and the profile-aware planner's
+                  marginal-cost model, spot-priced per tick by a seeded
+                  mean-reverting market process
   router.py     — N replicas behind the protocol: least-loaded routing
-                  (speed/cost-normalized when profiled, tier placement),
-                  scale up/down mid-run (evacuate + requeue), straggler
-                  eviction + preemption absorption, ReplicaReport stream
-                  for core/monitoring
+                  (speed/cost-normalized when profiled, tier + in-region
+                  placement), scale up/down mid-run (evacuate + requeue),
+                  straggler eviction + preemption absorption,
+                  ReplicaReport stream for core/monitoring
   workload.py   — synthetic request generation (shares sim.WorkloadSpec)
   closed_loop.py— the full control loop (router + collector + allocator),
                   shared by examples/serve_autoscale.py and the serving
@@ -60,7 +65,8 @@ from repro.serving.replica import (
     SocketReplica,
     TcpReplica,
 )
-from repro.serving.profiles import FleetPlan, ReplicaProfile
+from repro.serving.chaos import DelayedReplica
+from repro.serving.profiles import FleetPlan, ReplicaProfile, SpotMarket
 from repro.serving.router import ReplicaRouter, TOPOLOGIES
 from repro.serving.sampling import SamplingParams, sample_token
 from repro.serving.scheduler import FCFSScheduler, Request, TIERS
@@ -90,7 +96,7 @@ __all__ = [
     "dial", "parse_addr",
     "SamplingParams", "sample_token",
     "FCFSScheduler", "Request", "TIERS",
-    "FleetPlan", "ReplicaProfile",
+    "FleetPlan", "ReplicaProfile", "SpotMarket", "DelayedReplica",
     "SlotPool", "PagedSlotPool", "make_pool", "paged_cache_spec",
     "write_slot",
     "poisson_arrival_times", "shared_prefix_requests", "synthetic_requests",

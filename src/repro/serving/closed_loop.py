@@ -77,6 +77,20 @@ class LoopConfig:
     cost_preemptible: float = 0.35  # cost/tick of a spot replica
     rps_window: int = 8          # ticks of rps history published to the
     #                              scaler's burstiness analysis
+    regions: tuple = ()          # region per replica id, cycled (FleetPlan
+    #                              geography); () keeps the fleet
+    #                              region-less and the run bit-identical
+    #                              to the pre-region loop
+    home_region: str = ""        # traffic origin: every arrival is tagged
+    #                              with it (and the RTT matrix is measured
+    #                              from it); "" = regions[0] when regioned
+    region_aware: bool = True    # False routes region-BLIND while keeping
+    #                              the injected RTT — the geo ablation's
+    #                              control arm
+    spot_market: bool = False    # price spot capacity by a seeded
+    #                              SpotMarket process (mean-reverting walk
+    #                              around cost_preemptible with spikes)
+    #                              instead of a constant
 
 
 @dataclasses.dataclass
@@ -103,6 +117,7 @@ class TickLog:
     #                             scaling window (SLO protection)
     cost_per_tick: float = 0.0   # realized fleet spend for the window
     preemptions: int = 0         # lifetime spot reclaims absorbed so far
+    region_spills: int = 0       # lifetime interactive cross-region routes
 
 
 def default_profile(tick: int, ticks: int, lc: LoopConfig) -> float:
@@ -137,17 +152,25 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
     offline-trained policies use to warm-start the live allocator."""
     plan = None
     if lc.reserved_replicas > 0:
-        from repro.serving.profiles import FleetPlan
+        from repro.serving.profiles import FleetPlan, SpotMarket
+        market = (SpotMarket(seed=seed, base=lc.cost_preemptible)
+                  if lc.spot_market else None)
         plan = FleetPlan(reserved=lc.reserved_replicas,
                          cost_on_demand=lc.cost_on_demand,
-                         cost_preemptible=lc.cost_preemptible)
+                         cost_preemptible=lc.cost_preemptible,
+                         regions=tuple(lc.regions),
+                         home_region=lc.home_region, market=market)
     router = ReplicaRouter.from_topology(
         cfg, lc.topology, slots=lc.slots, max_seq=lc.max_seq, seed=seed,
         prefill_chunk=lc.prefill_chunk, n_replicas=1,
         max_replicas=lc.max_replicas, addrs=list(lc.addrs),
         pod_size=lc.pod_size, batch_submits=lc.batch_submits,
         pool=lc.pool, block_size=lc.block_size, num_blocks=lc.num_blocks,
-        spec_k=lc.spec_k, spec_ngram=lc.spec_ngram, profile_fn=plan)
+        spec_k=lc.spec_k, spec_ngram=lc.spec_ngram, profile_fn=plan,
+        region_aware=lc.region_aware)
+    # the region arrivals originate from: tagged onto every request below
+    # so the router can prefer in-region capacity
+    origin = plan.origin if plan is not None else lc.home_region
     rng = np.random.default_rng(seed)
     evictor = (EvictionPolicy(k_windows=lc.evict_after)
                if lc.evict_after > 0 else None)
@@ -210,6 +233,9 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             reqs = synthetic_requests(spec, n, cfg.vocab, rng=rng,
                                       base_rid=next_rid)
             next_rid += n
+            if origin:
+                for r in reqs:
+                    r.region = origin
             if lc.batch_frac > 0.0:
                 # tier draw only when the workload is actually mixed: a
                 # single-tier run must consume the same rng stream as a
@@ -250,6 +276,14 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     evictor.update(collector.stragglers(),
                                    router.replica_count), now=now)
             replicas_before = router.replica_count
+            # fleet-level lifetime counters land BEFORE the aggregate so
+            # this tick's record carries this tick's events (spot reclaims
+            # from the chaos hook / reap above, placement spills from the
+            # submits) as per-tick channels the DNN streams can consume
+            collector.observe_fleet({
+                "preemptions": router.preemptions,
+                "tier_spills": router.tier_spills,
+                "region_spills": router.region_spills})
             rec = collector.aggregate(tick, n_replicas=router.replica_count,
                                       max_replicas=lc.max_replicas)
             rec["evictions"] = float(len(evicted))   # visible to the DNN/selector
@@ -264,10 +298,20 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
             learn_loss = None
             # realized spend for the window that produced these metrics: the
             # fleet that served it — profile rates when heterogeneous, the
-            # flat constraints price otherwise
-            cost_per_tick = (router.cost_per_tick if plan is not None
-                             else replicas_before
-                             * alloc.constraints.cost_per_replica)
+            # flat constraints price otherwise.  Under a spot MARKET the
+            # spot legs are billed at this tick's price, and the optimizer's
+            # cost model is re-pointed at the same tick so the planner buys
+            # (or stops buying) spot at what it actually costs right now
+            if plan is not None and plan.market is not None:
+                cost_per_tick = sum(plan.price_of(r.replica_id, tick)
+                                    for r in router.serving_replicas)
+                alloc.scaler.optimizer.cost_fn = (
+                    lambda m, _t=tick: plan.cost_of(m, _t))
+            elif plan is not None:
+                cost_per_tick = router.cost_per_tick
+            else:
+                cost_per_tick = (replicas_before
+                                 * alloc.constraints.cost_per_replica)
             gated = router.batch_gated
             if lc.batch_frac > 0.0:
                 # interactive SLO protection runs even without autoscaling:
@@ -299,10 +343,17 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     "cost_per_tick": float(cost_per_tick),
                     "anomaly": float(bool(anomalies)),
                     # heterogeneous-fleet economics this tick (flat-fleet
-                    # runs read cost at the constraints price, zero churn)
+                    # runs read cost at the constraints price, zero churn).
+                    # The per-tick EVENT channels (preemptions/tier_spills/
+                    # region_spills) are already in ``rec`` via the
+                    # collector's fleet fold; the *_total keys keep the
+                    # lifetime counters visible for run-level accounting
                     "fleet_cost_per_tick": float(fleet["fleet_cost_per_tick"]),
-                    "preemptions": float(fleet["preemptions"]),
-                    "tier_spills": float(fleet["tier_spills"]),
+                    "spot_price": float(plan.spot_price(tick)
+                                        if plan is not None else 0.0),
+                    "preemptions_total": float(fleet["preemptions"]),
+                    "tier_spills_total": float(fleet["tier_spills"]),
+                    "region_spills_total": float(fleet["region_spills"]),
                     "batch_gated": float(gated),
                     # paged-pool cache efficiency, fleet-wide (0 for dense)
                     "prefix_hits": float(fleet["prefix_hits"]),
@@ -330,7 +381,8 @@ def run_closed_loop(cfg, *, autoscale: bool = True, ticks: int = 14,
                     anomalies), evicted=evicted, observed=observed,
                 learn_loss=learn_loss, batch_gated=gated,
                 cost_per_tick=float(cost_per_tick),
-                preemptions=router.preemptions))
+                preemptions=router.preemptions,
+                region_spills=router.region_spills))
     except BaseException:
         # the caller never receives the router handle it is documented to
         # close — reap the fleet (spawned workers/pods included) here

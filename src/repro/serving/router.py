@@ -38,6 +38,14 @@ stop being interchangeable —
   enough rounds) and tie-breaks toward cheaper capacity;
 * interactive-tier requests are never placed on ``preemptible`` replicas
   while any stable one serves (``tier_spills`` counts forced fallbacks);
+* on a region-tagged fleet (profiles carry ``region``), interactive
+  requests prefer capacity in their OWN region — stability still trumps
+  locality, so the in-region preference filters the stable set — and
+  ``region_spills`` counts interactive placements forced cross-region.
+  When the plan carries an RTT matrix (``transport_ms_for``), each new
+  replica is built behind a ``chaos.DelayedReplica`` shim injecting that
+  RTT on the virtual clock, so cross-region placement costs real measured
+  latency on every topology without a wall-clock sleep;
 * a failed preemptible replica is NOT replaced on reap (``preempt()`` is
   the chaos/provider-reclaim injection point) — batch absorbs the churn and
   the scaler re-provisions when the forecast still wants the capacity;
@@ -46,13 +54,16 @@ stop being interchangeable —
   capacity before reserved.
 
 Without a profile_fn every profile is the default (equal speed/cost, not
-preemptible) and routing is bit-identical to the legacy least-loaded key.
+preemptible) and routing is bit-identical to the legacy least-loaded key;
+a profiled fleet whose profiles carry no regions routes bit-identically to
+the pre-region profiled key (no delay shims, no spill counting).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.monitoring.collector import ReplicaReport
+from repro.serving.chaos import DelayedReplica
 from repro.serving.engine import EngineCore
 from repro.serving.profiles import ReplicaProfile
 from repro.serving.replica import (
@@ -101,17 +112,29 @@ def _coerce(obj) -> Replica:
 
 class ReplicaRouter:
     def __init__(self, replica_factory, *, n_replicas: int = 1,
-                 max_replicas: int = 8, profile_fn=None):
+                 max_replicas: int = 8, profile_fn=None,
+                 region_aware: bool = True, delay_fn=None):
         """replica_factory(replica_id) -> Replica (or a bare ServingEngine,
         which is wrapped in-process for backward compatibility).
 
         ``profile_fn(replica_id) -> ReplicaProfile`` declares the fleet
         heterogeneous (see module docstring); None keeps every replica
-        interchangeable and routing bit-identical to the legacy key."""
+        interchangeable and routing bit-identical to the legacy key.
+
+        ``delay_fn(replica_id) -> rtt_ms`` injects deterministic transport
+        latency (a DelayedReplica shim) in front of each new replica;
+        defaults to the profile_fn's ``transport_ms_for`` when it has one
+        (a FleetPlan with regions), so geography and its latency arrive
+        together.  ``region_aware=False`` keeps the injected latency but
+        routes region-BLIND — the control arm of the geo ablation."""
         self._factory = replica_factory
         self.max_replicas = max_replicas
         self._profile_fn = profile_fn
         self._profiled = profile_fn is not None
+        self._region_aware = bool(region_aware)
+        if delay_fn is None and hasattr(profile_fn, "transport_ms_for"):
+            delay_fn = profile_fn.transport_ms_for
+        self._delay_fn = delay_fn
         self._profiles: dict[int, ReplicaProfile] = {}
         # router-side speed measurement: completions and served rounds per
         # replica id (transport-free — no lifetime RPC on the hot path)
@@ -119,6 +142,7 @@ class ReplicaRouter:
         self._ticks_served: dict[int, int] = {}
         self.preemptions = 0          # preemptible replicas lost/reclaimed
         self.tier_spills = 0          # interactive forced onto volatile cap
+        self.region_spills = 0        # interactive forced out of its region
         self._batch_gated = False
         self.replicas: list[Replica] = []
         self._parked: list[Replica] = []
@@ -155,7 +179,8 @@ class ReplicaRouter:
                       block_size: int | None = None,
                       num_blocks: int | None = None, spec_k: int = 0,
                       spec_ngram: int = 3,
-                      profile_fn=None) -> "ReplicaRouter":
+                      profile_fn=None, region_aware: bool = True,
+                      delay_fn=None) -> "ReplicaRouter":
         """Build the fleet for one of the five replica topologies.
 
         inproc  — replicas share one EngineCore (no re-init / re-jit).
@@ -195,7 +220,9 @@ class ReplicaRouter:
         ``profile_fn(replica_id) -> ReplicaProfile`` (e.g. a
         serving/profiles.py FleetPlan) declares the fleet heterogeneous —
         cost/speed-aware routing, tier placement, preemptible semantics;
-        see the module docstring.
+        see the module docstring.  ``region_aware``/``delay_fn`` control
+        the geographic axis (in-region preference and injected RTT; see
+        ``__init__``).
         """
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r} "
@@ -254,7 +281,8 @@ class ReplicaRouter:
                     replica_id=replica_id, **pool_kw)
 
         return cls(factory, n_replicas=n_replicas, max_replicas=max_replicas,
-                   profile_fn=profile_fn)
+                   profile_fn=profile_fn, region_aware=region_aware,
+                   delay_fn=delay_fn)
 
     # ------------------------------------------------------------- topology
 
@@ -265,6 +293,13 @@ class ReplicaRouter:
         else:
             rep = _coerce(self._factory(self._next_replica_id))
             self._next_replica_id += 1
+            # geography: a replica whose region costs an RTT from the
+            # router's vantage point comes up behind the delay shim —
+            # parked replicas re-enter already wrapped
+            delay = (float(self._delay_fn(rep.replica_id))
+                     if self._delay_fn is not None else 0.0)
+            if delay > 0.0:
+                rep = DelayedReplica(rep, rtt_ms=delay)
         rid = rep.replica_id
         if rid not in self._profiles:
             self._profiles[rid] = (self._profile_fn(rid) if self._profiled
@@ -408,6 +443,27 @@ class ReplicaRouter:
                         candidates = stable
                     else:
                         self.tier_spills += 1
+                    # geography: prefer in-region capacity — AFTER the
+                    # stable filter, because SLO protection trumps
+                    # locality (an in-region spot replica must not steal
+                    # interactive work from a remote stable one) — and
+                    # only while the in-region replicas have headroom
+                    # (load < 1): pinning into a saturated region would
+                    # trade one RTT for unbounded queueing.  Only a
+                    # region-TAGGED candidate set engages the preference:
+                    # region-less fleets and untagged requests skip it,
+                    # keeping their placement bit-identical to the
+                    # pre-region key
+                    req_region = getattr(request, "region", "")
+                    if req_region and self._region_aware:
+                        local = [r for r in candidates
+                                 if self.profile(r.replica_id).region
+                                 == req_region and r.load < 1.0]
+                        if local:
+                            candidates = local
+                        elif any(self.profile(r.replica_id).region
+                                 for r in candidates):
+                            self.region_spills += 1
                 # least NORMALIZED load: a 2× replica at load 0.8 is as
                 # admittable as a baseline one at 0.4; ties go to cheaper
                 # capacity, so batch headroom lands on spot replicas
@@ -593,6 +649,9 @@ class ReplicaRouter:
             "fleet_cost_per_tick": self.cost_per_tick,
             "preemptions": self.preemptions,
             "tier_spills": self.tier_spills,
+            # interactive placements forced out of their origin region (0
+            # on region-less fleets and under region-blind routing)
+            "region_spills": self.region_spills,
             "batch_gated": self._batch_gated,
             # paged-pool cache efficiency, fleet-wide — engines only report
             # these when running a paged KV pool, so dense fleets read 0

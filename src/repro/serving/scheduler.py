@@ -47,6 +47,10 @@ class Request:
     # admission lane (TIERS): interactive requests admit ahead of batch
     # ones and are never routed onto preemptible capacity
     tier: str = "interactive"
+    # origin region ("" = untagged): on a region-tagged fleet the router
+    # prefers in-region capacity for interactive requests; untagged
+    # requests (and region-less fleets) route on the legacy key
+    region: str = ""
     # default_factory, NOT a shared class-level instance: safe today only
     # because SamplingParams is frozen, but a future mutable field would
     # silently couple every request in the fleet through one object

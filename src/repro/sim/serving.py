@@ -85,6 +85,11 @@ def mmc_wait_s(lam: float, mu: float, c: int) -> float:
     """Erlang-C mean wait.  lam: arrivals/s, mu: per-server rate, c servers."""
     if c <= 0 or mu <= 0:
         return float("inf")
+    if lam <= 0.0:
+        # an empty system has no queue — and the large-c normal
+        # approximation below divides by sqrt(a)=0 (a diurnal trough in a
+        # big region used to crash the multi-region benchmark here)
+        return 0.0
     rho = lam / (c * mu)
     if rho >= 1.0:
         return float("inf")

@@ -122,3 +122,102 @@ def test_chaos_soak_mixed_fleet_exactly_once_and_counters_balance():
         assert len(collector.reports) <= router.replica_count + 1
     finally:
         router.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_preemption_storm_under_price_spike_exactly_once_and_drains():
+    """Seeded preemption storm on a geographic spot fleet: the market is
+    forced into an immediate spike (spike_prob=1), and every tick the spot
+    price exceeds the on-demand rate one preemptible replica is reclaimed
+    without notice — the provider pulling capacity exactly when it gets
+    expensive.  Invariants: every admitted request still completes exactly
+    once (rewind + requeue through the survivors), the router's lifetime
+    preemption counter equals the scripted reclaims, the reclaimed ids
+    reach the collector's per-tick ``preemptions`` channel via
+    observe_fleet, and after the storm the collector's footprint drains to
+    the surviving fleet."""
+    from repro.serving import InProcessReplica, ServingEngine
+    from repro.serving.engine import EngineCore
+    from repro.serving.profiles import FleetPlan, SpotMarket
+
+    core = EngineCore(CFG, MAX_SEQ, seed=0)
+
+    def factory(rid):
+        return InProcessReplica(ServingEngine(
+            CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4, core=core,
+            replica_id=rid))
+
+    market = SpotMarket(seed=11, spike_prob=1.0)     # storm from tick 1
+    plan = FleetPlan(reserved=1, regions=("na", "apac"), market=market)
+    router = ReplicaRouter(factory, n_replicas=4, max_replicas=4,
+                           profile_fn=plan)
+    collector = MetricsCollector()
+    rng = np.random.default_rng(7)
+    n_requests = 16
+    reqs = [Request(rid=i, prompt=rng.integers(
+                3, CFG.vocab, size=5).astype(np.int32), gen_len=GEN_LEN,
+                tier="batch" if i % 3 == 0 else "interactive")
+            for i in range(n_requests)]
+
+    done, reclaimed, spike_ticks = [], [], []
+    per_tick_preemptions = []
+    submitted, now, tick = 0, 0.0, 0
+    try:
+        while (len(done) < n_requests or submitted < n_requests) \
+                and tick < 120:
+            tick += 1
+            now += 1.0
+            for _ in range(2):
+                if submitted < n_requests:
+                    router.submit(reqs[submitted], now=now)
+                    submitted += 1
+            price = market.price(tick)
+            if price > plan.cost_on_demand:          # the reclaim trigger
+                spike_ticks.append(tick)
+                spots = [r for r in router.serving_replicas
+                         if plan(r.replica_id).preemptible]
+                if len(spots) > 1 or (spots and len(
+                        router.serving_replicas) > 1):
+                    victim = spots[-1].replica_id
+                    if router.preempt(victim, now=now):
+                        reclaimed.append(victim)
+            done.extend(router.step(now))
+            for rep in router.reports(tick):
+                collector.submit(rep)
+            router_m = router.metrics()
+            collector.observe_fleet({
+                "preemptions": router_m["preemptions"],
+                "tier_spills": router_m["tier_spills"],
+                "region_spills": router_m["region_spills"]})
+            rec = collector.aggregate(tick, n_replicas=router.replica_count,
+                                      max_replicas=4)
+            per_tick_preemptions.append(rec["preemptions"])
+
+        for _ in range(collector.max_staleness + 1):  # drain ticks
+            tick += 1
+            collector.aggregate(tick, n_replicas=router.replica_count,
+                                max_replicas=4)
+
+        # the storm actually happened and capacity was NOT replaced
+        assert spike_ticks and reclaimed
+        assert router.replica_count == 4 - len(reclaimed)
+
+        # exactly once, fully generated, across rewind + requeue
+        counts = Counter(r.rid for r in done)
+        assert sorted(counts) == list(range(n_requests))
+        assert all(c == 1 for c in counts.values()), counts
+        assert all(len(r.tokens_out) == GEN_LEN for r in done)
+
+        # lifetime counters balance, and the per-tick channel integrates
+        # back to the lifetime total (deltas, not stale repeats)
+        m = router.metrics()
+        assert m["completed"] == n_requests
+        assert m["preemptions"] == len(reclaimed)
+        assert sum(per_tick_preemptions) == len(reclaimed)
+
+        # collector footprint drained to the survivors
+        assert not set(reclaimed) & set(collector.reports)
+        assert len(collector.reports) <= router.replica_count + 1
+    finally:
+        router.close()

@@ -1,0 +1,47 @@
+"""The sim-side multi-region benchmark (paper §4.1.2), now a CI smoke.
+
+Regression (verified failing on the pre-fix src): ``mmc_wait_s`` large-c
+normal approximation divided by ``sqrt(a)`` with ``a = lam/mu = 0`` — a
+diurnal trough in a high-demand region (zero arrivals against a ≥120-slot
+candidate fleet) crashed the whole benchmark with ZeroDivisionError, which
+is why it sat dormant out of CI.  An empty system has no queue: lam == 0
+returns 0 wait.
+
+The schema test pins the per-region output contract the CI artifact
+(BENCH_multi_region.json) and any downstream reader rely on.
+"""
+import math
+
+from repro.sim.serving import mmc_wait_s
+from repro.sim.workload import REGIONS
+
+PER_REGION_KEYS = {"util_gain_rel", "cost_reduction", "latency_reduction",
+                   "util_traditional", "util_dnn"}
+
+
+def test_mmc_wait_zero_arrivals_is_zero_even_for_large_fleets():
+    # the large-c (>=120) normal-approximation branch used to divide by
+    # sqrt(lam/mu) = 0 here
+    assert mmc_wait_s(0.0, 1.0, 150) == 0.0
+    assert mmc_wait_s(0.0, 1.0, 2) == 0.0
+    # and the guards around it still hold
+    assert mmc_wait_s(1.0, 0.0, 2) == float("inf")
+    assert mmc_wait_s(5.0, 1.0, 2) == float("inf")       # rho >= 1
+    assert math.isfinite(mmc_wait_s(1.0, 1.0, 150))
+
+
+def test_multi_region_benchmark_schema():
+    from benchmarks.multi_region import run
+
+    r = run(n_ticks=24)                                  # sub-second scale
+    assert r["name"] == "multi_region"
+    assert r["us_per_call"] > 0.0
+    assert isinstance(r["derived"], str) and "regions" in r["derived"]
+    per_region = r["detail"]["per_region"]
+    assert set(per_region) == set(REGIONS)               # all five, no more
+    for region, v in per_region.items():
+        assert set(v) == PER_REGION_KEYS, region
+        assert all(isinstance(x, float) for x in v.values()), region
+        assert 0.0 <= v["util_traditional"] <= 1.0
+        assert 0.0 <= v["util_dnn"] <= 1.0
+    assert isinstance(r["detail"]["all_improve"], bool)

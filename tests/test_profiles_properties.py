@@ -1,0 +1,139 @@
+"""Property suites for the fleet's economics and the priority-lane queue.
+
+Hypothesis-driven invariants (skipped where hypothesis isn't installed —
+CI's requirements-dev.txt has it):
+
+* ``FleetPlan.cost_of`` is monotone non-decreasing in fleet size, prices
+  every replica past the reserved pool at exactly the (possibly market)
+  spot rate, and decomposes as the sum of ``price_of`` over ids — the
+  profile the router sees and the cost the optimizer minimizes can never
+  disagree about what a replica costs.
+* ``SpotMarket`` prices are always >= floor (positive), deterministic in
+  (seed, tick), and independent of query order — two planners reading the
+  same market in different orders see the same path.
+* ``FCFSScheduler`` is first-come-first-served WITHIN each lane under any
+  interleaving of submits/pops, never admits batch work while gated, and
+  ``pop``/``peek`` always agree on the head.
+"""
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.serving.profiles import FleetPlan, SpotMarket  # noqa: E402
+from repro.serving.scheduler import (  # noqa: E402
+    FCFSScheduler, Request, TIERS,
+)
+
+REGION_POOLS = [(), ("na",), ("na", "apac"), ("eu", "sa", "au")]
+
+plans = st.builds(
+    FleetPlan,
+    reserved=st.integers(0, 5),
+    cost_on_demand=st.floats(0.1, 10.0, allow_nan=False),
+    cost_preemptible=st.floats(0.01, 5.0, allow_nan=False),
+    regions=st.sampled_from(REGION_POOLS),
+    market=st.one_of(st.none(),
+                     st.builds(SpotMarket, seed=st.integers(0, 99))),
+)
+
+
+@given(plan=plans, n=st.integers(0, 12),
+       tick=st.one_of(st.none(), st.integers(0, 60)))
+@settings(max_examples=80, deadline=None)
+def test_cost_of_monotone_and_marginal_priced_at_spot(plan, n, tick):
+    assert plan.cost_of(n, tick) <= plan.cost_of(n + 1, tick)
+    # the marginal replica past the reserved pool costs exactly the spot
+    # rate at that tick; inside the pool, exactly the on-demand rate
+    marginal = plan.cost_of(n + 1, tick) - plan.cost_of(n, tick)
+    expected = (plan.cost_on_demand if n < plan.reserved
+                else plan.spot_price(tick))
+    assert marginal == pytest.approx(expected)
+
+
+@given(plan=plans, n=st.integers(0, 12),
+       tick=st.one_of(st.none(), st.integers(0, 60)))
+@settings(max_examples=80, deadline=None)
+def test_cost_of_decomposes_as_price_of_and_matches_profiles(plan, n, tick):
+    assert plan.cost_of(n, tick) == pytest.approx(
+        sum(plan.price_of(i, tick) for i in range(n)))
+    for i in range(n):
+        prof = plan.profile_for(i)
+        # profile_for and price_of agree on which pool the id is in …
+        assert prof.preemptible == (i >= plan.reserved)
+        # … and the static profile rate is price_of at the catalog constant
+        if not prof.preemptible:
+            assert plan.price_of(i, tick) == prof.cost_per_tick
+        else:
+            assert plan.price_of(i, None) == prof.cost_per_tick
+        assert prof.region == plan.region_of(i)
+
+
+@given(seed=st.integers(0, 200), data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_spot_market_positive_and_seed_deterministic(seed, data):
+    a, b = SpotMarket(seed=seed), SpotMarket(seed=seed)
+    order = data.draw(st.permutations(list(range(30))))
+    shuffled = {t: b.price(t) for t in order}        # any query order …
+    for t in range(30):
+        p = a.price(t)                               # … vs sequential
+        assert p >= a.floor > 0.0
+        assert p == shuffled[t]
+
+
+@given(seed=st.integers(0, 50), ticks=st.integers(1, 40))
+@settings(max_examples=40, deadline=None)
+def test_spot_market_prices_is_the_price_path(seed, ticks):
+    m = SpotMarket(seed=seed)
+    assert m.prices(ticks) == [m.price(t) for t in range(ticks)]
+
+
+# -------------------------------------------------------- scheduler lanes
+
+
+def _req(rid: int, tier: str) -> Request:
+    return Request(rid=rid, prompt=np.array([3, 4, 5], np.int32),
+                   gen_len=2, tier=tier)
+
+
+ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("submit"), st.sampled_from(TIERS)),
+        st.tuples(st.just("pop"), st.none()),
+        st.tuples(st.just("gate"), st.booleans()),
+    ),
+    min_size=1, max_size=60)
+
+
+@given(ops=ops)
+@settings(max_examples=100, deadline=None)
+def test_scheduler_fifo_within_lane_and_gate_blocks_batch(ops):
+    sched = FCFSScheduler()
+    submitted = {t: [] for t in TIERS}               # per-lane submit order
+    popped = {t: [] for t in TIERS}
+    rid = 0
+    for op, arg in ops:
+        if op == "submit":
+            sched.submit(_req(rid, arg))
+            submitted[arg].append(rid)
+            rid += 1
+        elif op == "gate":
+            sched.batch_gated = arg
+        elif sched:                                  # pop iff admissible
+            head = sched.peek()
+            r = sched.pop()
+            assert r is head                         # pop/peek agree
+            assert not (sched.batch_gated and r.tier == "batch")
+            popped[r.tier].append(r.rid)
+    for t in TIERS:
+        # what left each lane is a prefix of what entered it, in order
+        assert popped[t] == submitted[t][:len(popped[t])]
+    # gated batch backlog is invisible to admission but still counted
+    sched.batch_gated = True
+    leftover_batch = sched.lane_depth("batch")
+    while sched:
+        assert sched.pop().tier != "batch"
+    assert sched.lane_depth("batch") == leftover_batch
+    assert sched.depth == leftover_batch

@@ -1,0 +1,398 @@
+"""Multi-region fleets under a spot-price market.
+
+The geographic axis, end to end: region-tagged ``ReplicaProfile``s, the
+``FleetPlan`` RTT matrix injected into the fabric as a deterministic
+virtual-clock ``DelayedReplica`` shim, region-aware interactive placement
+(``region_spills`` when forced cross-region), the seeded ``SpotMarket``
+pricing the spot leg of the planner's cost model per tick, and the fleet
+event counters (preemptions / tier_spills / region_spills) riding the
+collector → trace → DNN feature stream as real per-tick channels.
+
+Compatibility pins (each verified failing on the pre-region src where it
+guards new behavior): a region-less fleet routes bit-identically to the
+pre-region profiled key — no delay shims, no spill counting, identical
+placement sequence — and untagged requests skip the preference entirely.
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from repro.serving import ReplicaRouter, Request, ServingEngine
+from repro.serving.chaos import DelayedReplica
+from repro.serving.engine import EngineCore
+from repro.serving.profiles import (
+    DEFAULT_RTT_MS, FleetPlan, ReplicaProfile, SpotMarket, rtt_between,
+)
+
+from conftest import TINY_CFGS
+
+CFG = TINY_CFGS["dense"]
+MAX_SEQ = 24
+SLOTS = 2
+
+
+@functools.lru_cache(maxsize=None)
+def shared_core():
+    return EngineCore(CFG, MAX_SEQ, seed=0)
+
+
+def make_router(n_replicas=2, max_replicas=4, profile_fn=None, **kw):
+    core = shared_core()
+
+    def factory(replica_id):
+        return ServingEngine(CFG, slots=SLOTS, max_seq=MAX_SEQ,
+                             prefill_chunk=4, core=core,
+                             replica_id=replica_id)
+
+    if profile_fn is not None:
+        kw["profile_fn"] = profile_fn
+    return ReplicaRouter(factory, n_replicas=n_replicas,
+                         max_replicas=max_replicas, **kw)
+
+
+def req(rid, *, region="", tier="interactive", prompt_len=6, gen_len=3):
+    rng = np.random.default_rng(rid)
+    kw = {} if tier == "interactive" else {"tier": tier}
+    # region kwarg only when tagged, so the compatibility pins construct
+    # pre-region Requests (which predate the field) unchanged
+    if region:
+        kw["region"] = region
+    return Request(rid=rid,
+                   prompt=rng.integers(3, CFG.vocab,
+                                       size=prompt_len).astype(np.int32),
+                   gen_len=gen_len, **kw)
+
+
+# ------------------------------------------------------- profiles & market
+
+
+def test_rtt_between_symmetric_same_region_free():
+    assert rtt_between("na", "apac") == rtt_between("apac", "na") == 150.0
+    assert rtt_between("na", "na") == 0.0
+    assert rtt_between("", "apac") == rtt_between("na", "") == 0.0
+    assert rtt_between("na", "atlantis") == 0.0      # unknown region: free
+    assert rtt_between("na", "apac", {("apac", "na"): 42.0}) == 42.0
+
+
+def test_fleet_plan_stripes_regions_and_injects_rtt():
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    assert [plan.region_of(i) for i in range(4)] == \
+        ["na", "apac", "na", "apac"]
+    assert plan.origin == "na"                       # defaults to regions[0]
+    assert plan.transport_ms_for(0) == 0.0           # in-region: free
+    assert plan.transport_ms_for(1) == DEFAULT_RTT_MS[("na", "apac")]
+    assert plan.profile_for(1).region == "apac"
+    assert plan.profile_for(1).preemptible is False  # id 1 < reserved
+    assert plan.profile_for(2).preemptible is True
+    # home_region overrides the vantage point
+    far = dataclasses.replace(plan, home_region="eu")
+    assert far.origin == "eu"
+    assert far.transport_ms_for(0) == DEFAULT_RTT_MS[("na", "eu")]
+    # region-less plan: no geography anywhere
+    flat = FleetPlan(reserved=2)
+    assert flat.origin == "" and flat.transport_ms_for(3) == 0.0
+    assert flat.profile_for(0).region == ""
+
+
+def test_spot_market_seed_deterministic_and_order_independent():
+    a, b = SpotMarket(seed=7), SpotMarket(seed=7)
+    fwd = [a.price(t) for t in range(40)]
+    rev = [b.price(t) for t in reversed(range(40))]
+    assert fwd == list(reversed(rev))                # cache, not query order
+    assert all(p >= SpotMarket().floor for p in fwd)
+    assert SpotMarket(seed=8).prices(40) != fwd      # the seed matters
+    assert a.price(0) == a.base                      # tick 0 is the base
+
+
+def test_spot_market_spike_lifts_price_above_on_demand():
+    # spike_prob=1 forces a spike immediately: the marginal spot replica
+    # briefly costs MORE than on-demand — what the planner must see
+    m = SpotMarket(seed=0, spike_prob=1.0)
+    plan = FleetPlan(reserved=1, market=m)
+    spiked = max(m.prices(8))
+    assert spiked >= m.base * m.spike_mult * 0.5
+    assert plan.spot_price(1) == m.price(1)
+    assert plan.spot_price(None) == plan.cost_preemptible   # no tick: flat
+
+
+def test_cost_of_prices_spot_leg_at_market_rate():
+    m = SpotMarket(seed=3)
+    plan = FleetPlan(reserved=2, cost_on_demand=1.0, market=m)
+    for tick in (0, 5, 17):
+        assert plan.cost_of(5, tick) == pytest.approx(
+            2 * 1.0 + 3 * m.price(tick))
+        # price_of decomposes cost_of exactly
+        assert plan.cost_of(5, tick) == pytest.approx(
+            sum(plan.price_of(i, tick) for i in range(5)))
+    # backward compatible: no tick (or no market) → the catalog constant
+    assert plan.cost_of(5) == pytest.approx(2 * 1.0 + 3 * 0.35)
+    assert FleetPlan(reserved=2).cost_of(5, 17) == pytest.approx(
+        2 * 1.0 + 3 * 0.35)
+
+
+# ----------------------------------------------------------- DelayedReplica
+
+
+def test_delayed_replica_holds_ingress_until_rtt_elapses():
+    from repro.serving import InProcessReplica
+
+    rep = InProcessReplica(ServingEngine(
+        CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+        core=shared_core(), replica_id=0))
+    shim = DelayedReplica(rep, rtt_ms=500.0)
+    shim.submit(req(0), now=0.0)
+    assert shim.pending == 1 and rep.pending == 0    # parked in ingress
+    assert shim.load > 0.0                           # routing sees the work
+    done = shim.step(0.2)                            # rtt not yet elapsed
+    assert done == [] and rep.pending == 0
+    done = shim.step(0.6)                            # 0.5s rtt has passed
+    assert rep.pending + len(done) >= 1              # delivered inward
+    now = 0.6
+    while not done and now < 30:
+        now += 1.0
+        done.extend(shim.step(now))
+    assert [r.rid for r in done] == [0]
+    # the completion's engine-side latency includes the full round trip
+    assert done[0].t_done - done[0].t_submit >= 0.5
+    assert shim.transport_ms == rep.transport_ms + 500.0
+    assert shim.report(0).transport_ms >= 500.0
+    shim.close()
+
+
+def test_delayed_replica_evacuates_ingress_exactly_once():
+    from repro.serving import InProcessReplica
+
+    rep = InProcessReplica(ServingEngine(
+        CFG, slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=4,
+        core=shared_core(), replica_id=0))
+    shim = DelayedReplica(rep, rtt_ms=1000.0)
+    shim.submit(req(0), now=0.0)
+    shim.submit(req(1), now=0.0)
+    assert shim.queue_depth == 2
+    out = shim.evacuate()
+    assert sorted(r.rid for r in out) == [0, 1]
+    assert shim.evacuate() == [] and shim.lost_requests() == []
+    assert shim.idle
+    shim.close()
+
+
+def test_router_shims_remote_replicas_only():
+    """from a FleetPlan with regions, the router builds every CROSS-region
+    replica behind a DelayedReplica carrying the matrix RTT; in-region
+    (and region-less) replicas stay bare."""
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    router = make_router(n_replicas=2, profile_fn=plan)
+    try:
+        by_id = {r.replica_id: r for r in router.replicas}
+        assert not isinstance(by_id[0], DelayedReplica)      # home region
+        assert isinstance(by_id[1], DelayedReplica)
+        assert by_id[1].rtt_ms == DEFAULT_RTT_MS[("na", "apac")]
+    finally:
+        router.close()
+    flat = make_router(n_replicas=2, profile_fn=FleetPlan(reserved=2))
+    try:
+        assert not any(isinstance(r, DelayedReplica) for r in flat.replicas)
+    finally:
+        flat.close()
+
+
+# ---------------------------------------------------------- region routing
+
+
+def test_region_aware_prefers_local_stable_replica():
+    """Blind least-load would alternate; aware keeps interactive in-region
+    while the local replica has headroom (load < 1)."""
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    router = make_router(n_replicas=2, profile_fn=plan)
+    try:
+        by_id = {r.replica_id: r for r in router.replicas}
+        router.submit(req(0, region="na"), now=0.0)
+        # replica 0 now busier than replica 1 — the legacy key would pick 1
+        router.submit(req(1, region="na"), now=0.0)
+        assert by_id[0].pending == 2 and by_id[1].pending == 0
+        assert router.region_spills == 0
+        assert router.metrics()["region_spills"] == 0
+    finally:
+        router.close()
+
+
+def test_region_spill_counted_when_local_region_saturated():
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    router = make_router(n_replicas=2, profile_fn=plan)
+    try:
+        by_id = {r.replica_id: r for r in router.replicas}
+        for i in range(SLOTS):                       # fill na to load 1.0
+            router.submit(req(i, region="na"), now=0.0)
+        assert by_id[0].load >= 1.0
+        router.submit(req(99, region="na"), now=0.0)
+        assert by_id[1].pending == 1                 # forced cross-region
+        assert router.region_spills == 1
+    finally:
+        router.close()
+
+
+def test_region_blind_router_keeps_injected_rtt_but_legacy_key():
+    """The ablation's control arm: region_aware=False still builds the
+    delay shims (latency stays injected) but routes on the pre-region
+    key — and counts no spills."""
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    router = make_router(n_replicas=2, profile_fn=plan, region_aware=False)
+    try:
+        by_id = {r.replica_id: r for r in router.replicas}
+        assert isinstance(by_id[1], DelayedReplica)  # rtt still injected
+        router.submit(req(0, region="na"), now=0.0)
+        router.submit(req(1, region="na"), now=0.0)
+        assert by_id[0].pending == 1 and by_id[1].pending == 1
+        assert router.region_spills == 0
+    finally:
+        router.close()
+
+
+def test_untagged_requests_route_on_legacy_key():
+    plan = FleetPlan(reserved=2, regions=("na", "apac"))
+    router = make_router(n_replicas=2, profile_fn=plan)
+    try:
+        by_id = {r.replica_id: r for r in router.replicas}
+        router.submit(req(0), now=0.0)               # no region tag
+        router.submit(req(1), now=0.0)
+        assert by_id[0].pending == 1 and by_id[1].pending == 1
+        assert router.region_spills == 0
+    finally:
+        router.close()
+
+
+def test_regionless_fleet_placement_bit_identical_to_legacy_key():
+    """COMPATIBILITY PIN: a profiled fleet whose plan carries no regions
+    places a tagged-request stream exactly like the pre-region profiled
+    key (same placements, no shims, no spills) — the region machinery is
+    provably inert until the operator buys geography."""
+    placements = {}
+    for name, plan in (("flat", FleetPlan(reserved=4)),
+                       ("geo-blind-tags", FleetPlan(reserved=4))):
+        router = make_router(n_replicas=3, profile_fn=plan)
+        try:
+            seq = []
+            for i in range(9):
+                region = "na" if name == "geo-blind-tags" else ""
+                router.submit(req(i, region=region), now=float(i) * 0.01)
+                seq.append(tuple(sorted(
+                    (r.replica_id, r.pending) for r in router.replicas)))
+            placements[name] = seq
+            assert router.region_spills == 0
+            assert not any(isinstance(r, DelayedReplica)
+                           for r in router.replicas)
+        finally:
+            router.close()
+    # tagging requests against a region-less plan changes NOTHING
+    assert placements["flat"] == placements["geo-blind-tags"]
+
+
+# ----------------------------------------- collector / features / traces
+
+
+def test_collector_fleet_channels_emit_per_tick_deltas():
+    from repro.core.monitoring.collector import (
+        FLEET_EVENT_KEYS, MetricsCollector,
+    )
+
+    assert FLEET_EVENT_KEYS == ("preemptions", "tier_spills",
+                                "region_spills")
+    c = MetricsCollector()
+    c.observe_fleet({"preemptions": 2, "tier_spills": 5,
+                     "region_spills": 1})
+    rec = c.aggregate(0, n_replicas=1, max_replicas=4)
+    assert (rec["preemptions"], rec["tier_spills"],
+            rec["region_spills"]) == (2.0, 5.0, 1.0)
+    # lifetime totals advance → the NEXT tick sees only the delta
+    c.observe_fleet({"preemptions": 2, "tier_spills": 9,
+                     "region_spills": 1})
+    rec = c.aggregate(1, n_replicas=1, max_replicas=4)
+    assert (rec["preemptions"], rec["tier_spills"],
+            rec["region_spills"]) == (0.0, 4.0, 0.0)
+    # no observe this tick → zero, never a stale repeat; and a counter
+    # that (impossibly) went backwards clamps at zero, not negative
+    c.observe_fleet({"tier_spills": 3})
+    rec = c.aggregate(2, n_replicas=1, max_replicas=4)
+    assert rec["tier_spills"] == 0.0 and rec["preemptions"] == 0.0
+
+
+def test_collector_without_observe_fleet_emits_zero_channels():
+    from repro.core.monitoring.collector import MetricsCollector
+
+    rec = MetricsCollector().aggregate(0, n_replicas=1, max_replicas=4)
+    for k in ("preemptions", "tier_spills", "region_spills"):
+        assert rec[k] == 0.0
+
+
+def test_feature_registry_carries_fleet_event_channels():
+    from repro.core.dnn.features import PERF_KEYS, RESOURCE_KEYS
+    from repro.core.dnn.model import DNNConfig
+
+    assert "preemptions" in RESOURCE_KEYS and len(RESOURCE_KEYS) == 9
+    assert "tier_spills" in PERF_KEYS and "region_spills" in PERF_KEYS
+    assert len(PERF_KEYS) == 10
+    # model widths derive from the registry — a fresh DNN is born with
+    # the new channels
+    cfg = DNNConfig()
+    assert cfg.n_resource_features == len(RESOURCE_KEYS)
+    assert cfg.n_perf_features == len(PERF_KEYS)
+
+
+def test_fleet_events_ride_collector_to_streams():
+    """The full path: router counters → observe_fleet → aggregate record →
+    StreamBuilder window, with the channel landing in the right column."""
+    from repro.core.dnn.features import (
+        PERF_KEYS, RESOURCE_KEYS, StreamBuilder,
+    )
+    from repro.core.monitoring.collector import MetricsCollector
+
+    c = MetricsCollector()
+    sb = StreamBuilder(window=4)
+    for tick, spills in enumerate((0, 3, 3, 7)):
+        c.observe_fleet({"preemptions": 1 if tick else 0,
+                         "tier_spills": 0, "region_spills": spills})
+        sb.push(c.aggregate(tick, n_replicas=1, max_replicas=4))
+    streams = sb.streams(np.zeros(12, np.float32))
+    assert streams["resource"].shape == (1, 4, len(RESOURCE_KEYS))
+    assert streams["perf"].shape == (1, 4, len(PERF_KEYS))
+    # un-normalized history holds the per-tick deltas in the right column
+    col = PERF_KEYS.index("region_spills")
+    assert [row[col] for row in sb.perf_hist] == [0.0, 3.0, 0.0, 4.0]
+    pcol = RESOURCE_KEYS.index("preemptions")
+    assert [row[pcol] for row in sb.res_hist] == [0.0, 1.0, 0.0, 0.0]
+
+
+# ------------------------------------------------------------- closed loop
+
+
+def test_closed_loop_regions_and_market_reach_the_recorder():
+    """A tiny regioned spot-market run: the spot price, the per-tick event
+    channels, and the lifetime totals all land in the trace records, the
+    TickLog carries region_spills, and the plan's market prices the
+    optimizer's cost model."""
+    from repro.core.dnn.traces import TraceRecorder
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                    steps_per_tick=6, reserved_replicas=1,
+                    regions=("na", "apac"), spot_market=True)
+    rec = TraceRecorder()
+    router, logs = run_closed_loop(CFG, autoscale=True, ticks=6, seed=0,
+                                   lc=lc, recorder=rec)
+    try:
+        m = SpotMarket(seed=0, base=lc.cost_preemptible)
+        assert [r["spot_price"] for r in rec.records] == \
+            pytest.approx([m.price(t) for t in range(6)])
+        for r in rec.records:
+            for k in ("preemptions", "tier_spills", "region_spills",
+                      "preemptions_total", "tier_spills_total",
+                      "region_spills_total"):
+                assert k in r
+        assert all(hasattr(t, "region_spills") for t in logs)
+        # per-tick deltas sum to the lifetime total the router reports
+        assert sum(r["region_spills"] for r in rec.records) == \
+            router.region_spills == rec.records[-1]["region_spills_total"]
+    finally:
+        router.close()

@@ -483,6 +483,47 @@ def test_closed_loop_identical_across_topologies():
 
 
 @pytest.mark.slow
+def test_closed_loop_identical_across_topologies_with_regions():
+    """The geographic extension of the cross-topology bar: a REGION-tagged
+    fleet — striped across two regions with the plan's RTT injected as
+    DelayedReplica shims — still produces identical token streams and
+    scaling decisions on inproc, proc, and tcp.  The injected latency
+    lives on the virtual clock, so it cannot tell the fabrics apart
+    either; and a region-less run on the same seed is unchanged by the
+    region machinery existing (its TickLog spill channel stays zero)."""
+    from repro.serving.closed_loop import LoopConfig, run_closed_loop
+
+    cfg = TINY_CFGS["dense"]
+    results = {}
+    for topology in ("inproc", "proc", "tcp"):
+        lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                        steps_per_tick=6, topology=topology,
+                        reserved_replicas=2, regions=("na", "apac"),
+                        spot_market=True)
+        sink = []
+        router, logs = run_closed_loop(cfg, autoscale=True, ticks=8, seed=0,
+                                       lc=lc, sink=sink)
+        results[topology] = {
+            "decisions": [(t.replicas, t.reason) for t in logs],
+            "served": [t.served for t in logs],
+            "spills": [t.region_spills for t in logs],
+            "streams": {r.rid: tuple(r.tokens_out) for r in sink},
+        }
+        router.close()
+    assert results["inproc"] == results["proc"] == results["tcp"]
+    assert results["inproc"]["streams"]          # the loop actually served
+
+    lc = LoopConfig(slots=2, max_replicas=2, max_seq=32, prefill_chunk=4,
+                    steps_per_tick=6)            # region-less control
+    sink = []
+    router, logs = run_closed_loop(cfg, autoscale=True, ticks=8, seed=0,
+                                   lc=lc, sink=sink)
+    router.close()
+    assert all(t.region_spills == 0 for t in logs)
+    assert {r.rid: tuple(r.tokens_out) for r in sink}
+
+
+@pytest.mark.slow
 def test_tcp_router_attaches_to_prestarted_fleet():
     """The cross-host shape: pods started by an external scheduler
     (launch_fleet stands in), a router that ATTACHES via addrs — requests
